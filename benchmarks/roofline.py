@@ -1,0 +1,165 @@
+"""Roofline aggregation: dry-run JSONs -> per-cell three-term table.
+
+    compute term    = HLO_FLOPs_per_device / 197e12   (bf16 peak / chip)
+    memory term     = HLO_bytes_per_device / 819e9    (HBM bw / chip)
+    collective term = wire_bytes_per_device / 50e9    (per-link ICI bw)
+
+HLO_* come from the structural analyzer (launch/hlo_analysis.py) over the
+compiled per-device module, with while-loop trip multiplication. MODEL_FLOPS
+is the analytic useful work (6*N_active*D for train, 2*N_active*D for
+prefill/decode forward, + exact attention terms); the ratio
+MODEL/HLO exposes remat + dispatch overhead.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+Emits a markdown table (stdout) consumed by EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape: dict) -> float:
+    """Analytic useful FLOPs for the cell (global, all chips)."""
+    from repro.configs.base import get_config
+    cfg = get_config(arch)
+    s, b = shape["seq_len"], shape["global_batch"]
+    kind = shape["kind"]
+    tokens = b * s if kind != "decode" else b   # decode: 1 new token/seq
+
+    # --- parameter-matmul flops: 2 * N_active per token (fwd) ---
+    d = cfg.d_model
+    n_active = 0.0
+    l = cfg.n_layers
+    if cfg.family in ("dense", "moe", "encdec", "hybrid"):
+        if cfg.mla:
+            nope, rph, vdim = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+            attn_p = (d * cfg.n_heads * (nope + rph) + d * (cfg.kv_lora + rph)
+                      + cfg.kv_lora * cfg.n_heads * (nope + vdim)
+                      + cfg.n_heads * vdim * d)
+        elif cfg.n_heads:
+            attn_p = d * cfg.n_heads * cfg.d_head * 2 \
+                + d * cfg.n_kv * cfg.d_head * 2
+        else:
+            attn_p = 0.0
+        if cfg.n_experts:
+            expert = 3 * d * cfg.d_ff_expert
+            ffn_p = (cfg.top_k * expert + cfg.n_shared * expert
+                     + d * cfg.n_experts / 1e6)  # gate negligible
+            dense_ffn = 3 * d * cfg.d_ff
+            n_active = (l - cfg.first_dense) * (attn_p + ffn_p) \
+                + cfg.first_dense * (attn_p + dense_ffn)
+        elif cfg.family == "hybrid":
+            from repro.models.transformer import hybrid_attn_sites
+            di = cfg.d_inner
+            g, n = cfg.n_groups, cfg.ssm_state
+            nh = di // cfg.ssm_headdim
+            mamba_p = d * (2 * di + 2 * g * n + nh) + di * d
+            shared_apps = len(hybrid_attn_sites(cfg))
+            attn_shared = attn_p + 3 * d * cfg.d_ff
+            n_active = l * mamba_p + shared_apps * attn_shared
+        else:
+            n_active = l * (attn_p + 3 * d * cfg.d_ff)
+        if cfg.family == "encdec":
+            # encoder runs over s/ratio tokens; fold into effective N*T
+            enc_p = cfg.encoder_layers * (attn_p + 3 * d * cfg.d_ff)
+            xattn_p = cfg.n_layers * (attn_p + d * d)
+            n_active += xattn_p
+            n_active += enc_p / cfg.enc_seq_ratio  # enc tokens are s/ratio
+    elif cfg.family == "ssm":
+        di = cfg.d_inner
+        n, dtr = cfg.ssm_state, max(d // 16, 1)
+        n_active = l * (d * 2 * di + di * (dtr + 2 * n) + dtr * di + di * d)
+
+    unembed = d * cfg.vocab_padded
+    fwd = 2.0 * (n_active + unembed) * tokens
+
+    # --- attention score/context flops (full attention) ---
+    if cfg.n_heads and cfg.family != "ssm":
+        h, dh = cfg.n_heads, (cfg.d_head or 0)
+        if cfg.mla:
+            dh = cfg.mla_nope_dim + cfg.mla_rope_dim
+        if kind == "decode":
+            kv_len = s
+            attn = 4.0 * b * h * kv_len * dh * l
+        else:
+            attn = 4.0 * b * h * (s * s / 2) * dh * l / 1.0
+        if cfg.family == "hybrid":
+            from repro.models.transformer import hybrid_attn_sites
+            attn = attn / l * len(hybrid_attn_sites(cfg))
+        if cfg.family == "encdec":
+            attn += 4.0 * b * h * (s // cfg.enc_seq_ratio) * dh * l * \
+                (1 if kind == "decode" else s)
+        fwd += attn
+    return 3.0 * fwd if kind == "train" else fwd
+
+
+def load_cells(d):
+    cells = []
+    for f in sorted(glob.glob(f"{d}/*.json")):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def row_for(r):
+    chips = CHIPS.get(r["mesh"], 256)
+    ha = r["hlo_analysis_per_device"]
+    flops_dev = ha["flops"]
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = ha["bytes_accessed"] / HBM_BW
+    t_x = ha["collectives"]["wire_bytes"] / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(r["arch"], r)
+    ratio = mf / (flops_dev * chips) if flops_dev else 0.0
+    mem = r.get("memory_analysis", {})
+    hbm = (mem.get("argument_size_in_bytes", 0) +
+           mem.get("temp_size_in_bytes", 0)) / 1e9
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom, "model_flops": mf,
+        "hlo_flops_global": flops_dev * chips, "useful_ratio": ratio,
+        "hbm_gb_per_dev": hbm,
+        "roofline_frac": (t_c / max(t_c, t_m, t_x)) if max(t_c, t_m, t_x) else 0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = []
+    print("| arch | shape | t_compute | t_memory | t_collective | dominant "
+          "| MODEL/HLO flops | HBM GB/dev | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in load_cells(args.dir):
+        if r["status"] == "skipped":
+            if r["mesh"].endswith(args.mesh) or args.mesh in r["mesh"]:
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | skipped: "
+                      f"{r['skip_reason'][:40]}… | — | — | — |")
+            continue
+        if r["status"] != "ok" or r["mesh"] != args.mesh:
+            continue
+        row = row_for(r)
+        rows.append(row)
+        print(f"| {row['arch']} | {row['shape']} | {row['t_compute_s']:.3f}s "
+              f"| {row['t_memory_s']:.3f}s | {row['t_collective_s']:.3f}s "
+              f"| **{row['dominant']}** | {row['useful_ratio']:.2f} "
+              f"| {row['hbm_gb_per_dev']:.1f} | {row['roofline_frac']:.2f} |")
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Benchmark driver: one module per paper table/figure (DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV rows; also usable per-figure:
+``python -m benchmarks.run --only fig12``."""
+
+import argparse
+import importlib
+import sys
+import time
+
+FIGS = ["fig5_membership", "fig7_insertion_scaling", "fig8_insertion_baselines",
+        "fig9_planners", "fig10_concurrency", "fig12_query_baselines",
+        "fig13_locality", "fig14_resilience"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter, e.g. fig12")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod_name in FIGS:
+        if args.only and args.only not in mod_name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        print(f"# --- {mod_name} ---", flush=True)
+        mod.run()
+    print(f"# total_wall_s={time.time() - t0:.0f}")
+
+
+if __name__ == "__main__":
+    main()

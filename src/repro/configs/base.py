@@ -1,0 +1,186 @@
+"""Model configuration + registry for the assigned architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"        # dense | moe | ssm | hybrid | encdec
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv: int = 4
+    d_head: int = 64
+    d_ff: int = 1024
+    vocab: int = 1024
+
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    mrope: bool = False
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)   # sums to d_head//2
+    attn_chunk_kv: int = 1024
+    tie_embeddings: bool = False
+    gather_kv: bool = False       # SP schedule: all-gather K/V per layer
+                                  # instead of chunk-slicing S-sharded KV
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    first_dense: int = 0          # leading dense-FFN layers (DeepSeek-V2: 1)
+    capacity_factor: float = 1.25
+    moe_dispatch: str = "einsum"  # einsum (GShard baseline) | scatter
+    aux_loss_weight: float = 0.01
+    expert_shard: bool = True     # EP over the model axis; False => TP over
+                                  # the expert FFN dim (n_experts < TP size)
+    moe_group_tokens: int = 0     # 0 = ungrouped dispatch (baseline); > 0 =
+                                  # GShard group dimension (see moe_apply)
+    moe_ff_fsdp: bool = False     # shard expert FFN dim over the data axis
+                                  # (2D expert sharding: weights stay pinned,
+                                  # activations reshard — no per-micro expert
+                                  # weight gathers)
+
+    # MLA
+    mla: bool = False
+    kv_lora: int = 0
+    mla_nope_dim: int = 128
+    mla_rope_dim: int = 64
+    mla_v_dim: int = 128
+
+    # SSM
+    ssm_state: int = 0
+    ssm_version: int = 1
+    d_conv: int = 4
+    expand: int = 2
+    n_groups: int = 1
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    ssm_scan: str = "associative"  # associative | sequential
+
+    # hybrid (zamba2): one shared attention block applied every attn_every
+    # mamba layers
+    attn_every: int = 0
+
+    # enc-dec
+    encoder_layers: int = 0
+    enc_seq_ratio: int = 4        # encoder frames = seq_len / ratio
+
+    # modality frontend stub: inputs are precomputed embeddings
+    embed_input: bool = False
+
+    # vocab padding: embeddings/unembeddings allocate the padded size so the
+    # vocab dim shards evenly; padded logits are masked (seamless: 256206).
+    vocab_pad_multiple: int = 256
+
+    # numerics / memory
+    param_dtype_str: str = "float32"
+    compute_dtype_str: str = "bfloat16"
+    remat: str = "full"           # full | dots | none
+    loss_chunk: int = 2048        # CE vocab-chunking (tokens per block)
+    scan_layers: bool = True
+    seq_shard_activations: bool = True  # P(batch, "model", None) at layer edges
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.param_dtype_str)
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.compute_dtype_str)
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def vocab_padded(self):
+        m = self.vocab_pad_multiple
+        return (self.vocab + m - 1) // m * m
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One dry-run cell: an input-shape regime (see prompt: 4 per arch)."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+    @property
+    def is_train(self):
+        return self.kind == "train"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig):
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        import importlib
+        mod = name.replace("-", "_").replace(".", "_")
+        importlib.import_module(f"repro.configs.{mod}")
+    return _REGISTRY[name]
+
+
+def list_configs():
+    # import all arch modules for a full listing
+    for mod in ARCH_MODULES:
+        import importlib
+        importlib.import_module(f"repro.configs.{mod}")
+    return dict(_REGISTRY)
+
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Shrink a full config to a CPU-runnable config of the same family:
+    same block structure and flags, tiny dims (smoke-test contract)."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 4), d_model=128, d_ff=256 if cfg.d_ff else 0,
+        vocab=512, loss_chunk=128, attn_chunk_kv=64, ssm_chunk=16,
+    )
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv=min(max(cfg.n_kv * 4 // cfg.n_heads, 1), 4),
+                  d_head=32)
+    if cfg.mrope:
+        kw.update(mrope_sections=(6, 5, 5))
+    if cfg.n_experts:
+        kw.update(n_experts=4, top_k=min(cfg.top_k, 2), d_ff_expert=64,
+                  n_shared=min(cfg.n_shared, 1))
+    if cfg.mla:
+        kw.update(kv_lora=32, mla_nope_dim=32, mla_rope_dim=16, mla_v_dim=32)
+    if cfg.ssm_state:
+        kw.update(ssm_state=8, ssm_headdim=16)
+    if cfg.encoder_layers:
+        kw.update(encoder_layers=min(cfg.encoder_layers, 3))
+    if cfg.attn_every:
+        kw.update(attn_every=2)
+    return cfg.replace(name=cfg.name + "-smoke", **kw)
+
+
+ARCH_MODULES = [
+    "internlm2_1_8b", "qwen3_14b", "deepseek_7b", "stablelm_12b",
+    "grok_1_314b", "deepseek_v2_236b", "seamless_m4t_large_v2",
+    "zamba2_1_2b", "qwen2_vl_72b", "falcon_mamba_7b",
+]

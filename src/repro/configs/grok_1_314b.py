@@ -1,0 +1,13 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2 [hf:xai-org/grok-1; unverified]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv=8, d_head=128,
+    d_ff=32768, vocab=131072,
+    n_experts=8, top_k=2, d_ff_expert=32768,
+    # 8 experts < 16-way model axis: shard the expert FFN dim (TP) instead
+    # of the expert dim (EP).
+    expert_shard=False,
+))

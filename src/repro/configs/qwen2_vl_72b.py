@@ -1,0 +1,12 @@
+"""qwen2-vl-72b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 — M-RoPE, dynamic resolution [arXiv:2409.12191; hf]. Vision
+frontend is a STUB: input_specs() provides precomputed patch embeddings;
+the backbone applies M-RoPE over (t, h, w) position streams."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-vl-72b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv=8, d_head=128,
+    d_ff=29568, vocab=152064,
+    mrope=True, mrope_sections=(16, 24, 24), embed_input=True,
+))

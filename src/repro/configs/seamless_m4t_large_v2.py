@@ -1,0 +1,10 @@
+"""seamless-m4t-large-v2 [audio]: 24L d_model=1024 16H (GQA kv=16) d_ff=8192
+vocab=256206 — enc-dec, multimodal [arXiv:2308.11596; hf]. Modality frontend
+is a STUB: input_specs() provides precomputed frame embeddings (DESIGN.md)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="seamless-m4t-large-v2", family="encdec",
+    n_layers=24, encoder_layers=24, d_model=1024, n_heads=16, n_kv=16,
+    d_head=64, d_ff=8192, vocab=256206, enc_seq_ratio=4,
+))

@@ -1,0 +1,308 @@
+"""AerialDB datastore: federated insert and decentralized query (paper §3).
+
+State layout — every array carries the *logical edge axis* E in front, which
+the launcher shards over the device mesh (edges ≈ experts in an MoE: the
+insertion path literally reuses the dispatch-by-one-hot pattern). All
+operations are pure jittable functions: ``insert_step(state, shards) ->
+(state, info)`` and ``query_step(state, queries) -> (results, info)``.
+
+  tup_f:   (E, CAP_T, 3+V) float32   t, lat, lon, v0..  — the per-edge tuple log
+  tup_sid: (E, CAP_T, 2)   int32     owning shard id (hi, lo)
+  tup_count, tup_dropped: (E,)       append cursor / overflow telemetry
+  index:   IndexState                sliced distributed index (index.py)
+
+The per-edge query engine (the paper's InfluxDB role) is a predicate scan —
+``repro.kernels.st_scan`` provides the Pallas TPU kernel; ``scan_engine`` here
+dispatches to it or to the jnp reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, planner as planner_lib
+from repro.core.index import IndexState, MatchedShards, QueryPred, init_index, insert_entries, lookup
+from repro.core.placement import ShardMeta, place_replicas
+from repro.core.slicing import SliceConfig, spatial_slice_edges, temporal_slice_edges
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    """Static configuration of an AerialDB deployment."""
+    n_edges: int = 20
+    sites: Tuple[Tuple[float, float], ...] = ()   # (E, 2) edge locations
+    tau: float = 300.0
+    slice_cfg: SliceConfig = SliceConfig()
+    tuple_capacity: int = 1 << 14                 # tuples per edge
+    index_capacity: int = 1 << 12                 # index entries per edge
+    max_shards_per_query: int = 128               # S
+    records_per_shard: int = 60                   # R (paper: 60 samples / 5 min)
+    n_values: int = 4                             # sensor channels per tuple
+    replication: int = 3                          # 1 => Feather-like baseline
+    use_index: bool = True                        # False => broadcast baseline
+    planner: str = "min_shards"
+    or_group: int = 150                           # paper: sub-queries split at 150 sids
+
+    @property
+    def tuple_width(self) -> int:
+        return 3 + self.n_values
+
+    def sites_array(self) -> jnp.ndarray:
+        return jnp.asarray(np.asarray(self.sites, np.float32).reshape(self.n_edges, 2))
+
+
+class StoreState(NamedTuple):
+    index: IndexState
+    tup_f: jnp.ndarray
+    tup_sid: jnp.ndarray
+    tup_count: jnp.ndarray
+    tup_dropped: jnp.ndarray
+
+
+class QueryResult(NamedTuple):
+    """Fixed-shape query answer: aggregates over matching tuples."""
+    count: jnp.ndarray    # (Q,) int32
+    vsum: jnp.ndarray     # (Q,) float32 — sum of v0
+    vmin: jnp.ndarray     # (Q,) float32 (+inf when count==0)
+    vmax: jnp.ndarray     # (Q,) float32 (-inf when count==0)
+    overflow: jnp.ndarray # (Q,) bool — matched shards exceeded the static budget
+
+
+class QueryInfo(NamedTuple):
+    """Telemetry used by the paper-figure benchmarks (Fig 9–13)."""
+    lookup_edges: jnp.ndarray      # (Q,) #edges consulted for the index lookup
+    subquery_edges: jnp.ndarray    # (Q,) #edges executing sub-queries
+    shards_matched: jnp.ndarray    # (Q,) #distinct shards
+    max_shards_per_edge: jnp.ndarray  # (Q,) worst per-edge OR-list length
+    broadcast: jnp.ndarray         # (Q,) bool — index lookup degenerated
+
+
+def make_pred(q: int = 1, lat0=0.0, lat1=0.0, lon0=0.0, lon1=0.0, t0=0.0,
+              t1=0.0, sid_hi=-1, sid_lo=-1, has_spatial=False,
+              has_temporal=False, has_sid=False, is_and=True) -> QueryPred:
+    """Build a batched QueryPred, broadcasting scalars to (q,)."""
+    def arr(x, dt):
+        a = jnp.asarray(x, dt)
+        return jnp.broadcast_to(a, (q,) if a.ndim == 0 else a.shape)
+    return QueryPred(
+        lat0=arr(lat0, jnp.float32), lat1=arr(lat1, jnp.float32),
+        lon0=arr(lon0, jnp.float32), lon1=arr(lon1, jnp.float32),
+        t0=arr(t0, jnp.float32), t1=arr(t1, jnp.float32),
+        sid_hi=arr(sid_hi, jnp.int32), sid_lo=arr(sid_lo, jnp.int32),
+        has_spatial=arr(has_spatial, jnp.bool_),
+        has_temporal=arr(has_temporal, jnp.bool_),
+        has_sid=arr(has_sid, jnp.bool_), is_and=arr(is_and, jnp.bool_))
+
+
+def init_store(cfg: StoreConfig) -> StoreState:
+    e = cfg.n_edges
+    return StoreState(
+        index=init_index(e, cfg.index_capacity),
+        tup_f=jnp.zeros((e, cfg.tuple_capacity, cfg.tuple_width), jnp.float32),
+        tup_sid=jnp.full((e, cfg.tuple_capacity, 2), -1, jnp.int32),
+        tup_count=jnp.zeros((e,), jnp.int32),
+        tup_dropped=jnp.zeros((e,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Insertion (paper §3.4, Fig 2)
+# ---------------------------------------------------------------------------
+
+def _index_edge_mask(cfg: StoreConfig, meta: ShardMeta, replicas: jnp.ndarray,
+                     sites: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
+    """(B, E) — edges that must hold this shard's index entry: every spatial
+    and temporal slice owner, plus the replica edges themselves (§3.4.3).
+    Ranges wider than the static slice budget broadcast their entry (the
+    entry is tiny; the paper notes wide shards index 'on many more edges')."""
+    e = cfg.n_edges
+    sm, s_ovf = spatial_slice_edges(meta.lat0, meta.lat1, meta.lon0, meta.lon1,
+                                    sites, cfg.slice_cfg)
+    tm, t_ovf = temporal_slice_edges(meta.t0, meta.t1, e, cfg.slice_cfg)
+    rep_mask = jnp.any(replicas[..., None] == jnp.arange(e, dtype=jnp.int32), axis=1)
+    mask = sm | tm | rep_mask
+    mask = jnp.where((s_ovf | t_ovf)[:, None], jnp.ones_like(mask), mask)
+    return mask & alive[None, :]
+
+
+@partial(jax.jit, static_argnums=(0,))
+def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
+                meta: ShardMeta, alive: jnp.ndarray):
+    """Insert B shards (R tuples each) — placement, replication, indexing.
+
+    Args:
+      payload: (B, R, 3+V) tuple records (t, lat, lon, values...).
+      meta:    ShardMeta of the B shards.
+      alive:   (E,) availability mask.
+
+    Returns (new_state, info dict).
+    """
+    e, cap = cfg.n_edges, cfg.tuple_capacity
+    b, r, w = payload.shape
+    sites = cfg.sites_array()
+
+    replicas = place_replicas(meta, sites, alive, cfg.tau)      # (B, 3)
+    replicas = replicas[:, : cfg.replication]
+
+    # --- tuple dispatch: one-hot shard->edge routing (MoE-style) ---
+    dm = jnp.any(replicas[..., None] == jnp.arange(e, dtype=jnp.int32), axis=1)  # (B, E)
+    dm = dm & alive[None, :]
+    rank = jnp.cumsum(dm, axis=0) - 1                            # (B, E)
+    start = state.tup_count[None, :] + rank * r                  # (B, E)
+    pos = start[..., None] + jnp.arange(r, dtype=jnp.int32)      # (B, E, R)
+    ok = dm[..., None] & (pos < cap)
+    pp = jnp.where(ok, pos, cap)                                 # drop OOB
+    ee = jnp.broadcast_to(jnp.arange(e, dtype=jnp.int32)[None, :, None], (b, e, r))
+
+    pay = jnp.broadcast_to(payload[:, None], (b, e, r, w))
+    sid = jnp.broadcast_to(
+        jnp.stack([meta.sid_hi, meta.sid_lo], axis=-1)[:, None, None, :], (b, e, r, 2))
+
+    tup_f = state.tup_f.at[ee, pp].set(pay, mode="drop")
+    tup_sid = state.tup_sid.at[ee, pp].set(sid, mode="drop")
+    n_in = jnp.sum(dm, axis=0) * r                               # (E,)
+    tup_count = jnp.minimum(state.tup_count + n_in, cap).astype(jnp.int32)
+    n_dropped = state.tup_dropped + jnp.sum(jnp.sum(dm[..., None] & (pos >= cap),
+                                                    axis=-1), axis=0)
+
+    # --- sliced index entries (§3.4.3) ---
+    idx_mask = _index_edge_mask(cfg, meta, replicas, sites, alive)
+    index = insert_entries(state.index, meta,
+                           jnp.pad(replicas, ((0, 0), (0, 3 - cfg.replication)),
+                                   constant_values=-1),
+                           idx_mask)
+
+    new_state = StoreState(index, tup_f, tup_sid, tup_count, n_dropped)
+    info = {
+        "replicas": replicas,
+        "intake_per_edge": n_in,
+        "index_writes_per_edge": jnp.sum(idx_mask, axis=0),
+        "tuples_dropped": n_dropped - state.tup_dropped,
+    }
+    return new_state, info
+
+
+# ---------------------------------------------------------------------------
+# Query (paper §3.5, Fig 4)
+# ---------------------------------------------------------------------------
+
+def _lookup_sets(cfg: StoreConfig, pred: QueryPred, sites: jnp.ndarray,
+                 alive: jnp.ndarray):
+    """Candidate edge sets E_s, E_t, E_i for the index lookup (§3.5.1) and
+    the chosen lookup mask. AND => smallest failure-free set; OR => union.
+    Any unusable situation falls back to broadcasting to alive edges."""
+    e = cfg.n_edges
+    q = pred.lat0.shape[0]
+
+    es, s_ovf = spatial_slice_edges(pred.lat0, pred.lat1, pred.lon0, pred.lon1,
+                                    sites, cfg.slice_cfg)
+    et, t_ovf = temporal_slice_edges(pred.t0, pred.t1, e, cfg.slice_cfg)
+    ei = (hashing.hash_shard_id(pred.sid_hi, pred.sid_lo, e)[..., None]
+          == jnp.arange(e, dtype=jnp.int32))
+
+    sets = jnp.stack([es, et, ei], axis=1)                       # (Q, 3, E)
+    usable = jnp.stack([pred.has_spatial & ~s_ovf,
+                        pred.has_temporal & ~t_ovf,
+                        pred.has_sid], axis=1)                   # (Q, 3)
+    has_failed = jnp.any(sets & ~alive, axis=-1)                 # (Q, 3)
+    sizes = jnp.sum(sets, axis=-1)                               # (Q, 3)
+
+    # §3.5.3: prefer failure-free sets; among them the smallest.
+    big = jnp.int32(1 << 30)
+    score = jnp.where(usable & ~has_failed, sizes, big)
+    best = jnp.argmin(score, axis=-1)                            # (Q,)
+    best_ok = jnp.take_along_axis(score, best[:, None], axis=1)[:, 0] < big
+
+    chosen = jnp.take_along_axis(sets, best[:, None, None], axis=1)[:, 0]  # (Q, E)
+    union = jnp.any(jnp.where(usable[..., None], sets, False), axis=1)
+    union_ok = jnp.any(usable, axis=-1) & ~jnp.any(union & ~alive, axis=-1)
+
+    is_and = pred.is_and
+    mask = jnp.where(is_and[:, None], chosen, union)
+    ok = jnp.where(is_and, best_ok, union_ok)
+    if not cfg.use_index:
+        ok = jnp.zeros_like(ok)                                  # Feather-like: no index
+    broadcast = ~ok
+    mask = jnp.where(broadcast[:, None], jnp.broadcast_to(alive, (q, e)), mask & alive)
+    return mask, broadcast
+
+
+def scan_engine(tup_f, tup_sid, tup_count, pred: QueryPred, sublists,
+                sublist_len, use_kernel: bool = False):
+    """Per-edge predicate scan (the InfluxDB role). Evaluates each query's
+    predicate + shard OR-list against every edge-local tuple.
+
+    Args:
+      sublists:    (Q, E, L, 2) int32 shard ids assigned to each (query, edge).
+      sublist_len: (Q, E) int32 — #valid entries in each OR-list.
+
+    Returns (count, vsum, vmin, vmax): each (Q, E).
+    """
+    if use_kernel:
+        from repro.kernels.st_scan import ops as st_ops
+        return st_ops.st_scan(tup_f, tup_sid, tup_count, pred, sublists, sublist_len)
+    from repro.kernels.st_scan import ref as st_ref
+    return st_ref.st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len)
+
+
+@partial(jax.jit, static_argnums=(0, 5))
+def query_step(cfg: StoreConfig, state: StoreState, pred: QueryPred,
+               alive: jnp.ndarray, key: jax.Array, use_kernel: bool = False):
+    """Decentralized query execution (paper Fig 4): index lookup -> planning
+    -> per-edge sub-queries -> combine. Returns (QueryResult, QueryInfo)."""
+    e = cfg.n_edges
+    q = pred.lat0.shape[0]
+    s = cfg.max_shards_per_query
+    sites = cfg.sites_array()
+
+    lookup_mask, broadcast = _lookup_sets(cfg, pred, sites, alive)
+
+    if cfg.use_index:
+        matched = lookup(state.index, pred, lookup_mask, s)
+        assignment = planner_lib.plan(cfg.planner, matched, alive, key)  # (Q, S)
+        # Per-edge OR-lists: rank of shard within its assigned edge.
+        am = (assignment[..., None] == jnp.arange(e, dtype=jnp.int32))   # (Q, S, E)
+        rank = jnp.cumsum(am, axis=1) - 1
+        pos = jnp.where(am, rank, s)
+        sublists = jnp.full((q, e, s, 2), -1, jnp.int32)
+        qq = jnp.broadcast_to(jnp.arange(q, dtype=jnp.int32)[:, None, None], (q, s, e))
+        ee = jnp.broadcast_to(jnp.arange(e, dtype=jnp.int32)[None, None, :], (q, s, e))
+        sidv = jnp.stack([matched.sid_hi, matched.sid_lo], axis=-1)       # (Q, S, 2)
+        sidv = jnp.broadcast_to(sidv[:, :, None, :], (q, s, e, 2))
+        sublists = sublists.at[qq, ee, pos].set(sidv, mode="drop")
+        sublist_len = jnp.sum(am, axis=1).astype(jnp.int32)               # (Q, E)
+        ovf = matched.overflow
+        shards_matched = jnp.sum(matched.valid, axis=-1)
+    else:
+        # Broadcast baseline (Feather-like): no shard scoping; every alive
+        # edge scans everything. Correct only under replication=1.
+        sublists = jnp.zeros((q, e, 1, 2), jnp.int32)
+        sublist_len = jnp.where(jnp.broadcast_to(alive, (q, e)), -1, 0).astype(jnp.int32)
+        ovf = jnp.zeros((q,), jnp.bool_)
+        shards_matched = jnp.full((q,), -1, jnp.int32)
+
+    count, vsum, vmin, vmax = scan_engine(state.tup_f, state.tup_sid,
+                                          state.tup_count, pred,
+                                          sublists, sublist_len, use_kernel)
+
+    result = QueryResult(
+        count=jnp.sum(count, axis=-1).astype(jnp.int32),
+        vsum=jnp.sum(vsum, axis=-1),
+        vmin=jnp.min(vmin, axis=-1),
+        vmax=jnp.max(vmax, axis=-1),
+        overflow=ovf,
+    )
+    info = QueryInfo(
+        lookup_edges=jnp.sum(lookup_mask, axis=-1),
+        subquery_edges=jnp.sum(sublist_len != 0, axis=-1),
+        shards_matched=shards_matched,
+        max_shards_per_edge=jnp.max(jnp.abs(sublist_len), axis=-1),
+        broadcast=broadcast,
+    )
+    return result, info

@@ -1,0 +1,176 @@
+"""Content-based hashing for AerialDB (paper §3.4.1).
+
+The paper uses xxHash64 over three content dimensions:
+
+    H_i(shardID)   -> edge     (modulo over the hash)
+    H_t(timepoint) -> edge     (fixed tau-width bucket id, hashed, then modulo)
+    H_s(lat, lon)  -> edge     (Voronoi point-location; see voronoi.py)
+
+TPU adaptation: the TPU VPU has no 64-bit integer lanes, so a 64-bit value is
+represented as a pair of uint32 limbs ``(hi, lo)`` and all xxHash64 arithmetic
+(mod-2^64 add/mul, rotations, shifts) is performed in 32-bit limb math. The
+32x32 -> 64 partial products are computed via 16-bit digit splits, which map
+onto native uint32 multiplies. The same limb formulation is used by the Pallas
+kernel in ``repro.kernels.hash64``; this module is the jnp implementation and
+the oracle for that kernel lives in ``repro/kernels/hash64/ref.py`` (pure
+python ints).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+U32 = np.uint32          # numpy scalars inline as jaxpr literals (Pallas-safe)
+MASK16 = np.uint32(0xFFFF)
+
+# xxHash64 primes, as (hi, lo) uint32 limb pairs.
+PRIME64_1 = (0x9E3779B1, 0x85EBCA87)
+PRIME64_2 = (0xC2B2AE3D, 0x27D4EB4F)
+PRIME64_3 = (0x165667B1, 0x9E3779F9)
+PRIME64_4 = (0x85EBCA77, 0xC2B2AE63)
+PRIME64_5 = (0x27D4EB2F, 0x165667C5)
+
+U64 = Tuple[jnp.ndarray, jnp.ndarray]  # (hi, lo) uint32 limbs
+
+
+def u64(hi, lo) -> U64:
+    return jnp.asarray(hi, jnp.uint32), jnp.asarray(lo, jnp.uint32)
+
+
+def const64(pair):
+    return np.uint32(pair[0]), np.uint32(pair[1])
+
+
+def xor64(a: U64, b: U64) -> U64:
+    return a[0] ^ b[0], a[1] ^ b[1]
+
+
+def add64(a: U64, b: U64) -> U64:
+    lo = a[1] + b[1]
+    carry = (lo < a[1]).astype(U32)
+    return a[0] + b[0] + carry, lo
+
+
+def shr64(a: U64, n: int) -> U64:
+    """Logical right shift by a static amount 0 < n < 64."""
+    if n == 0:
+        return a
+    if n >= 32:
+        return jnp.zeros_like(a[0]), a[0] >> U32(n - 32)
+    return a[0] >> U32(n), (a[1] >> U32(n)) | (a[0] << U32(32 - n))
+
+
+def shl64(a: U64, n: int) -> U64:
+    if n == 0:
+        return a
+    if n >= 32:
+        return a[1] << U32(n - 32), jnp.zeros_like(a[1])
+    return (a[0] << U32(n)) | (a[1] >> U32(32 - n)), a[1] << U32(n)
+
+
+def rotl64(a: U64, n: int) -> U64:
+    n = n % 64
+    if n == 0:
+        return a
+    return or64(shl64(a, n), shr64(a, 64 - n))
+
+
+def or64(a: U64, b: U64) -> U64:
+    return a[0] | b[0], a[1] | b[1]
+
+
+def _mul32x32(a: jnp.ndarray, b: jnp.ndarray) -> U64:
+    """Exact 32x32 -> 64 product via 16-bit digit split (TPU-friendly)."""
+    a_lo, a_hi = a & MASK16, a >> U32(16)
+    b_lo, b_hi = b & MASK16, b >> U32(16)
+    ll = a_lo * b_lo                      # <= 2^32 - 2^17 + 1: fits u32
+    lh = a_lo * b_hi
+    hl = a_hi * b_lo
+    hh = a_hi * b_hi
+    # result = hh << 32 + (lh + hl) << 16 + ll, with carry tracking
+    mid = lh + (ll >> U32(16))            # <= 2^32-1: no overflow
+    carry_mid = (mid < lh).astype(U32)    # lh + x can wrap? lh<=(2^16-1)^2, ll>>16<2^16 -> no wrap
+    mid2 = mid + hl
+    carry_mid = carry_mid + (mid2 < mid).astype(U32)
+    lo = (mid2 << U32(16)) | (ll & MASK16)
+    hi = hh + (mid2 >> U32(16)) + (carry_mid << U32(16))
+    return hi, lo
+
+
+def mul64(a: U64, b: U64) -> U64:
+    """(a * b) mod 2^64 in uint32 limbs."""
+    hi, lo = _mul32x32(a[1], b[1])
+    hi = hi + a[1] * b[0] + a[0] * b[1]   # cross terms only affect hi limb
+    return hi, lo
+
+
+def xxh64_avalanche(h: U64) -> U64:
+    h = xor64(h, shr64(h, 33))
+    h = mul64(h, const64(PRIME64_2))
+    h = xor64(h, shr64(h, 29))
+    h = mul64(h, const64(PRIME64_3))
+    h = xor64(h, shr64(h, 32))
+    return h
+
+
+def xxh64_u64(key: U64, seed: U64 = None) -> U64:
+    """xxHash64 of a single 64-bit word (8-byte input path of XXH64)."""
+    if seed is None:
+        seed = u64(jnp.zeros_like(key[0]), jnp.zeros_like(key[1]))
+    h = add64(add64(seed, const64(PRIME64_5)), u64(jnp.zeros_like(key[0]), jnp.full_like(key[1], 8)))
+    k1 = mul64(key, const64(PRIME64_2))
+    k1 = rotl64(k1, 31)
+    k1 = mul64(k1, const64(PRIME64_1))
+    h = xor64(h, k1)
+    h = add64(mul64(rotl64(h, 27), const64(PRIME64_1)), const64(PRIME64_4))
+    return xxh64_avalanche(h)
+
+
+def mod_u64(h: U64, n: int) -> jnp.ndarray:
+    """(h mod n) for small static n (< 2^16), returned as int32.
+
+    h mod n = ((hi mod n) * (2^32 mod n) + (lo mod n)) mod n. With n < 2^16
+    both factors of the product are < 2^16, so all arithmetic stays in native
+    uint32 lanes. Edge counts (tens to low thousands) satisfy this easily.
+    """
+    if not (0 < n < (1 << 16)):
+        raise ValueError(f"mod_u64 requires 0 < n < 65536, got {n}")
+    n32 = np.uint32(n)
+    two32_mod = np.uint32((1 << 32) % n)
+    hi_m = h[0] % n32
+    lo_m = h[1] % n32
+    return (((hi_m * two32_mod) % n32 + lo_m) % n32).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Paper hash functions H_i and H_t (H_s lives in voronoi.py).
+# ---------------------------------------------------------------------------
+
+def hash_shard_id(sid_hi: jnp.ndarray, sid_lo: jnp.ndarray, n_edges: int) -> jnp.ndarray:
+    """H_i: mod(xxh64(shardID), edgeCount) (paper §3.4.1)."""
+    h = xxh64_u64(u64(sid_hi.astype(U32), sid_lo.astype(U32)))
+    return mod_u64(h, n_edges)
+
+
+def time_bucket(t: jnp.ndarray, tau: float) -> jnp.ndarray:
+    """Bucket id of a timepoint for tau-width temporal slicing (int32)."""
+    return jnp.floor(t / tau).astype(jnp.int32)
+
+
+def hash_time_bucket(bucket: jnp.ndarray, n_edges: int) -> jnp.ndarray:
+    """H_t applied to a precomputed bucket id: mod(xxh64(bucket), edgeCount).
+
+    Hashing the bucket id (not the raw time) ensures shard-collection
+    periodicity does not hit adjacent edges (paper §3.4.1).
+    """
+    b = bucket.astype(U32)
+    h = xxh64_u64(u64(jnp.zeros_like(b), b))
+    return mod_u64(h, n_edges)
+
+
+def hash_time(t: jnp.ndarray, tau: float, n_edges: int) -> jnp.ndarray:
+    """H_t: timepoint -> tau bucket -> edge index."""
+    return hash_time_bucket(time_bucket(t, tau), n_edges)

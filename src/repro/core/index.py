@@ -1,0 +1,164 @@
+"""Distributed in-memory shard index with slicing (paper §3.4.3).
+
+Every edge keeps a fixed-capacity table of index entries
+``{shardID, bbox, trange, replicas[3]}``. An entry for a shard is written to
+*every* edge owning one of the shard's spatial/temporal slices (over-
+replication), so that any overlapping range query — which slices its own
+predicate with the same grid — finds the shard on at least one lookup edge.
+
+Static-shape storage (TPU adaptation):
+  ent_f:  (E, CAP, 6)  float32  lat0, lat1, lon0, lon1, t0, t1
+  ent_i:  (E, CAP, 5)  int32    sid_hi, sid_lo, r0, r1, r2
+  valid:  (E, CAP)     bool
+  cursor: (E,)         int32    append position
+  dropped:(E,)         int32    entries lost to capacity overflow (telemetry)
+
+The leading E axis is the *logical edge axis* — sharded over the device mesh
+by the datastore; every operation here is batched dense array math so the
+whole index is pjit-compatible.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.placement import ShardMeta
+
+
+class IndexState(NamedTuple):
+    ent_f: jnp.ndarray
+    ent_i: jnp.ndarray
+    valid: jnp.ndarray
+    cursor: jnp.ndarray
+    dropped: jnp.ndarray
+
+
+class QueryPred(NamedTuple):
+    """A spatio-temporal query predicate (paper Fig 6).
+
+    ``has_*`` flags select which filters participate; ``is_and`` picks the
+    boolean combination (§3.5.1). All fields are batched (Q,).
+    """
+    lat0: jnp.ndarray
+    lat1: jnp.ndarray
+    lon0: jnp.ndarray
+    lon1: jnp.ndarray
+    t0: jnp.ndarray
+    t1: jnp.ndarray
+    sid_hi: jnp.ndarray
+    sid_lo: jnp.ndarray
+    has_spatial: jnp.ndarray   # bool
+    has_temporal: jnp.ndarray  # bool
+    has_sid: jnp.ndarray       # bool
+    is_and: jnp.ndarray        # bool
+
+
+class MatchedShards(NamedTuple):
+    """Index-lookup result: the shards a query must touch (paper §3.5.1)."""
+    sid_hi: jnp.ndarray    # (Q, S)
+    sid_lo: jnp.ndarray    # (Q, S)
+    replicas: jnp.ndarray  # (Q, S, 3)
+    valid: jnp.ndarray     # (Q, S)
+    overflow: jnp.ndarray  # (Q,) — more than S distinct shards matched
+
+
+def init_index(n_edges: int, capacity: int) -> IndexState:
+    return IndexState(
+        ent_f=jnp.zeros((n_edges, capacity, 6), jnp.float32),
+        ent_i=jnp.full((n_edges, capacity, 5), -1, jnp.int32),
+        valid=jnp.zeros((n_edges, capacity), jnp.bool_),
+        cursor=jnp.zeros((n_edges,), jnp.int32),
+        dropped=jnp.zeros((n_edges,), jnp.int32),
+    )
+
+
+def insert_entries(state: IndexState, meta: ShardMeta, replicas: jnp.ndarray,
+                   edge_mask: jnp.ndarray) -> IndexState:
+    """Write index entries for B shards onto all edges in their slice mask.
+
+    Args:
+      meta:      ShardMeta of B shards.
+      replicas:  (B, 3) replica edges.
+      edge_mask: (B, E) bool — edges that must index each shard (slice owners
+                 plus the replica edges themselves).
+    """
+    e, cap = state.valid.shape
+    b = edge_mask.shape[0]
+    # Append position of shard b on edge e: cursor[e] + (rank of b among
+    # shards targeting e). Dense cumsum keeps this scatter-free until the end.
+    rank = jnp.cumsum(edge_mask, axis=0) - 1                      # (B, E)
+    pos = state.cursor[None, :] + rank                            # (B, E)
+    ok = edge_mask & (pos < cap)
+    n_dropped = jnp.sum(edge_mask & (pos >= cap), axis=0)
+
+    ee = jnp.broadcast_to(jnp.arange(e, dtype=jnp.int32), (b, e))
+    # Out-of-bounds rows are dropped by scatter mode='drop'.
+    pp = jnp.where(ok, pos, cap)
+
+    vals_f = jnp.stack([meta.lat0, meta.lat1, meta.lon0, meta.lon1,
+                        meta.t0, meta.t1], axis=-1)               # (B, 6)
+    vals_i = jnp.concatenate([meta.sid_hi[:, None], meta.sid_lo[:, None],
+                              replicas.astype(jnp.int32)], axis=-1)  # (B, 5)
+    vals_f = jnp.broadcast_to(vals_f[:, None, :], (b, e, 6))
+    vals_i = jnp.broadcast_to(vals_i[:, None, :], (b, e, 5))
+
+    ent_f = state.ent_f.at[ee, pp].set(vals_f, mode="drop")
+    ent_i = state.ent_i.at[ee, pp].set(vals_i, mode="drop")
+    valid = state.valid.at[ee, pp].set(ok, mode="drop")
+    cursor = jnp.minimum(state.cursor + jnp.sum(edge_mask, axis=0), cap).astype(jnp.int32)
+    return IndexState(ent_f, ent_i, valid, cursor, state.dropped + n_dropped)
+
+
+def entry_matches(state: IndexState, pred: QueryPred) -> jnp.ndarray:
+    """(Q, E, CAP) bool — which index entries satisfy each query predicate."""
+    f = state.ent_f  # (E, CAP, 6)
+    i = state.ent_i
+    def bc(x):  # (Q,) -> (Q, 1, 1)
+        return x[:, None, None]
+    sp = ~((bc(pred.lat1) < f[None, :, :, 0]) | (f[None, :, :, 1] < bc(pred.lat0)) |
+           (bc(pred.lon1) < f[None, :, :, 2]) | (f[None, :, :, 3] < bc(pred.lon0)))
+    tp = ~((bc(pred.t1) < f[None, :, :, 4]) | (f[None, :, :, 5] < bc(pred.t0)))
+    ip = (i[None, :, :, 0] == bc(pred.sid_hi)) & (i[None, :, :, 1] == bc(pred.sid_lo))
+    hs, ht, hi = bc(pred.has_spatial), bc(pred.has_temporal), bc(pred.has_sid)
+    is_and = bc(pred.is_and)
+    m_and = (sp | ~hs) & (tp | ~ht) & (ip | ~hi)
+    m_or = (sp & hs) | (tp & ht) | (ip & hi)
+    return jnp.where(is_and, m_and, m_or) & state.valid[None]
+
+
+def lookup(state: IndexState, pred: QueryPred, lookup_mask: jnp.ndarray,
+           max_shards: int) -> MatchedShards:
+    """Index lookup (paper §3.5.1): match entries on the selected lookup
+    edges, deduplicate shard ids across edges, return up to ``max_shards``.
+
+    Args:
+      lookup_mask: (Q, E) bool — edges whose index each query consults.
+    """
+    q = pred.lat0.shape[0]
+    e, cap = state.valid.shape
+    match = entry_matches(state, pred) & lookup_mask[:, :, None]   # (Q, E, CAP)
+
+    flat_m = match.reshape(q, e * cap)
+    sid_hi = jnp.broadcast_to(state.ent_i[None, :, :, 0], (q, e, cap)).reshape(q, -1)
+    sid_lo = jnp.broadcast_to(state.ent_i[None, :, :, 1], (q, e, cap)).reshape(q, -1)
+    reps = jnp.broadcast_to(state.ent_i[None, :, :, 2:5], (q, e, cap, 3)).reshape(q, -1, 3)
+
+    def one_query(m, hi, lo, rep):
+        # Sort matched-first by (sid_hi, sid_lo); mark first occurrence of
+        # each distinct sid; compact the distinct matches to the front.
+        order = jnp.lexsort((lo, hi, ~m))
+        m_s, hi_s, lo_s = m[order], hi[order], lo[order]
+        rep_s = rep[order]
+        prev_same = jnp.concatenate([jnp.array([False]),
+                                     (hi_s[1:] == hi_s[:-1]) & (lo_s[1:] == lo_s[:-1]) & m_s[:-1]])
+        is_new = m_s & ~prev_same
+        n_unique = jnp.sum(is_new)
+        order2 = jnp.lexsort((jnp.arange(m.shape[0]), ~is_new))[:max_shards]
+        return (hi_s[order2], lo_s[order2], rep_s[order2],
+                is_new[order2], n_unique > max_shards)
+
+    hi2, lo2, rep2, val2, ovf = jax.vmap(one_query)(flat_m, sid_hi, sid_lo, reps)
+    return MatchedShards(hi2, lo2, rep2, val2, ovf)

@@ -1,0 +1,95 @@
+"""Replica placement with successor fallback (paper §3.4.1–3.4.2).
+
+Three replicas per shard, one per content dimension:
+
+    r_s = H_s(spatial mid-point)     r_t = H_t(temporal mid-point)
+    r_i = H_i(shardID)
+
+If a produced edge collides with an earlier replica of the same shard, or is
+dead (failure mask), the replica moves to the *immediate successor* edge id in
+the deterministic ascending order — resolved here with a vectorized
+first-alive-offset search instead of a sequential probe loop.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.voronoi import hash_spatial
+
+
+class ShardMeta(NamedTuple):
+    """Metadata accompanying a shard insertion (paper Fig 2)."""
+    sid_hi: jnp.ndarray   # (B,) int32 — shardID high word
+    sid_lo: jnp.ndarray   # (B,) int32 — shardID low word
+    lat0: jnp.ndarray     # (B,) float32 — bbox
+    lat1: jnp.ndarray
+    lon0: jnp.ndarray
+    lon1: jnp.ndarray
+    t0: jnp.ndarray       # (B,) float32 — temporal range
+    t1: jnp.ndarray
+
+
+def successor_resolve(start: jnp.ndarray, forbidden: jnp.ndarray) -> jnp.ndarray:
+    """First edge >= start (cyclically) that is not forbidden.
+
+    Args:
+      start:     (B,) int32 candidate edge ids.
+      forbidden: (B, E) bool — dead or already-used edges.
+
+    Returns (B,) int32 resolved edges; if all edges are forbidden, returns
+    ``start`` unchanged (caller handles the degenerate total-failure case).
+    """
+    e = forbidden.shape[-1]
+    offs = jnp.arange(e, dtype=jnp.int32)
+    idx = (start[..., None] + offs) % e                      # (B, E) probe order
+    ok = ~jnp.take_along_axis(forbidden, idx, axis=-1)       # (B, E)
+    first = jnp.argmax(ok, axis=-1)                          # first True offset
+    any_ok = jnp.any(ok, axis=-1)
+    resolved = jnp.take_along_axis(idx, first[..., None], axis=-1)[..., 0]
+    return jnp.where(any_ok, resolved, start).astype(jnp.int32)
+
+
+def place_replicas(meta: ShardMeta, sites: jnp.ndarray, alive: jnp.ndarray,
+                   tau: float) -> jnp.ndarray:
+    """Compute the 3 replica edges for each shard (paper §3.4.2).
+
+    Args:
+      meta:  ShardMeta of B shards.
+      sites: (E, 2) edge locations.
+      alive: (E,) bool availability mask.
+      tau:   temporal bucket width for H_t.
+
+    Returns:
+      (B, 3) int32 distinct, alive edge ids (ordering: spatial, temporal, id).
+    """
+    e = sites.shape[0]
+    mid_lat = 0.5 * (meta.lat0 + meta.lat1)
+    mid_lon = 0.5 * (meta.lon0 + meta.lon1)
+    mid_t = 0.5 * (meta.t0 + meta.t1)
+
+    cand_s = hash_spatial(mid_lat, mid_lon, sites)
+    cand_t = hashing.hash_time(mid_t, tau, e)
+    cand_i = hashing.hash_shard_id(meta.sid_hi, meta.sid_lo, e)
+
+    dead = ~jnp.broadcast_to(alive, cand_s.shape + (e,))
+    eye = jnp.arange(e, dtype=jnp.int32)
+
+    r0 = successor_resolve(cand_s, dead)
+    used = dead | (eye == r0[..., None])
+    r1 = successor_resolve(cand_t, used)
+    used = used | (eye == r1[..., None])
+    r2 = successor_resolve(cand_i, used)
+    return jnp.stack([r0, r1, r2], axis=-1)
+
+
+def parent_edge(lat: jnp.ndarray, lon: jnp.ndarray, sites: jnp.ndarray,
+                alive: jnp.ndarray) -> jnp.ndarray:
+    """Parent edge of a drone: Voronoi cell over its current location
+    (paper §3.3), falling back to the successor if that edge is down."""
+    cand = hash_spatial(lat, lon, sites)
+    dead = ~jnp.broadcast_to(alive, cand.shape + (alive.shape[0],))
+    return successor_resolve(cand, dead)

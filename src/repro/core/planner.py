@@ -1,0 +1,137 @@
+"""Query planning and load balancing (paper §3.5.2, Alg. 1).
+
+Given the index-lookup result ``{sid -> (e_i, e_j, e_k)}`` the coordinator
+selects exactly one *alive* replica edge per shard. Strategies:
+
+  * ``random``     — uniform choice among alive replicas,
+  * ``min_edges``  — greedy set cover: fewest distinct edges queried
+                     (fewer sub-query invocations, more shards per edge),
+  * ``min_shards`` — paper Alg. 1: iteratively give the edge with the fewest
+                     remaining replicas its least-replicated shard (most
+                     edges, fewest shards each, max parallelism).
+
+All planners are pure jittable functions over fixed-shape arrays; the greedy
+loops are ``lax.while_loop``s with data-independent bodies so they lower
+cleanly under pjit (the coordinator runs replicated — planning is metadata-
+scale work, O(S·E) per step, invariant to tuple volume).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.index import MatchedShards
+
+
+def _alive_replica_mask(matched: MatchedShards, alive: jnp.ndarray) -> jnp.ndarray:
+    """(Q, S, 3) bool — which replica slots are usable."""
+    reps = matched.replicas
+    ok = (reps >= 0) & jnp.take(alive, jnp.clip(reps, 0), axis=0)
+    return ok & matched.valid[..., None]
+
+
+def plan_random(matched: MatchedShards, alive: jnp.ndarray,
+                key: jax.Array) -> jnp.ndarray:
+    """(Q, S) int32 edge per shard, -1 where unassignable."""
+    ok = _alive_replica_mask(matched, alive)
+    g = jax.random.gumbel(key, ok.shape)
+    pick = jnp.argmax(jnp.where(ok, g, -jnp.inf), axis=-1)
+    edge = jnp.take_along_axis(matched.replicas, pick[..., None], axis=-1)[..., 0]
+    return jnp.where(jnp.any(ok, axis=-1), edge, -1).astype(jnp.int32)
+
+
+def _coverage(ok: jnp.ndarray, reps: jnp.ndarray, unassigned: jnp.ndarray,
+              n_edges: int) -> jnp.ndarray:
+    """(E,) — #unassigned shards with an alive replica on each edge."""
+    onehot = (reps[..., None] == jnp.arange(n_edges, dtype=jnp.int32))  # (S,3,E)
+    m = onehot & ok[..., None] & unassigned[:, None, None]
+    return jnp.sum(jnp.any(m, axis=1), axis=0)  # distinct shards per edge
+
+
+def plan_min_edges(matched: MatchedShards, alive: jnp.ndarray) -> jnp.ndarray:
+    """Greedy set cover: repeatedly take the edge covering the most
+    unassigned shards and give it all of them."""
+    n_edges = alive.shape[0]
+
+    def per_query(reps, valid):
+        ok = (reps >= 0) & jnp.take(alive, jnp.clip(reps, 0), axis=0) & valid[:, None]
+        s = reps.shape[0]
+
+        def cond(state):
+            assignment, unassigned, it = state
+            return jnp.any(unassigned) & (it < jnp.int32(min(n_edges, s) + 1))
+
+        def body(state):
+            assignment, unassigned, it = state
+            cov = _coverage(ok, reps, unassigned, n_edges)
+            best = jnp.argmax(cov).astype(jnp.int32)
+            has_best = jnp.any((reps == best) & ok, axis=-1)
+            take = unassigned & has_best & (cov[best] > 0)
+            assignment = jnp.where(take, best, assignment)
+            unassigned = unassigned & ~take & (cov[best] > 0)
+            return assignment, unassigned, it + 1
+
+        init = (jnp.full((s,), -1, jnp.int32), jnp.any(ok, axis=-1), jnp.int32(0))
+        assignment, _, _ = jax.lax.while_loop(cond, body, init)
+        return assignment
+
+    return jax.vmap(per_query)(matched.replicas, matched.valid)
+
+
+def plan_min_shards(matched: MatchedShards, alive: jnp.ndarray) -> jnp.ndarray:
+    """Paper Alg. 1 (MinShards): one shard assigned per iteration — the
+    least-loaded edge receives its least-replicated shard; that shard is then
+    removed from every edge. Maximizes the number of edges participating."""
+    n_edges = alive.shape[0]
+
+    def per_query(reps, valid):
+        ok0 = (reps >= 0) & jnp.take(alive, jnp.clip(reps, 0), axis=0) & valid[:, None]
+        s = reps.shape[0]
+        edge_ids = jnp.arange(n_edges, dtype=jnp.int32)
+
+        def cond(state):
+            assignment, ok, it = state
+            return jnp.any(ok) & (it < jnp.int32(s + 1))
+
+        def body(state):
+            assignment, ok, it = state
+            onehot = (reps[..., None] == edge_ids) & ok[..., None]   # (S,3,E)
+            per_edge = jnp.sum(jnp.any(onehot, axis=1), axis=0)      # (E,)
+            # Edge with fewest (but >0) remaining replicas.
+            cnt = jnp.where(per_edge > 0, per_edge, jnp.iinfo(jnp.int32).max)
+            e_star = jnp.argmin(cnt).astype(jnp.int32)
+            on_e = jnp.any((reps == e_star) & ok, axis=-1)           # (S,)
+            # Its shard with the fewest alive replicas overall.
+            n_rep = jnp.sum(ok, axis=-1)                             # (S,)
+            shard_key = jnp.where(on_e, n_rep, jnp.iinfo(jnp.int32).max)
+            s_star = jnp.argmin(shard_key)
+            assignment = assignment.at[s_star].set(e_star)
+            ok = ok & (jnp.arange(s) != s_star)[:, None]             # remove shard
+            return assignment, ok, it + 1
+
+        init = (jnp.full((s,), -1, jnp.int32), ok0, jnp.int32(0))
+        assignment, _, _ = jax.lax.while_loop(cond, body, init)
+        return assignment
+
+    return jax.vmap(per_query)(matched.replicas, matched.valid)
+
+
+PLANNERS = {
+    "random": plan_random,
+    "min_edges": plan_min_edges,
+    "min_shards": plan_min_shards,
+}
+
+
+def plan(strategy: str, matched: MatchedShards, alive: jnp.ndarray,
+         key: jax.Array | None = None) -> jnp.ndarray:
+    if strategy == "random":
+        if key is None:
+            raise ValueError("random planner needs a PRNG key")
+        return plan_random(matched, alive, key)
+    if strategy == "min_edges":
+        return plan_min_edges(matched, alive)
+    if strategy == "min_shards":
+        return plan_min_shards(matched, alive)
+    raise ValueError(f"unknown planner {strategy!r}")

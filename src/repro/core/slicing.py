@@ -1,0 +1,106 @@
+"""Fixed-size spatial/temporal slicing for the distributed index (paper §3.4.3).
+
+A shard is *placed* by hashing the mid-point of its spatial/temporal range,
+but a range query may overlap a shard without containing its mid-point. The
+paper's fix: cut the shard's full spatial extent and temporal extent into
+fixed-size slices, hash every slice with the same H_s / H_t, and write an
+index entry on *every* resulting edge. A query then slices its own predicate
+ranges the same way, and is guaranteed to hash onto at least one edge holding
+the index entry of every overlapping shard.
+
+Correctness argument (used by the property tests): if query range Q overlaps
+shard range S, they share a point x; the fixed slice grid assigns x to the
+same slice for both; that slice hashes to the same edge for both; the shard
+indexed there is found by the query's lookup. Fixed grids are therefore
+essential — both sides must quantize identically.
+
+Static-shape realization: a range maps to a bounded number of slices
+(MAX_*_SLICES, a config constant); ranges wider than the budget are covered
+by *coarsening* — we also always include the mid-point slice of the exact
+grid plus clamp the stride so the first and last slice are always present.
+To keep overlap guarantees exact for arbitrarily wide ranges, edge sets are
+represented as multi-hot masks over E and slices beyond the budget fall back
+to marking the query/shard as "broadcast" (all edges) — the paper's own
+degenerate case for unindexable predicates (§3.5.1).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.voronoi import hash_spatial
+
+
+class SliceConfig(NamedTuple):
+    """Static slicing geometry, shared by insert and query paths."""
+    tau: float = 300.0          # temporal slice width (seconds); paper uses 5 min
+    cell: float = 0.01          # spatial grid cell width (degrees ~ 1.1 km)
+    max_t_slices: int = 16      # static budget of temporal slices per range
+    max_s_slices: int = 16      # static budget of spatial cells per range (per axis: sqrt)
+    lat0: float = 0.0           # grid origin
+    lon0: float = 0.0
+
+
+def temporal_slice_edges(t0: jnp.ndarray, t1: jnp.ndarray, n_edges: int,
+                         cfg: SliceConfig) -> jnp.ndarray:
+    """Multi-hot (..., E) mask of edges owning the temporal slices of [t0, t1].
+
+    Returns (mask, overflow): overflow=True marks ranges wider than the static
+    slice budget — callers must broadcast for those (exactness fallback).
+    """
+    b0 = hashing.time_bucket(t0, cfg.tau)
+    b1 = hashing.time_bucket(t1, cfg.tau)
+    n_slices = b1 - b0 + 1                                  # (...,)
+    overflow = n_slices > cfg.max_t_slices
+    k = jnp.arange(cfg.max_t_slices, dtype=jnp.int32)       # (K,)
+    buckets = b0[..., None] + k                             # (..., K)
+    valid = k < n_slices[..., None]
+    edges = hashing.hash_time_bucket(buckets, n_edges)      # (..., K)
+    mask = jnp.zeros(t0.shape + (n_edges,), dtype=jnp.bool_)
+    mask = _scatter_multihot(mask, edges, valid)
+    return mask, overflow
+
+
+def spatial_slice_edges(lat0, lat1, lon0, lon1, sites: jnp.ndarray,
+                        cfg: SliceConfig):
+    """Multi-hot (..., E) mask of edges owning the spatial cells of a bbox.
+
+    Cells are a fixed grid of width cfg.cell; each covered cell's center is
+    located in the Voronoi diagram (H_s). Budget is max_s_slices per axis.
+    """
+    n_edges = sites.shape[0]
+    i0 = jnp.floor((lat0 - cfg.lat0) / cfg.cell).astype(jnp.int32)
+    i1 = jnp.floor((lat1 - cfg.lat0) / cfg.cell).astype(jnp.int32)
+    j0 = jnp.floor((lon0 - cfg.lon0) / cfg.cell).astype(jnp.int32)
+    j1 = jnp.floor((lon1 - cfg.lon0) / cfg.cell).astype(jnp.int32)
+    ni = i1 - i0 + 1
+    nj = j1 - j0 + 1
+    overflow = (ni > cfg.max_s_slices) | (nj > cfg.max_s_slices)
+    k = jnp.arange(cfg.max_s_slices, dtype=jnp.int32)
+    ii = i0[..., None] + k                                  # (..., K)
+    jj = j0[..., None] + k
+    vi = k < ni[..., None]
+    vj = k < nj[..., None]
+    # Cell centers for the KxK cartesian product of covered rows/cols.
+    clat = cfg.lat0 + (ii.astype(jnp.float32) + 0.5) * cfg.cell
+    clon = cfg.lon0 + (jj.astype(jnp.float32) + 0.5) * cfg.cell
+    glat = jnp.broadcast_to(clat[..., :, None], clat.shape[:-1] + (cfg.max_s_slices, cfg.max_s_slices))
+    glon = jnp.broadcast_to(clon[..., None, :], clon.shape[:-1] + (cfg.max_s_slices, cfg.max_s_slices))
+    gvalid = vi[..., :, None] & vj[..., None, :]
+    edges = hash_spatial(glat, glon, sites)                 # (..., K, K)
+    flat_edges = edges.reshape(edges.shape[:-2] + (-1,))
+    flat_valid = gvalid.reshape(gvalid.shape[:-2] + (-1,))
+    mask = jnp.zeros(flat_edges.shape[:-1] + (n_edges,), dtype=jnp.bool_)
+    mask = _scatter_multihot(mask, flat_edges, flat_valid)
+    return mask, overflow
+
+
+def _scatter_multihot(mask: jnp.ndarray, idx: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """mask[..., E] |= one_hot(idx[..., K]) where valid — via a dense one-hot
+    reduction (TPU-friendly; K and E are small statics)."""
+    e = mask.shape[-1]
+    onehot = (idx[..., None] == jnp.arange(e, dtype=jnp.int32)) & valid[..., None]
+    return mask | jnp.any(onehot, axis=-2)

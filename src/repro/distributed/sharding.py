@@ -1,0 +1,70 @@
+"""Logical-axis -> mesh-axis resolution.
+
+Model code annotates parameters with logical axes (FSDP / TP / EXP, see
+models/layers.py). This module resolves them onto the physical mesh:
+
+  single pod  (16, 16)    axes ("data", "model")
+  multi-pod (2, 16, 16)   axes ("pod", "data", "model")
+
+Baseline mapping: FSDP -> "data" (params sharded over the data axis and
+all-gathered per layer inside the scan — ZeRO-3/FSDP), TP/EXP -> "model"
+(tensor/expert parallelism). Across pods the baseline is pure data
+parallelism: parameters replicate, gradients all-reduce over "pod" — the
+collective the multi-pod dry-run must prove out.
+
+``fsdp_over_pod=True`` additionally shards FSDP over ("pod", "data") —
+a §Perf lever trading parameter all-gather traffic for memory.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import EXP, FSDP, TP
+
+
+def logical_rules(multi_pod: bool, fsdp_over_pod: bool = False):
+    fsdp = (("pod", "data") if (multi_pod and fsdp_over_pod) else "data")
+    return {FSDP: fsdp, TP: "model", EXP: "model"}
+
+
+def resolve_spec(spec: P, rules) -> P:
+    out = []
+    for ax in spec:
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, tuple):
+            r = []
+            for a in ax:
+                m = rules.get(a, a)
+                r.extend(m if isinstance(m, tuple) else (m,))
+            out.append(tuple(r))
+        else:
+            m = rules.get(ax, ax)
+            out.append(m)
+    return P(*out)
+
+
+def resolve_tree(tree, mesh: Mesh, multi_pod: bool, fsdp_over_pod: bool = False):
+    """PartitionSpec tree (logical) -> NamedSharding tree (physical)."""
+    rules = logical_rules(multi_pod, fsdp_over_pod)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, rules)),
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def batch_sharding(mesh: Mesh, multi_pod: bool, ndim: int, *, batch_dim=0):
+    spec = [None] * ndim
+    spec[batch_dim] = batch_axes(multi_pod)
+    return NamedSharding(mesh, P(*spec))
+
+
+def activation_sharding(mesh: Mesh, multi_pod: bool):
+    """(B, S, D) layer-boundary constraint: batch x sequence sharding (SP)."""
+    return NamedSharding(mesh, P(batch_axes(multi_pod), "model", None))

@@ -1,0 +1,53 @@
+"""Jit'd wrapper for the st_scan Pallas kernel.
+
+Accepts the datastore's row-major layout and QueryPred struct, performs the
+TPU-friendly column-major relayout + padding, and invokes the kernel. On CPU
+(tests / this container) the kernel runs in interpret mode; on TPU set
+``interpret=False``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.st_scan.st_scan import st_scan_kernel
+
+
+def pack_pred(pred):
+    """QueryPred -> (Q, 8) float32 + (Q, 8) int32 arrays for the kernel."""
+    zf = jnp.zeros_like(pred.lat0)
+    pred_f = jnp.stack([pred.lat0, pred.lat1, pred.lon0, pred.lon1,
+                        pred.t0, pred.t1, zf, zf], axis=-1).astype(jnp.float32)
+    zi = jnp.zeros_like(pred.sid_hi)
+    pred_i = jnp.stack([pred.sid_hi, pred.sid_lo,
+                        pred.has_spatial.astype(jnp.int32),
+                        pred.has_temporal.astype(jnp.int32),
+                        pred.has_sid.astype(jnp.int32),
+                        pred.is_and.astype(jnp.int32), zi, zi], axis=-1)
+    return pred_f, pred_i.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("block_c", "interpret"))
+def st_scan(tup_f, tup_sid, tup_count, pred, sublists, sublist_len,
+            block_c: int = 512, interpret: bool = True):
+    """Drop-in replacement for ref.st_scan_ref backed by the Pallas kernel."""
+    e, c, w = tup_f.shape
+    pad_c = (-c) % block_c
+    tupf_t = jnp.swapaxes(tup_f, 1, 2)           # (E, W, C): tuples on lanes
+    sid_t = jnp.swapaxes(tup_sid, 1, 2)          # (E, 2, C)
+    if pad_c:
+        tupf_t = jnp.pad(tupf_t, ((0, 0), (0, 0), (0, pad_c)))
+        sid_t = jnp.pad(sid_t, ((0, 0), (0, 0), (0, pad_c)), constant_values=-1)
+    # Pad the OR-list length to a lane multiple.
+    l = sublists.shape[2]
+    pad_l = (-l) % 128
+    if pad_l:
+        sublists = jnp.pad(sublists, ((0, 0), (0, 0), (0, pad_l), (0, 0)),
+                           constant_values=-(1 << 30))
+    pred_f, pred_i = pack_pred(pred)
+    return st_scan_kernel(tupf_t, sid_t, tup_count[:, None], pred_f, pred_i,
+                          sublists, sublist_len, block_c=block_c,
+                          interpret=interpret)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for the spatio-temporal predicate scan (st_scan).
+
+Semantics (the per-edge "InfluxDB role", paper §3.5.2): for every
+(query q, edge e) pair, scan all edge-local tuples and aggregate those that
+satisfy the query's spatio-temporal/sid predicate AND belong to a shard in
+the sub-query's shard OR-list.
+
+``sublist_len[q, e]`` semantics:
+    > 0  — OR-list filter with that many valid (hi, lo) entries,
+    = 0  — edge not selected: contributes nothing,
+    < 0  — scan-all sentinel (broadcast baseline: no shard scoping).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tuple_pred_match(tup_f, tup_sid, pred):
+    """(Q, E, C) bool — tuple-level predicate evaluation (no shard list)."""
+    t, lat, lon = tup_f[..., 0], tup_f[..., 1], tup_f[..., 2]
+
+    def bc(x):
+        return x[:, None, None]
+
+    sp = (bc(pred.lat0) <= lat) & (lat <= bc(pred.lat1)) & \
+         (bc(pred.lon0) <= lon) & (lon <= bc(pred.lon1))
+    tp = (bc(pred.t0) <= t) & (t <= bc(pred.t1))
+    ip = (tup_sid[..., 0] == bc(pred.sid_hi)) & (tup_sid[..., 1] == bc(pred.sid_lo))
+    hs, ht, hi = bc(pred.has_spatial), bc(pred.has_temporal), bc(pred.has_sid)
+    m_and = (sp | ~hs) & (tp | ~ht) & (ip | ~hi)
+    m_or = (sp & hs) | (tp & ht) | (ip & hi)
+    return jnp.where(bc(pred.is_and), m_and, m_or)
+
+
+def st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len):
+    """Oracle scan.
+
+    Args:
+      tup_f:       (E, C, 3+V) float32.
+      tup_sid:     (E, C, 2) int32.
+      tup_count:   (E,) int32 valid prefix length.
+      pred:        QueryPred with (Q,) fields.
+      sublists:    (Q, E, L, 2) int32 shard OR-lists.
+      sublist_len: (Q, E) int32 (see module docstring).
+
+    Returns:
+      (count, vsum, vmin, vmax) each (Q, E) — per-edge partial aggregates
+      of value column v0 (tup_f[..., 3]).
+    """
+    e, c, _ = tup_f.shape
+    q = sublists.shape[0]
+    l = sublists.shape[2]
+
+    alive_t = jnp.arange(c, dtype=jnp.int32)[None, :] < tup_count[:, None]   # (E, C)
+    pm = tuple_pred_match(tup_f[None], tup_sid[None], pred)                  # (Q, E, C)
+
+    # Shard OR-list membership: tuple sid against each list entry.
+    k = jnp.arange(l, dtype=jnp.int32)
+    entry_valid = k[None, None, :] < jnp.abs(sublist_len)[..., None]         # (Q, E, L)
+    hit = (tup_sid[None, :, :, None, 0] == sublists[:, :, None, :, 0]) & \
+          (tup_sid[None, :, :, None, 1] == sublists[:, :, None, :, 1])       # (Q, E, C, L)
+    in_list = jnp.any(hit & entry_valid[:, :, None, :], axis=-1)             # (Q, E, C)
+
+    scan_all = (sublist_len < 0)[..., None]                                  # (Q, E, 1)
+    selected = (sublist_len != 0)[..., None]
+    shard_ok = jnp.where(scan_all, True, in_list) & selected
+
+    m = pm & shard_ok & alive_t[None]
+    v0 = tup_f[None, ..., 3]
+    count = jnp.sum(m, axis=-1).astype(jnp.int32)
+    vsum = jnp.sum(jnp.where(m, v0, 0.0), axis=-1)
+    vmin = jnp.min(jnp.where(m, v0, jnp.inf), axis=-1)
+    vmax = jnp.max(jnp.where(m, v0, -jnp.inf), axis=-1)
+    return count, vsum, vmin, vmax

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: blocked spatio-temporal predicate scan + aggregation.
+
+This is the per-edge query engine hot loop (the paper's InfluxDB role,
+§3.5.2, Fig 5). For each (edge, query) pair the kernel streams the edge's
+tuple log through VMEM in ``block_c``-tuple tiles, evaluates the
+spatio-temporal predicate and the shard-id OR-list membership entirely in
+vector registers, and accumulates count/sum/min/max into the output tile.
+
+TPU-native layout decisions (vs the paper's row-store in InfluxDB):
+  * tuple log is stored column-major (E, W, C) so the *tuple* axis is the
+    lane dimension (128-aligned), giving unit-stride vector loads per field;
+  * shard OR-lists are (2, L) per (q, e) with L lanes — the membership test
+    is a (L, block_c) broadcast-compare, i.e. the "OR clause" of Fig 5
+    becomes one vectorized compare per list entry rather than a regex walk;
+  * aggregation is a running (1, 1) accumulator revisited across the c-grid
+    (Pallas revisiting-output pattern), so no cross-block reduction pass.
+
+Grid: (E, Q, C // block_c) — c fastest, so each (e, q) accumulator is
+complete before the grid moves on.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tupf_ref, sidl_ref, cnt_ref, predf_ref, predi_ref, subl_ref,
+            slen_ref, count_ref, vsum_ref, vmin_ref, vmax_ref, *, block_c: int):
+    pc = pl.program_id(2)
+
+    @pl.when(pc == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+        vsum_ref[...] = jnp.zeros_like(vsum_ref)
+        vmin_ref[...] = jnp.full_like(vmin_ref, jnp.inf)
+        vmax_ref[...] = jnp.full_like(vmax_ref, -jnp.inf)
+
+    t = tupf_ref[0, 0:1, :]      # (1, BC)
+    lat = tupf_ref[0, 1:2, :]
+    lon = tupf_ref[0, 2:3, :]
+    v0 = tupf_ref[0, 3:4, :]
+    sid_hi = sidl_ref[0, 0:1, :]
+    sid_lo = sidl_ref[0, 1:2, :]
+
+    n_valid = cnt_ref[0, 0]
+    base = pc * block_c
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1)
+    alive = idx < n_valid
+
+    pf = predf_ref[0]            # (8,) lat0, lat1, lon0, lon1, t0, t1, -, -
+    pi = predi_ref[0]            # (8,) sid_hi, sid_lo, has_s, has_t, has_i, is_and
+    sp = (pf[0] <= lat) & (lat <= pf[1]) & (pf[2] <= lon) & (lon <= pf[3])
+    tp = (pf[4] <= t) & (t <= pf[5])
+    ip = (sid_hi == pi[0]) & (sid_lo == pi[1])
+    hs, ht, hi = pi[2] != 0, pi[3] != 0, pi[4] != 0
+    m_and = (sp | ~hs) & (tp | ~ht) & (ip | ~hi)
+    m_or = (sp & hs) | (tp & ht) | (ip & hi)
+    pm = jnp.where(pi[5] != 0, m_and, m_or)
+
+    # Shard OR-list membership: (L, BC) broadcast compare.
+    slen = slen_ref[0, 0]
+    l = subl_ref.shape[2]
+    list_hi = subl_ref[0, 0, :, 0:1]   # (L, 1)
+    list_lo = subl_ref[0, 0, :, 1:2]
+    k = jax.lax.broadcasted_iota(jnp.int32, (l, 1), 0)
+    entry_ok = k < jnp.abs(slen)
+    hit = (sid_hi == list_hi) & (sid_lo == list_lo) & entry_ok   # (L, BC)
+    in_list = jnp.any(hit, axis=0, keepdims=True)                # (1, BC)
+    shard_ok = jnp.where(slen < 0, True, in_list) & (slen != 0)
+
+    m = pm & shard_ok & alive
+    count_ref[0, 0] += jnp.sum(m).astype(jnp.int32)
+    vsum_ref[0, 0] += jnp.sum(jnp.where(m, v0, 0.0))
+    vmin_ref[0, 0] = jnp.minimum(vmin_ref[0, 0], jnp.min(jnp.where(m, v0, jnp.inf)))
+    vmax_ref[0, 0] = jnp.maximum(vmax_ref[0, 0], jnp.max(jnp.where(m, v0, -jnp.inf)))
+
+
+def st_scan_kernel(tupf_t, sid_t, tup_count, pred_f, pred_i, sublists_t,
+                   sublist_len, *, block_c: int = 512, interpret: bool = True):
+    """Invoke the Pallas scan.
+
+    Args:
+      tupf_t:      (E, W, C) float32 column-major tuple log (W >= 4).
+      sid_t:       (E, 2, C) int32 shard ids.
+      tup_count:   (E, 1) int32.
+      pred_f:      (Q, 8) float32 packed predicate.
+      pred_i:      (Q, 8) int32 packed predicate.
+      sublists_t:  (Q, E, L, 2) int32 OR-lists.
+      sublist_len: (Q, E) int32.
+
+    Returns (count, vsum, vmin, vmax), each (Q, E).
+    """
+    e, w, c = tupf_t.shape
+    q = pred_f.shape[0]
+    l = sublists_t.shape[2]
+    if c % block_c:
+        raise ValueError(f"C={c} must be a multiple of block_c={block_c}")
+    grid = (e, q, c // block_c)
+
+    kernel = functools.partial(_kernel, block_c=block_c)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w, block_c), lambda e_, q_, c_: (e_, 0, c_)),
+            pl.BlockSpec((1, 2, block_c), lambda e_, q_, c_: (e_, 0, c_)),
+            pl.BlockSpec((1, 1), lambda e_, q_, c_: (e_, 0)),
+            pl.BlockSpec((1, 8), lambda e_, q_, c_: (q_, 0)),
+            pl.BlockSpec((1, 8), lambda e_, q_, c_: (q_, 0)),
+            pl.BlockSpec((1, 1, l, 2), lambda e_, q_, c_: (q_, e_, 0, 0)),
+            pl.BlockSpec((1, 1), lambda e_, q_, c_: (q_, e_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda e_, q_, c_: (q_, e_)),
+            pl.BlockSpec((1, 1), lambda e_, q_, c_: (q_, e_)),
+            pl.BlockSpec((1, 1), lambda e_, q_, c_: (q_, e_)),
+            pl.BlockSpec((1, 1), lambda e_, q_, c_: (q_, e_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, e), jnp.int32),
+            jax.ShapeDtypeStruct((q, e), jnp.float32),
+            jax.ShapeDtypeStruct((q, e), jnp.float32),
+            jax.ShapeDtypeStruct((q, e), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tupf_t, sid_t, tup_count, pred_f, pred_i, sublists_t, sublist_len)
+    return tuple(out)

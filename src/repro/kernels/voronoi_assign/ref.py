@@ -1,0 +1,13 @@
+"""Oracle for voronoi_assign: brute-force nearest site in float64 numpy."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def voronoi_assign_ref(points: np.ndarray, sites: np.ndarray) -> np.ndarray:
+    """(N, 2) points x (E, 2) sites -> (N,) int32 nearest-site (ties: lowest id)."""
+    p = np.asarray(points, np.float64)
+    s = np.asarray(sites, np.float64)
+    d = ((p[:, None, :] - s[None, :, :]) ** 2).sum(-1)
+    return np.argmin(d, axis=1).astype(np.int32)

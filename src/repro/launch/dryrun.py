@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend initialization. 512 host devices let jax.make_mesh
+# build the production meshes (16,16) and (2,16,16) on this CPU container.
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import ARCH_MODULES, SHAPES, get_config, list_configs  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch import inputs as inp  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.model import Model  # noqa: E402
+from repro.train import optimizer as optlib  # noqa: E402
+from repro.train.train_loop import make_serve_steps, make_train_step  # noqa: E402
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+               "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+
+
+def _nbytes(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES[dt]
+
+
+def collective_bytes_per_device(hlo_text: str):
+    """Sum operand bytes of every collective op in the (post-SPMD,
+    per-device) optimized HLO. Returns {op_kind: bytes} + total."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in COLLECTIVES:
+            # match the op invocation, e.g. "bf16[...] all-gather(bf16[...] %x)"
+            m = re.search(rf"= [^=]*\b{kind}(?:-start)?\(", line)
+            if not m:
+                continue
+            args = line[m.end():]
+            depth = 1
+            for i, ch in enumerate(args):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        args = args[:i]
+                        break
+            for dt, dims in _SHAPE_RE.findall(args):
+                out[kind] += _nbytes(dt, dims)
+            counts[kind] += 1
+            break
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def analytic_param_bytes(model: Model) -> int:
+    params = model.abstract_params()
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               n_micro: int = 8, overrides: dict | None = None):
+    """Lower + compile one (arch x shape x mesh) cell. Returns result dict."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    reason = inp.skip_reason(cfg, shape)
+    res = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "seq_len": shape.seq_len,
+           "global_batch": shape.global_batch}
+    if reason:
+        res["status"] = "skipped"
+        res["skip_reason"] = reason
+        return res
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        params_s = model.abstract_params()
+        specs = inp.input_specs(cfg, shape)
+        if shape.kind == "train":
+            # bf16 params (mixed precision) require an fp32 master copy
+            opt_cfg = optlib.OptConfig(
+                keep_master=cfg.param_dtype_str != "float32")
+            opt_s = jax.eval_shape(lambda p: optlib.init_opt_state(opt_cfg, p),
+                                   params_s)
+            nm = n_micro if shape.global_batch % (n_micro * (32 if multi_pod else 16)) == 0 else 1
+            _, sh = make_train_step(model, opt_cfg, mesh, multi_pod=multi_pod,
+                                    n_micro=nm)
+            jitted = sh["jit_for"](specs["batch"])
+            lowered = jitted.lower(params_s, opt_s, specs["batch"])
+        elif shape.kind == "prefill":
+            _, _, sh = make_serve_steps(model, mesh, multi_pod=multi_pod)
+            jitted = sh["jit_prefill"](specs["batch"])
+            lowered = jitted.lower(params_s, specs["batch"])
+        else:  # decode
+            shard_b = inp.batch_shardable(shape, multi_pod)
+            from repro.distributed import sharding as shlib
+            from repro.models import transformer
+            param_sh = shlib.resolve_tree(model.pspecs(), mesh, multi_pod)
+            cache_sh = shlib.resolve_tree(
+                model.cache_pspecs(multi_pod, shard_batch=shard_b), mesh,
+                multi_pod)
+            transformer.set_activation_sharding(None)
+            in_b = (jax.tree.map(
+                lambda x: shlib.batch_sharding(mesh, multi_pod, x.ndim),
+                specs["inputs"]) if shard_b else None)
+            jitted = jax.jit(model.decode_step,
+                             in_shardings=(param_sh, cache_sh, in_b, None),
+                             out_shardings=(cache_sh, None),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_s, specs["cache"], specs["inputs"],
+                                   specs["pos"])
+        res["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        res["compile_s"] = round(time.time() - t1, 1)
+
+    try:
+        ca = compiled.cost_analysis()
+        res["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float)) and
+                                k in ("flops", "bytes accessed",
+                                      "bytes accessed output", "optimal_seconds")}
+    except Exception as e:  # pragma: no cover
+        res["cost_analysis"] = {"error": str(e)}
+    try:
+        ma = compiled.memory_analysis()
+        res["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # pragma: no cover
+        res["memory_analysis"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    # Structural analysis with loop-trip multiplication (hlo_analysis.py):
+    # cost_analysis() counts scan bodies once, so it is kept only as a
+    # diagnostic; the roofline uses these numbers.
+    res["hlo_analysis_per_device"] = hlo_analysis.analyze(hlo)
+    res["hlo_lines"] = hlo.count("\n")
+    res["param_bytes_global"] = analytic_param_bytes(model)
+    res["status"] = "ok"
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run driver")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--n-micro", type=int, default=8)
+    args = ap.parse_args()
+
+    archs = list(list_configs()) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                fp = outdir / f"{tag}.json"
+                if fp.exists():
+                    print(f"[skip-cached] {tag}")
+                    continue
+                print(f"[lower+compile] {tag} ...", flush=True)
+                try:
+                    res = lower_cell(arch, shape, mp, n_micro=args.n_micro)
+                except Exception as e:
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "failed", "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                fp.write_text(json.dumps(res, indent=1))
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    ha = res.get("hlo_analysis_per_device", {})
+                    col = ha.get("collectives", {})
+                    extra = (f" flops/dev={ha.get('flops', 0):.3e}"
+                             f" coll/dev={col.get('total', 0):.3e}B"
+                             f" compile={res.get('compile_s')}s")
+                elif status == "failed":
+                    extra = " " + res["error"][:200]
+                print(f"  -> {status}{extra}", flush=True)
+    print(f"done; failures={failures}")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

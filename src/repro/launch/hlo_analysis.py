@@ -1,0 +1,299 @@
+"""Structural analysis of compiled (post-SPMD, per-device) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which silently
+undercounts scan-over-layers models by ~L x. This analyzer parses the
+optimized HLO module structurally instead:
+
+  * computations + a name->shape map per computation,
+  * call graph (while body/condition x trip count, fusions, calls,
+    conditionals) -> per-computation execution counts,
+  * dot FLOPs from operand shapes x execution count,
+  * bytes-accessed at fusion granularity (result + operands of top-level
+    instructions) x execution count,
+  * collective bytes (result size per op kind) x execution count.
+
+Trip counts come from the loop-condition constant (XLA lowers lax.scan to a
+canonical counted while; `wide.` double-buffered wrappers nest and multiply
+correctly through the call graph).
+
+Everything here is per-device (the module is one SPMD partition); multiply by
+chip count for global numbers.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+               "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+_ARR_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2|c64|c128)\[([\d,]*)\]")
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# Alias-only ops that move no data at runtime.
+NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+              "after-all", "partition-id", "replica-id", "iota"}
+# Control flow: operands/results are aliased through to the body (whose own
+# instructions are counted); charging the full carried tuple here would
+# overcount by the loop state size.
+CONTROL_FLOW = {"while", "conditional", "call", "custom-call"}
+# In-place slice updates: only the updated window moves.
+ALIASED_UPDATE = {"dynamic-update-slice", "scatter"}
+# Indexed reads: only the selected window moves.
+SLICE_READ = {"dynamic-slice", "gather"}
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARR_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def arr_dims(type_str: str):
+    m = _ARR_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)
+    is_fusion: bool = False
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT )?%?([\w.\-]+) = ")
+_COMP_HDR = re.compile(r"^(ENTRY )?%?([\w.\-]+) \(.*\)\s*->")
+
+
+def _parse_type_and_rest(s: str):
+    """Split '<type> <op>(<args>)...' -> (type_str, rest)."""
+    s = s.lstrip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[:i + 1], s[i + 1:].lstrip()
+        return s, ""
+    sp = s.find(" ")
+    return s[:sp], s[sp + 1:]
+
+
+def _parse_call_args(rest: str):
+    """From '<op>(<args>), attrs' -> (op, args_str, attrs_str)."""
+    par = rest.find("(")
+    if par < 0:
+        return rest.strip(), "", ""
+    op = rest[:par].strip()
+    depth = 0
+    for i in range(par, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return op, rest[par + 1:i], rest[i + 1:]
+    return op, rest[par + 1:], ""
+
+
+def parse_module(hlo: str):
+    comps = {}
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(name=m.group(2))
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1)
+        after = line[m.end():]
+        type_str, rest = _parse_type_and_rest(after)
+        op, args, attrs = _parse_call_args(rest)
+        operands = re.findall(r"%([\w.\-]+)", args)
+        cur.instrs.append(Instr(name, type_str, op, operands, line))
+        cur.shapes[name] = type_str
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound from the canonical counted-loop condition: the s32 constant
+    compared against the induction variable. Unknown -> 1 (+warn upstream)."""
+    consts = []
+    for ins in cond.instrs:
+        m = re.search(r"constant\((\d+)\)", ins.line)
+        if m and ins.type_str.startswith("s32"):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _call_edges(comp: Computation, comps):
+    """Yield (callee_name, multiplier) edges for one computation."""
+    for ins in comp.instrs:
+        line = ins.line
+        if ins.op == "while":
+            b = re.search(r"body=%?([\w.\-]+)", line)
+            c = re.search(r"condition=%?([\w.\-]+)", line)
+            trips = _trip_count(comps[c.group(1)]) if c else 1
+            if b:
+                yield b.group(1), trips
+            if c:
+                yield c.group(1), trips + 1
+        elif ins.op == "conditional":
+            for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)([^},]+)", line):
+                for name in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                    yield name, 1
+        else:
+            for attr in ("calls", "to_apply"):
+                m = re.search(rf"{attr}=%?([\w.\-]+)", line)
+                if m:
+                    yield m.group(1), 1
+
+
+def exec_counts(comps, entry):
+    """Per-computation execution count via fixed-point over the call DAG."""
+    counts = defaultdict(int)
+    counts[entry] = 1
+    # topological-ish: iterate until stable (call graph is a DAG)
+    order = list(comps)
+    for _ in range(len(order) + 2):
+        new = defaultdict(int)
+        new[entry] = 1
+        for cname, c in comps.items():
+            if counts[cname] == 0:
+                continue
+            for callee, mult in _call_edges(c, comps):
+                if callee in comps:
+                    new[callee] += counts[cname] * mult
+        if dict(new) == dict(counts):
+            break
+        counts = new
+    return counts
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_dims = arr_dims(ins.type_str)
+    if out_dims is None:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if not m or not ins.operands:
+        return 0.0
+    lhs_shape = comp.shapes.get(ins.operands[0])
+    if lhs_shape is None:
+        return 0.0
+    lhs_dims = arr_dims(lhs_shape)
+    if lhs_dims is None:
+        return 0.0
+    k = 1
+    for d in (int(x) for x in m.group(1).split(",") if x):
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * k
+
+
+def analyze(hlo: str):
+    """Returns per-device dict: flops, bytes_accessed, collectives{kind:
+    bytes, counts}, loops (diagnostic)."""
+    comps, entry = parse_module(hlo)
+    fusion_comps = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+            if m and ins.op == "fusion":
+                fusion_comps.add(m.group(1))
+    counts = exec_counts(comps, entry)
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    by_op = defaultdict(float)
+    coll = {k: 0.0 for k in COLLECTIVES}
+    coll_counts = {k: 0 for k in COLLECTIVES}
+    for cname, c in comps.items():
+        n = counts.get(cname, 0)
+        if n == 0:
+            continue
+        in_fusion = cname in fusion_comps
+        for ins in c.instrs:
+            if ins.op in ("dot", "convolution"):
+                flops += n * _dot_flops(ins, c)
+            if in_fusion:
+                continue  # traffic accounted at the fusion call site
+            if ins.op in NO_TRAFFIC or ins.op in CONTROL_FLOW:
+                continue
+            if ins.op.endswith("-done"):
+                continue  # async pair: count the -start only
+            b = type_bytes(ins.type_str)
+            op_sizes = [type_bytes(c.shapes.get(o, "")) for o in ins.operands]
+            if ins.op in ALIASED_UPDATE:
+                # in-place update: traffic = the update slice, not the full
+                # operand/result buffer (XLA aliases the big buffer)
+                upd = op_sizes[1] if len(op_sizes) > 1 else 0
+                eff = 2 * upd
+            elif ins.op in SLICE_READ:
+                eff = 2 * b       # read the slice + write the result
+            elif ins.op == "fusion":
+                # Streaming model: an elementwise/slicing (kLoop) fusion
+                # touches at most O(result) bytes per operand stream — an
+                # operand larger than the result is being windowed (dynamic
+                # slice / in-place update), not fully read. Reductions are
+                # the exception: they legitimately read more than they
+                # write, so reduce-rooted fusions charge full operands.
+                if "reduce" in ins.name:
+                    eff = b + sum(op_sizes)
+                elif "dynamic-update-slice" in ins.name and op_sizes \
+                        and b >= max(op_sizes):
+                    eff = 2 * (sum(op_sizes) - max(op_sizes))  # aliased root
+                else:
+                    eff = b + sum(min(s, b) for s in op_sizes)
+            else:
+                eff = b + sum(op_sizes)
+            bytes_accessed += n * eff
+            by_op[ins.op] += n * eff
+            base_op = ins.op.removesuffix("-start")
+            if base_op in COLLECTIVES:
+                coll[base_op] += n * b
+                coll_counts[base_op] += n
+    total = sum(coll.values())
+    # ring-algorithm wire bytes: all-reduce moves ~2x its payload
+    wire = total + coll["all-reduce"]
+    top_ops = dict(sorted(by_op.items(), key=lambda kv: -kv[1])[:12])
+    return {"flops": flops, "bytes_accessed": bytes_accessed,
+            "bytes_by_op_top": top_ops,
+            "collectives": {**{k: v for k, v in coll.items()},
+                            "counts": coll_counts,
+                            "total": total, "wire_bytes": wire}}

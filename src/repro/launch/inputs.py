@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns the exact pytree the corresponding step
+function is lowered against — weak-type-correct, shardable, zero allocation.
+Modality frontends are stubs per the assignment: [audio]/[vlm] archs receive
+precomputed frame/patch embeddings of the backbone width.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    """Cells that are skipped by design (documented in DESIGN.md §4)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return ("full-attention arch: 500k context needs sub-quadratic "
+                "attention (run only for ssm/hybrid)")
+    return None
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.family == "encdec":
+        es = max(s // cfg.enc_seq_ratio, 1)
+        batch["enc_embeds"] = SDS((b, es, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    elif cfg.embed_input:
+        batch["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    batch["labels"] = SDS((b, s), jnp.int32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    batch = train_batch_specs(cfg, shape)
+    batch.pop("labels")
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache_specs, inputs_specs, pos_spec) for one decode step over a
+    populated cache of length shape.seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    from repro.models.model import Model
+    model = Model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    if cfg.embed_input:
+        inputs = {"embeds": SDS((b, 1, cfg.d_model), jnp.bfloat16)}
+    else:
+        inputs = {"tokens": SDS((b, 1), jnp.int32)}
+    return cache, inputs, SDS((), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """The full spec bundle for a cell: dict with step kind + arg specs."""
+    if shape.kind == "train":
+        return {"kind": "train", "batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"kind": "prefill", "batch": prefill_batch_specs(cfg, shape)}
+    cache, inputs, pos = decode_input_specs(cfg, shape)
+    return {"kind": "decode", "cache": cache, "inputs": inputs, "pos": pos}
+
+
+def batch_shardable(shape: ShapeConfig, multi_pod: bool) -> bool:
+    dp = 32 if multi_pod else 16
+    return shape.global_batch % dp == 0

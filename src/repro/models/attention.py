@@ -1,0 +1,273 @@
+"""Attention: GQA (+qk-norm, RoPE/M-RoPE) and MLA, with a memory-bounded
+chunked flash implementation in pure jnp.
+
+The chunked path (lax.scan over KV blocks with online softmax) is the
+XLA-compiled implementation used by the dry-run — it never materializes the
+full (S, S) score matrix, which is what makes the 32k-prefill shapes fit
+HBM. ``repro.kernels.flash_attention`` provides the Pallas TPU kernel with
+the same semantics (validated against naive attention in tests); flip
+``use_pallas`` on real TPUs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import FSDP, TP, apply_mrope, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+# Launcher-installed NamedSharding for gathered K/V under sequence
+# parallelism: (B, S, KV, dh) with batch on the data axes and S/KV/dh
+# replicated. With activations S-sharded (SP), slicing KV chunks out of an
+# S-sharded tensor makes XLA assemble every chunk with ring
+# collective-permutes (O(layers x chunks x shards) tiny collectives);
+# gathering K/V once per layer — cheap for GQA — replaces them with one
+# all-gather (Megatron-SP schedule). Enabled per-config via cfg.gather_kv.
+_KV_GATHER_SHARDING = [None]
+
+
+def set_kv_gather_sharding(sharding):
+    _KV_GATHER_SHARDING[0] = sharding
+
+
+def _maybe_gather_kv(k, v, cfg):
+    sh = _KV_GATHER_SHARDING[0]
+    if sh is None or not getattr(cfg, "gather_kv", False):
+        return k, v
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = P(sh.spec[0], *([None] * (k.ndim - 1)))
+    ns = NamedSharding(sh.mesh, spec)
+    return (jax.lax.with_sharding_constraint(k, ns),
+            jax.lax.with_sharding_constraint(v, ns))
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (chunked online softmax) — pure jnp
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0, chunk_kv: int = 1024):
+    """q: (B, Sq, H, dh), k/v: (B, Skv, KV, dh) with H % KV == 0.
+
+    ``q_offset``: absolute position of q[0] (decode: Skv - Sq). Scans KV in
+    chunks, carrying (m, l, acc) — the online-softmax running max / sum /
+    accumulator. Memory: O(Sq * chunk_kv) per head instead of O(Sq * Skv).
+
+    Decode (Sq == 1) takes the single-einsum path: the KV cache is
+    sequence-sharded under SP, and the chunk-scan's (S -> nck, ck) reshape
+    would split the sharded dim (XLA falls back to full rematerialization of
+    the cache). Contracting S in one einsum lets SPMD keep the cache sharded
+    and emit a partial-softmax all-reduce instead.
+    """
+    b, sq, h, dh = q.shape
+    if sq == 1:
+        return naive_attention(q, k, v, causal=causal, q_offset=q_offset)
+    skv, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                 # may differ from dh (MLA)
+    g = h // kv
+    qr = q.reshape(b, sq, kv, g, dh)
+    scale = dh ** -0.5
+    nck = max(skv // chunk_kv, 1)
+    ck = skv // nck
+    kc = k.reshape(b, nck, ck, kv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nck, ck, kv, dv).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qr, kb).astype(jnp.float32) * scale
+        if causal:
+            k_pos = ci * ck + jnp.arange(ck)
+            mask = q_pos[:, None] >= k_pos[None, :]            # (Sq, ck)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])                      # fp32
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr.astype(acc.dtype)[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kv, g, dv), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(nck)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.reshape(b, sq, h, dv)
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0):
+    """Reference O(S^2)-memory attention (oracle for flash + Pallas kernel)."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    qr = q.reshape(b, sq, kv, h // kv, dh)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qr, k) * dh ** -0.5
+    if causal:
+        q_pos = q_offset + jnp.arange(sq)
+        mask = q_pos[:, None] >= jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v.dtype)
+    return jnp.einsum("bqkgc,bckd->bqkgd", p, v).reshape(b, sq, h, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    ks = jax.random.split(key, 6)
+    p = {"wq": layers.dense_init(ks[0], (d, h * dh), cfg.param_dtype),
+         "wk": layers.dense_init(ks[1], (d, kv * dh), cfg.param_dtype),
+         "wv": layers.dense_init(ks[2], (d, kv * dh), cfg.param_dtype),
+         "wo": layers.dense_init(ks[3], (h * dh, d), cfg.param_dtype)}
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rms(ks[4], dh, cfg.param_dtype)
+        p["k_norm"] = layers.init_rms(ks[5], dh, cfg.param_dtype)
+    return p
+
+
+def spec_gqa(cfg):
+    p = {"wq": P(FSDP, TP), "wk": P(FSDP, TP), "wv": P(FSDP, TP),
+         "wo": P(TP, FSDP)}
+    if cfg.qk_norm:
+        p["q_norm"] = P(None)
+        p["k_norm"] = P(None)
+    return p
+
+
+def gqa_project_qkv(p, x, cfg, positions):
+    """x: (B, S, D) -> q (B,S,H,dh), k/v (B,S,KV,dh) with rope applied."""
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    cd = cfg.compute_dtype
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(cd)).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(cd)).reshape(b, s, kv, dh)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(cd)).reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(p, x, cfg, positions, *, causal=True, kv_override=None,
+              q_offset=0):
+    """Full-sequence GQA. ``kv_override=(k, v)`` serves cross-attention and
+    decode-from-cache."""
+    b, s, _ = x.shape
+    cd = cfg.compute_dtype
+    q, k, v = gqa_project_qkv(p, x, cfg, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    k, v = _maybe_gather_kv(k, v, cfg)
+    out = flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                          chunk_kv=cfg.attn_chunk_kv)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1),
+                      p["wo"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent-compressed KV with decoupled RoPE
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rph, vdim = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    kvl = cfg.kv_lora
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": layers.dense_init(ks[0], (d, h * (nope + rph)), cfg.param_dtype),
+        "wkv_a": layers.dense_init(ks[1], (d, kvl + rph), cfg.param_dtype),
+        "kv_norm": layers.init_rms(ks[2], kvl, cfg.param_dtype),
+        "wkv_b": layers.dense_init(ks[3], (kvl, h * (nope + vdim)), cfg.param_dtype),
+        "wo": layers.dense_init(ks[4], (h * vdim, d), cfg.param_dtype),
+    }
+
+
+def spec_mla(cfg):
+    return {"wq": P(FSDP, TP), "wkv_a": P(FSDP, None), "kv_norm": P(None),
+            "wkv_b": P(FSDP, TP), "wo": P(TP, FSDP)}
+
+
+def mla_latent(p, x, cfg, positions):
+    """Compress x into the MLA latent cache: (c_kv (B,S,kvl), k_rope (B,S,1,rph))."""
+    cd = cfg.compute_dtype
+    kvl, rph = cfg.kv_lora, cfg.mla_rope_dim
+    a = jnp.einsum("bsd,de->bse", x, p["wkv_a"].astype(cd))
+    c_kv = rms_norm(a[..., :kvl], p["kv_norm"])
+    k_rope = apply_rope(a[..., kvl:][..., None, :], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_attend(p, x, cfg, positions, c_kv, k_rope, *, causal=True, q_offset=0):
+    """Attention over the latent cache (expanded per-head K/V)."""
+    b, s, _ = x.shape
+    cd = cfg.compute_dtype
+    h = cfg.n_heads
+    nope, rph, vdim = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(cd)).reshape(b, s, h, nope + rph)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kvb = jnp.einsum("bsl,le->bse", c_kv, p["wkv_b"].astype(cd))
+    kvb = kvb.reshape(b, c_kv.shape[1], h, nope + vdim)
+    k_nope, v = kvb[..., :nope], kvb[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (rph,))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k, v = _maybe_gather_kv(k, v, cfg)
+    out = flash_attention(qf, k, v, causal=causal, q_offset=q_offset,
+                          chunk_kv=cfg.attn_chunk_kv)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"].astype(cd))
+
+
+def mla_apply(p, x, cfg, positions, *, causal=True):
+    c_kv, k_rope = mla_latent(p, x, cfg, positions)
+    return mla_attend(p, x, cfg, positions, c_kv, k_rope, causal=causal)
+
+
+def mla_decode_absorbed(p, x, cfg, positions, c_kv, k_rope, pos):
+    """Decode-time MLA with the w_kv_b absorption trick (DeepSeek-V2 §2.1.2
+    serving form): attention runs directly in the latent space, so the cache
+    stays (S, kv_lora + rope_dim) and is never expanded to per-head K/V.
+
+    x: (B, 1, D); c_kv: (B, S, kvl); k_rope: (B, S, 1, rph); pos: scalar.
+    """
+    b, s1, _ = x.shape
+    cd = cfg.compute_dtype
+    h = cfg.n_heads
+    nope, rph, vdim = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    kvl = cfg.kv_lora
+    smax = c_kv.shape[1]
+
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(cd)).reshape(b, s1, h, nope + rph)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    wkv_b = p["wkv_b"].astype(cd).reshape(kvl, h, nope + vdim)
+    wk_b, wv_b = wkv_b[..., :nope], wkv_b[..., nope:]
+    # absorb K expansion into the query
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wk_b)        # (B,1,H,kvl)
+    scores = (jnp.einsum("bshl,btl->bhst", q_lat, c_kv) +
+              jnp.einsum("bshr,btr->bhst", q_rope, k_rope[:, :, 0, :]))
+    scores = scores * (nope + rph) ** -0.5
+    mask = jnp.arange(smax)[None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, NEG_INF)
+    attn = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(cd)
+    ctx_lat = jnp.einsum("bhst,btl->bshl", attn, c_kv)         # (B,1,H,kvl)
+    out = jnp.einsum("bshl,lhv->bshv", ctx_lat, wv_b)          # (B,1,H,v)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s1, h * vdim),
+                      p["wo"].astype(cd))

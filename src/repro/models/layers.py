@@ -1,0 +1,119 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embeddings.
+
+Parameters are plain nested dicts of jnp arrays. Every init_* function has a
+matching spec_* function returning the same tree of logical PartitionSpecs
+(see repro.distributed.sharding for the logical-axis -> mesh-axis rules).
+Compute runs in ``cfg.compute_dtype`` (bf16), params live in
+``cfg.param_dtype`` (fp32 by default, the optimizer's master copy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# Logical axis names (mapped to mesh axes in distributed/sharding.py):
+#   "fsdp"  — parameter shards gathered per-layer (data axis)
+#   "tp"    — tensor-parallel dimension (model axis)
+#   "exp"   — expert dimension (folded onto model axis)
+#   "layers"— scan-stacked layer dimension (never sharded)
+FSDP, TP, EXP = "fsdp", "tp", "exp"
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def init_rms(key, d, dtype):
+    return jnp.ones((d,), dtype)
+
+
+def spec_rms():
+    return P(None)
+
+
+def dense_init(key, shape, dtype, in_axis=0):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dh: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                         # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Multimodal RoPE (Qwen2-VL): head_dim/2 frequency slots are split into
+    ``sections`` (t, h, w) groups, each rotated by its own position stream.
+
+    x: (B, S, H, dh); positions3: (3, B, S) int32; sum(sections) == dh // 2.
+    """
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    freqs = rope_freqs(dh, theta)                          # (dh/2,)
+    # Select the position stream per frequency slot.
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=dh // 2)       # (dh/2,)
+    ang_all = positions3[..., None].astype(jnp.float32) * freqs  # (3, B, S, dh/2)
+    onehot = jax.nn.one_hot(sec_id, 3, dtype=jnp.float32)  # (dh/2, 3)
+    ang = jnp.einsum("tbsf,ft->bsf", ang_all, onehot)      # (B, S, dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, (d, f), dtype),
+            "wg": dense_init(k2, (d, f), dtype),
+            "wo": dense_init(k3, (f, d), dtype, in_axis=0)}
+
+
+def spec_mlp():
+    return {"wi": P(FSDP, TP), "wg": P(FSDP, TP), "wo": P(TP, FSDP)}
+
+
+def mlp_apply(p, x, compute_dtype):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(compute_dtype))
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(compute_dtype))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab, d, dtype):
+    return {"tok": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def spec_embed():
+    return {"tok": P(TP, FSDP)}
+
+
+def embed_apply(p, tokens, compute_dtype):
+    return jnp.take(p["tok"].astype(compute_dtype), tokens, axis=0)

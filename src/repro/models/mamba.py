@@ -1,0 +1,255 @@
+"""Mamba SSM blocks: Mamba1 (selective scan) and Mamba2 (SSD), TPU-native.
+
+Hardware adaptation (DESIGN.md §2): the reference CUDA kernels fuse the
+recurrence into a single-SM scan with shared-memory staging. On TPU we use:
+
+  * Mamba1 — the recurrence ``h_t = a_t * h_{t-1} + b_t`` is a first-order
+    linear recurrence, i.e. associative under (a, b) composition, so it maps
+    onto ``jax.lax.associative_scan`` (log-depth, fully vectorized on the
+    VPU). Sequences are processed in chunks (outer ``lax.scan`` carrying the
+    boundary state) to bound the materialized (B, Q, Di, N) working set —
+    the TPU analogue of the CUDA kernel's tiling. A sequential inner path
+    exists for validation (`ssm_scan="sequential"`).
+  * Mamba2 — the SSD chunked matmul formulation: scalar-per-head decay makes
+    the intra-chunk term a (Q, Q) masked-decay attention-like matmul (MXU)
+    and the inter-chunk term a tiny state scan.
+
+Decode carries (conv_state (B, d_conv-1, Di), ssm_state (B, Di, N) or
+(B, H, N, P)) — O(1) in sequence length, which is why the ssm/hybrid archs
+are the ones that run the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import FSDP, TP
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+def init_mamba1(key, cfg):
+    d = cfg.d_model
+    di = cfg.expand * d
+    n, dtr, dc = cfg.ssm_state, max(d // 16, 1), cfg.d_conv
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, 2 * di), cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) / jnp.sqrt(dc)).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((di,), cfg.param_dtype),
+        "x_proj": layers.dense_init(ks[2], (di, dtr + 2 * n), cfg.param_dtype),
+        "dt_proj": layers.dense_init(ks[3], (dtr, di), cfg.param_dtype),
+        "dt_bias": jnp.zeros((di,), cfg.param_dtype),
+        "a_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                          (di, n))).astype(jnp.float32),
+        "d_skip": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": layers.dense_init(ks[4], (di, d), cfg.param_dtype),
+    }
+
+
+def spec_mamba1(cfg):
+    return {"in_proj": P(FSDP, TP), "conv_w": P(None, TP), "conv_b": P(TP),
+            "x_proj": P(TP, None), "dt_proj": P(None, TP), "dt_bias": P(TP),
+            "a_log": P(TP, None), "d_skip": P(TP), "out_proj": P(TP, FSDP)}
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """Depthwise causal conv over seq. x: (B, S, Di), w: (dc, Di)."""
+    dc = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros(x.shape[:1] + (dc - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(dc))
+    new_state = xp[:, -(dc - 1):] if dc > 1 else None
+    return jax.nn.silu(out + b.astype(x.dtype)), new_state
+
+
+def _ssm_params(p, xc, cfg):
+    """Input-dependent (dt, B, C) projections. xc: (B, S, Di)."""
+    cd = cfg.compute_dtype
+    n = cfg.ssm_state
+    dtr = p["dt_proj"].shape[0]
+    proj = jnp.einsum("bsi,ir->bsr", xc, p["x_proj"].astype(cd))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", proj[..., :dtr], p["dt_proj"].astype(cd)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                     # (B,S,Di)
+    b_mat = proj[..., dtr:dtr + n].astype(jnp.float32)          # (B,S,N)
+    c_mat = proj[..., dtr + n:].astype(jnp.float32)
+    return dt, b_mat, c_mat
+
+
+def selective_scan(dt, b_mat, c_mat, xc, a_log, h0=None, *, chunk: int = 128,
+                   mode: str = "associative"):
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t.
+
+    dt: (B,S,Di) fp32, b/c: (B,S,N), xc: (B,S,Di), a_log: (Di,N).
+    Returns (y (B,S,Di), h_final (B,Di,N)).
+    """
+    bsz, s, di = dt.shape
+    n = b_mat.shape[-1]
+    a = -jnp.exp(a_log)                                          # (Di,N)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    nch = max(s // chunk, 1)
+    q = s // nch
+
+    def chunk_step(h, xs):
+        dt_c, b_c, c_c, x_c = xs                                 # (B,Q,...)
+        decay = jnp.exp(dt_c[..., None] * a)                     # (B,Q,Di,N)
+        inp = (dt_c * x_c.astype(jnp.float32))[..., None] * b_c[:, :, None, :]
+        if mode == "associative":
+            def comb(l, r):
+                return (l[0] * r[0], r[0] * l[1] + r[1])
+            aa, bb = jax.lax.associative_scan(comb, (decay, inp), axis=1)
+            hs = aa * h[:, None] + bb                            # (B,Q,Di,N)
+        else:
+            def step(hh, z):
+                d_, i_ = z
+                hh = d_ * hh + i_
+                return hh, hh
+            _, hs = jax.lax.scan(step, h,
+                                 (decay.swapaxes(0, 1), inp.swapaxes(0, 1)))
+            hs = hs.swapaxes(0, 1)
+        y = jnp.einsum("bqin,bqn->bqi", hs, c_c)
+        return hs[:, -1], y
+
+    dt_r = dt.reshape(bsz, nch, q, di).swapaxes(0, 1)
+    b_r = b_mat.reshape(bsz, nch, q, n).swapaxes(0, 1)
+    c_r = c_mat.reshape(bsz, nch, q, n).swapaxes(0, 1)
+    x_r = xc.reshape(bsz, nch, q, di).swapaxes(0, 1)
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (dt_r, b_r, c_r, x_r))
+    y = ys.swapaxes(0, 1).reshape(bsz, s, di)
+    return y, h_fin
+
+
+def mamba1_apply(p, x, cfg, *, state=None):
+    """x: (B, S, D) -> (B, S, D). ``state=(conv_state, ssm_state)`` enables
+    O(1) decode; pass state=None for full-sequence training."""
+    cd = cfg.compute_dtype
+    di = cfg.expand * cfg.d_model
+    zx = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    xin, z = zx[..., :di], zx[..., di:]
+    conv_state = state[0] if state is not None else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    dt, b_mat, c_mat = _ssm_params(p, xc, cfg)
+    h0 = state[1] if state is not None else None
+    y, h_fin = selective_scan(dt, b_mat, c_mat, xc, p["a_log"], h0,
+                              chunk=cfg.ssm_chunk, mode=cfg.ssm_scan)
+    y = y.astype(cd) + xc * p["d_skip"].astype(cd)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cd))
+    return out, (new_conv, h_fin)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    di = cfg.expand * d
+    n, g, hd = cfg.ssm_state, cfg.n_groups, cfg.ssm_headdim
+    nh = di // hd
+    dc = cfg.d_conv
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (di), x (di), B (g*n), C (g*n), dt (nh)]
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, 2 * di + 2 * g * n + nh), cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di + 2 * g * n)) / jnp.sqrt(dc)).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((di + 2 * g * n,), cfg.param_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), cfg.param_dtype),
+        "norm": layers.init_rms(ks[2], di, cfg.param_dtype),
+        "out_proj": layers.dense_init(ks[3], (di, d), cfg.param_dtype),
+    }
+
+
+def spec_mamba2(cfg):
+    return {"in_proj": P(FSDP, TP), "conv_w": P(None, TP), "conv_b": P(TP),
+            "a_log": P(None), "dt_bias": P(None), "d_skip": P(None),
+            "norm": P(None), "out_proj": P(TP, FSDP)}
+
+
+def _segsum(x):
+    """(..., Q) -> (..., Q, Q) lower-tri cumulative sums: out[t,s] = sum_{s<i<=t} x_i."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a, b_mat, c_mat, h0, chunk: int):
+    """SSD forward. xh: (B,S,H,P), dt: (B,S,H) fp32, a: (H,) negative,
+    b/c: (B,S,G,N). Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    bsz, s, h, p_dim = xh.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    nch = max(s // chunk, 1)
+    q = s // nch
+
+    def rc(t):  # (B,S,...) -> (nch, B, Q, ...)
+        return t.reshape(bsz, nch, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xs, dts = rc(xh), rc(dt)
+    bs, cs = rc(b_mat), rc(c_mat)
+
+    def chunk_step(hprev, z):
+        x_c, dt_c, b_c, c_c = z                       # (B,Q,H,P), (B,Q,H), (B,Q,G,N)
+        da = dt_c * a                                  # (B,Q,H)
+        # intra-chunk: decay matrix L (B,H,Q,Q)
+        l = jnp.exp(_segsum(da.transpose(0, 2, 1)))    # (B,H,Q,Q)
+        bh = jnp.repeat(b_c, rep, axis=2)              # (B,Q,H,N)
+        ch = jnp.repeat(c_c, rep, axis=2)
+        scores = jnp.einsum("bqhn,bshn->bhqs", ch, bh) * l
+        xdt = x_c * dt_c[..., None]                    # (B,Q,H,P)
+        y_intra = jnp.einsum("bhqs,bshp->bqhp", scores, xdt)
+        # inter-chunk: contribution of carried state
+        cum = jnp.cumsum(da, axis=1)                   # (B,Q,H)
+        y_inter = jnp.einsum("bqhn,bhnp->bqhp", ch, hprev) * jnp.exp(cum)[..., None]
+        # state update
+        decay_tail = jnp.exp(cum[:, -1:, :] - cum)     # (B,Q,H)
+        h_new = jnp.exp(cum[:, -1])[..., None, None] * hprev + \
+            jnp.einsum("bqhn,bqhp->bhnp", bh * decay_tail[..., None], xdt)
+        return h_new, y_intra + y_inter
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (xs, dts, bs, cs))
+    return ys.swapaxes(0, 1).reshape(bsz, s, h, p_dim), h_fin
+
+
+def mamba2_apply(p, x, cfg, *, state=None):
+    """Mamba2/SSD block. x: (B, S, D)."""
+    cd = cfg.compute_dtype
+    d = cfg.d_model
+    di = cfg.expand * d
+    g, n, hd = cfg.n_groups, cfg.ssm_state, cfg.ssm_headdim
+    nh = di // hd
+    bsz, s, _ = x.shape
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * n]
+    dt_in = zxbcdt[..., -nh:]
+    conv_state = state[0] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xh = xbc[..., :di].reshape(bsz, s, nh, hd)
+    b_mat = xbc[..., di:di + g * n].reshape(bsz, s, g, n).astype(jnp.float32)
+    c_mat = xbc[..., di + g * n:].reshape(bsz, s, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    h0 = state[1] if state is not None else jnp.zeros((bsz, nh, n, hd), jnp.float32)
+    y, h_fin = ssd_chunked(xh.astype(jnp.float32), dt, a, b_mat, c_mat, h0,
+                           chunk=cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(cd)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm"])
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cd)), (new_conv, h_fin)

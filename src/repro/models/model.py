@@ -1,0 +1,424 @@
+"""Top-level model API: build, shard, train-forward, loss, prefill, decode.
+
+``Model`` wraps a ModelConfig with pure functions:
+  init(key) -> params                  (jit/eval_shape friendly)
+  pspecs() -> matching PartitionSpec tree
+  forward(params, batch) -> (hidden, aux_loss)
+  loss(params, batch) -> scalar        (chunked-vocab CE + MoE aux)
+  init_cache(batch_size, max_seq) -> cache
+  prefill(params, batch) -> (cache, hidden_last)
+  decode_step(params, cache, inputs, pos) -> (cache, logits)
+
+Decode caches are O(S) KV (attention archs), O(1) latent (MLA) or O(1) state
+(SSM/hybrid) — the per-family difference the roofline table surfaces.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, mamba, moe, transformer
+from repro.models.layers import FSDP, TP
+from repro.models.transformer import (apply_decoder_stack, apply_encdec_stack,
+                                      apply_hybrid_stack, apply_ssm_stack,
+                                      hybrid_attn_sites, init_decoder_stack,
+                                      init_encdec_stack, init_hybrid_stack,
+                                      init_ssm_stack, spec_decoder_stack,
+                                      spec_encdec_stack, spec_hybrid_stack,
+                                      spec_ssm_stack, stack_spec)
+
+STACKS = {
+    "dense": (init_decoder_stack, spec_decoder_stack),
+    "moe": (init_decoder_stack, spec_decoder_stack),
+    "ssm": (init_ssm_stack, spec_ssm_stack),
+    "hybrid": (init_hybrid_stack, spec_hybrid_stack),
+    "encdec": (init_encdec_stack, spec_encdec_stack),
+}
+
+
+def _attn_decode_layer(lp, x, cfg, pos, pos_arr, cache_slices, *, use_moe):
+    """One decoder layer at decode time: update cache at ``pos``, attend over
+    the populated prefix, apply FFN. cache_slices: (c_kv, k_rope) for MLA or
+    (k, v) for GQA. Returns (x, new_cache_slices)."""
+    cd = cfg.compute_dtype
+    h = layers.rms_norm(x, lp["ln1"])
+    if cfg.mla:
+        c_kv_l, k_rope_l = cache_slices
+        c_new, kr_new = attention.mla_latent(lp["attn"], h, cfg, pos_arr)
+        c_kv_l = jax.lax.dynamic_update_slice_in_dim(c_kv_l, c_new.astype(c_kv_l.dtype), pos, 1)
+        k_rope_l = jax.lax.dynamic_update_slice_in_dim(k_rope_l, kr_new.astype(k_rope_l.dtype), pos, 1)
+        a = attention.mla_decode_absorbed(lp["attn"], h, cfg, pos_arr,
+                                          c_kv_l, k_rope_l, pos)
+        new_cache = (c_kv_l, k_rope_l)
+    else:
+        k_l, v_l = cache_slices
+        q, k, v = attention.gqa_project_qkv(lp["attn"], h, cfg, pos_arr)
+        k_l = jax.lax.dynamic_update_slice_in_dim(k_l, k.astype(k_l.dtype), pos, 1)
+        v_l = jax.lax.dynamic_update_slice_in_dim(v_l, v.astype(v_l.dtype), pos, 1)
+        o = attention.flash_attention(q, k_l, v_l, causal=True, q_offset=pos,
+                                      chunk_kv=cfg.attn_chunk_kv)
+        a = jnp.einsum("bse,ed->bsd", o.reshape(*h.shape[:2], -1),
+                       lp["attn"]["wo"].astype(cd))
+        new_cache = (k_l, v_l)
+    x = x + a
+    h = layers.rms_norm(x, lp["ln2"])
+    if use_moe:
+        f, _ = moe.moe_apply(lp["moe"], h, cfg)
+    else:
+        f = layers.mlp_apply(lp["mlp"], h, cd)
+    return x + f, new_cache
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params ------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        init_stack = STACKS[cfg.family][0]
+        p = {"stack": init_stack(k2, cfg),
+             "final_ln": layers.init_rms(k3, cfg.d_model, cfg.param_dtype)}
+        p["embed"] = layers.init_embed(k1, cfg.vocab_padded, cfg.d_model,
+                                       cfg.param_dtype)
+        if not cfg.tie_embeddings:
+            p["out"] = layers.dense_init(k4, (cfg.d_model, cfg.vocab_padded),
+                                         cfg.param_dtype)
+        return p
+
+    def pspecs(self):
+        cfg = self.cfg
+        spec_stack = STACKS[cfg.family][1]
+        p = {"stack": spec_stack(cfg), "final_ln": layers.spec_rms(),
+             "embed": layers.spec_embed()}
+        if not cfg.tie_embeddings:
+            p["out"] = P(FSDP, TP)
+        return p
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # -- forward -----------------------------------------------------------
+    def _positions(self, b, s, offset=0):
+        pos = offset + jnp.arange(s, dtype=jnp.int32)[None, :]
+        pos = jnp.broadcast_to(pos, (b, s))
+        if self.cfg.mrope:  # text-degenerate M-RoPE: all three streams equal
+            return jnp.broadcast_to(pos[None], (3, b, s))
+        return pos
+
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        if cfg.embed_input and "embeds" in batch:
+            return batch["embeds"].astype(cfg.compute_dtype)
+        return layers.embed_apply(params["embed"], batch["tokens"],
+                                  cfg.compute_dtype)
+
+    def forward(self, params, batch):
+        """-> (hidden (B, S, D), aux_loss)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_x = batch["enc_embeds"].astype(cfg.compute_dtype)
+            dec_x = layers.embed_apply(params["embed"], batch["tokens"],
+                                       cfg.compute_dtype)
+            eb, es = enc_x.shape[:2]
+            db, ds = dec_x.shape[:2]
+            h, aux = apply_encdec_stack(params["stack"], enc_x, dec_x, cfg,
+                                        self._positions(eb, es),
+                                        self._positions(db, ds))
+        else:
+            x = self._embed_in(params, batch)
+            b, s = x.shape[:2]
+            pos = self._positions(b, s)
+            if cfg.family in ("dense", "moe"):
+                h, aux = apply_decoder_stack(params["stack"], x, cfg, pos)
+            elif cfg.family == "ssm":
+                h, aux = apply_ssm_stack(params["stack"], x, cfg, pos)
+            elif cfg.family == "hybrid":
+                h, aux = apply_hybrid_stack(params["stack"], x, cfg, pos)
+            else:
+                raise ValueError(cfg.family)
+        return layers.rms_norm(h, params["final_ln"]), aux
+
+    def _unembed(self, params):
+        cfg = self.cfg
+        w = params["embed"]["tok"].T if cfg.tie_embeddings else params["out"]
+        return w.astype(cfg.compute_dtype)          # (D, V_padded)
+
+    def _mask_pad_vocab(self, logits):
+        cfg = self.cfg
+        if cfg.vocab_padded == cfg.vocab:
+            return logits
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        return logits - pad.astype(logits.dtype) * 1e9
+
+    def logits(self, params, hidden):
+        return self._mask_pad_vocab(
+            jnp.einsum("bsd,dv->bsv", hidden, self._unembed(params)))
+
+    def loss(self, params, batch):
+        """Chunked-vocab causal-LM cross entropy (never materializes the full
+        (T, V) logit tensor — scan over token blocks with remat)."""
+        cfg = self.cfg
+        hidden, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        b, s, d = hidden.shape
+        t = b * s
+        h2 = hidden.reshape(t, d)
+        l2 = labels.reshape(t)
+        w = self._unembed(params)
+        chunk = min(cfg.loss_chunk, t)
+        n_chunks = max(t // chunk, 1)
+        h3 = h2[: n_chunks * chunk].reshape(n_chunks, chunk, d)
+        l3 = l2[: n_chunks * chunk].reshape(n_chunks, chunk)
+
+        def block(carry, xs):
+            hc, lc = xs
+            logits = self._mask_pad_vocab((hc @ w).astype(jnp.float32))
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+            mask = lc >= 0
+            return carry + jnp.sum((logz - gold) * mask), None
+
+        total, _ = jax.lax.scan(jax.checkpoint(block), jnp.float32(0.0),
+                                (h3, l3))
+        n_tok = jnp.maximum(jnp.sum(l2 >= 0), 1)
+        ce = total / n_tok
+        if cfg.n_experts:
+            ce = ce + cfg.aux_loss_weight * aux / max(cfg.n_layers, 1)
+        return ce
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, b: int, max_seq: int, enc_seq: int = 0):
+        cfg = self.cfg
+        cd = cfg.compute_dtype
+        l = cfg.n_layers
+        if cfg.family in ("dense", "moe"):
+            if cfg.mla:
+                return {
+                    "c_kv": jnp.zeros((l, b, max_seq, cfg.kv_lora), cd),
+                    "k_rope": jnp.zeros((l, b, max_seq, 1, cfg.mla_rope_dim), cd)}
+            return {"k": jnp.zeros((l, b, max_seq, cfg.n_kv, cfg.d_head), cd),
+                    "v": jnp.zeros((l, b, max_seq, cfg.n_kv, cfg.d_head), cd)}
+        if cfg.family == "ssm":
+            di = cfg.d_inner
+            return {"conv": jnp.zeros((l, b, cfg.d_conv - 1, di), cd),
+                    "h": jnp.zeros((l, b, di, cfg.ssm_state), jnp.float32)}
+        if cfg.family == "hybrid":
+            di = cfg.d_inner
+            nh = di // cfg.ssm_headdim
+            n_sites = len(hybrid_attn_sites(cfg))
+            cw = di + 2 * cfg.n_groups * cfg.ssm_state
+            return {"conv": jnp.zeros((l, b, cfg.d_conv - 1, cw), cd),
+                    "h": jnp.zeros((l, b, nh, cfg.ssm_state, cfg.ssm_headdim),
+                                   jnp.float32),
+                    "k": jnp.zeros((n_sites, b, max_seq, cfg.n_kv, cfg.d_head), cd),
+                    "v": jnp.zeros((n_sites, b, max_seq, cfg.n_kv, cfg.d_head), cd)}
+        if cfg.family == "encdec":
+            es = enc_seq or max(max_seq // cfg.enc_seq_ratio, 1)
+            return {"k": jnp.zeros((l, b, max_seq, cfg.n_kv, cfg.d_head), cd),
+                    "v": jnp.zeros((l, b, max_seq, cfg.n_kv, cfg.d_head), cd),
+                    "xk": jnp.zeros((l, b, es, cfg.n_kv, cfg.d_head), cd),
+                    "xv": jnp.zeros((l, b, es, cfg.n_kv, cfg.d_head), cd)}
+        raise ValueError(cfg.family)
+
+    def cache_pspecs(self, multi_pod: bool = False, shard_batch: bool = True):
+        """Shard caches. With a shardable batch: batch over the data axes and
+        KV sequence over the model axis (SP). Small-batch long-context cells
+        (long_500k, B=1) replicate batch and shard the sequence over ALL mesh
+        axes instead — sequence parallelism is what makes a 500k cache fit."""
+        cfg = self.cfg
+        all_ax = ("pod", "data", "model") if multi_pod else ("data", "model")
+        if shard_batch:
+            dp = ("pod", "data") if multi_pod else "data"
+            seq = "model"
+            feat = "model"
+        else:
+            dp = None
+            seq = all_ax
+            feat = "model"
+        kvspec = P(None, dp, seq, None, None)
+        if cfg.family in ("dense", "moe"):
+            if cfg.mla:
+                return {"c_kv": P(None, dp, seq, None),
+                        "k_rope": P(None, dp, seq, None, None)}
+            return {"k": kvspec, "v": kvspec}
+        if cfg.family == "ssm":
+            return {"conv": P(None, dp, None, feat),
+                    "h": P(None, dp, feat, None)}
+        if cfg.family == "hybrid":
+            return {"conv": P(None, dp, None, feat),
+                    "h": P(None, dp, feat, None, None),
+                    "k": kvspec, "v": kvspec}
+        if cfg.family == "encdec":
+            return {"k": kvspec, "v": kvspec, "xk": kvspec, "xv": kvspec}
+        raise ValueError(cfg.family)
+
+    # ---- decode: one token with a populated cache ------------------------
+    def decode_step(self, params, cache, inputs, pos):
+        """inputs: tokens (B, 1) or embeds (B, 1, D); pos: scalar int32
+        (current absolute position). Returns (cache, logits (B, V))."""
+        cfg = self.cfg
+        cd = cfg.compute_dtype
+        x = self._embed_in(params, inputs)
+        b = x.shape[0]
+        pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (b, 1))
+        if cfg.mrope:
+            pos_arr = jnp.broadcast_to(pos_arr[None], (3, b, 1))
+
+        if cfg.family in ("dense", "moe"):
+            cache, h = self._decode_attn_stack(params, cache, x, pos, pos_arr)
+        elif cfg.family == "ssm":
+            cache, h = self._decode_ssm_stack(params, cache, x)
+        elif cfg.family == "hybrid":
+            cache, h = self._decode_hybrid_stack(params, cache, x, pos, pos_arr)
+        elif cfg.family == "encdec":
+            cache, h = self._decode_encdec_stack(params, cache, x, pos, pos_arr)
+        else:
+            raise ValueError(cfg.family)
+        h = layers.rms_norm(h, params["final_ln"])
+        return cache, self.logits(params, h)[:, 0]
+
+    def _decode_attn_stack(self, params, cache, x, pos, pos_arr):
+        cfg = self.cfg
+
+        def body(x, xs):
+            lp, *cs = xs
+            x, new_cs = _attn_decode_layer(lp, x, cfg, pos, pos_arr, tuple(cs),
+                                           use_moe=cfg.n_experts > 0)
+            return x, new_cs
+
+        stack = params["stack"]
+        fd = cfg.first_dense
+        cache_keys = ("c_kv", "k_rope") if cfg.mla else ("k", "v")
+        head = {k: cache[k][:fd] for k in cache_keys}
+        tail = {k: cache[k][fd:] for k in cache_keys}
+        if fd:
+            # Leading dense-FFN layers (DeepSeek-V2) differ in pytree
+            # structure; run them in a (tiny) python loop over cache[:fd].
+            for i in range(fd):
+                lp = jax.tree.map(lambda a: a[i], stack["first"])
+                cs = tuple(head[k][i] for k in cache_keys)
+                x, new_cs = _attn_decode_layer(lp, x, cfg, pos, pos_arr, cs,
+                                               use_moe=False)
+                for k, nc in zip(cache_keys, new_cs):
+                    head[k] = head[k].at[i].set(nc)
+        x, new_tail = jax.lax.scan(
+            body, x, (stack["layers"],) + tuple(tail[k] for k in cache_keys))
+        out = {k: jnp.concatenate([head[k], nt], axis=0) if fd else nt
+               for k, nt in zip(cache_keys, new_tail)}
+        return out, x
+
+    def _decode_ssm_stack(self, params, cache, x):
+        cfg = self.cfg
+
+        def body(x, xs):
+            lp, conv_l, h_l = xs
+            h = layers.rms_norm(x, lp["ln"])
+            y, (conv_n, h_n) = mamba.mamba1_apply(lp["mamba"], h, cfg,
+                                                  state=(conv_l, h_l))
+            return x + y, (conv_n, h_n)
+
+        x, (conv, hs) = jax.lax.scan(body, x,
+                                     (params["stack"]["layers"],
+                                      cache["conv"], cache["h"]))
+        return {"conv": conv, "h": hs}, x
+
+    def _decode_hybrid_stack(self, params, cache, x, pos, pos_arr):
+        cfg = self.cfg
+        groups, n_sites = transformer.hybrid_groups(cfg)
+        shared = params["stack"]["shared_attn"]
+        cd = cfg.compute_dtype
+        kc, vc = cache["k"], cache["v"]
+        conv_out, h_out = cache["conv"], cache["h"]
+
+        def body(x, xs):
+            lp, conv_l, h_l = xs
+            h = layers.rms_norm(x, lp["ln"])
+            y, (conv_n, h_n) = mamba.mamba2_apply(lp["mamba"], h, cfg,
+                                                  state=(conv_l, h_l))
+            return x + y, (conv_n, h_n)
+
+        for gi, (lo, hi) in enumerate(groups):
+            grp = jax.tree.map(lambda a: a[lo:hi], params["stack"]["layers"])
+            x, (conv_n, h_n) = jax.lax.scan(
+                body, x, (grp, cache["conv"][lo:hi], cache["h"][lo:hi]))
+            conv_out = jax.lax.dynamic_update_slice_in_dim(conv_out, conv_n, lo, 0)
+            h_out = jax.lax.dynamic_update_slice_in_dim(h_out, h_n, lo, 0)
+            if gi < n_sites:
+                h = layers.rms_norm(x, shared["ln"])
+                q, k, v = attention.gqa_project_qkv(shared["attn"], h, cfg,
+                                                    pos_arr)
+                k_l = jax.lax.dynamic_update_slice(kc, k[None].astype(kc.dtype),
+                                                   (gi, 0, pos, 0, 0))
+                v_l = jax.lax.dynamic_update_slice(vc, v[None].astype(vc.dtype),
+                                                   (gi, 0, pos, 0, 0))
+                kc, vc = k_l, v_l
+                o = attention.flash_attention(q, kc[gi], vc[gi], causal=True,
+                                              q_offset=pos,
+                                              chunk_kv=cfg.attn_chunk_kv)
+                a = jnp.einsum("bse,ed->bsd", o.reshape(*h.shape[:2], -1),
+                               shared["attn"]["wo"].astype(cd))
+                x = x + a
+                h2 = layers.rms_norm(x, shared["ln2"])
+                x = x + layers.mlp_apply(shared["mlp"], h2, cd)
+        return {"conv": conv_out, "h": h_out, "k": kc, "v": vc}, x
+
+    def _decode_encdec_stack(self, params, cache, x, pos, pos_arr):
+        cfg = self.cfg
+
+        def body(x, xs):
+            lp, k_l, v_l, xk_l, xv_l = xs
+            h = layers.rms_norm(x, lp["ln1"])
+            q, k, v = attention.gqa_project_qkv(lp["attn"], h, cfg, pos_arr)
+            k_l = jax.lax.dynamic_update_slice_in_dim(k_l, k, pos, 1)
+            v_l = jax.lax.dynamic_update_slice_in_dim(v_l, v, pos, 1)
+            o = attention.flash_attention(q, k_l, v_l, causal=True,
+                                          q_offset=pos,
+                                          chunk_kv=cfg.attn_chunk_kv)
+            a = jnp.einsum("bse,ed->bsd", o.reshape(*h.shape[:2], -1),
+                           lp["attn"]["wo"].astype(cfg.compute_dtype))
+            x = x + a
+            h = layers.rms_norm(x, lp["ln_x"])
+            qx, _, _ = attention.gqa_project_qkv(lp["xattn"], h, cfg, pos_arr)
+            ox = attention.flash_attention(qx, xk_l, xv_l, causal=False,
+                                           chunk_kv=cfg.attn_chunk_kv)
+            ax = jnp.einsum("bse,ed->bsd", ox.reshape(*h.shape[:2], -1),
+                            lp["xattn"]["wo"].astype(cfg.compute_dtype))
+            x = x + ax
+            h = layers.rms_norm(x, lp["ln2"])
+            f = layers.mlp_apply(lp["mlp"], h, cfg.compute_dtype)
+            return x + f, (k_l, v_l)
+
+        dec = params["stack"]["decoder"]
+        x, (k, v) = jax.lax.scan(body, x, (dec, cache["k"], cache["v"],
+                                           cache["xk"], cache["xv"]))
+        return dict(cache, k=k, v=v), x
+
+    def prefill_encoder(self, params, enc_embeds):
+        """Encode + per-layer cross-KV projection (fills xk/xv cache)."""
+        cfg = self.cfg
+        enc_x = enc_embeds.astype(cfg.compute_dtype)
+        b, s = enc_x.shape[:2]
+        pos = self._positions(b, s)
+
+        def enc_body(x, lp):
+            y, _ = transformer.apply_decoder_layer(lp, x, cfg, pos,
+                                                   use_moe=False, causal=False)
+            return y, None
+
+        enc_out, _ = jax.lax.scan(enc_body, enc_x, params["stack"]["encoder"])
+
+        def proj(lp):
+            _, k, v = attention.gqa_project_qkv(lp["xattn"], enc_out, cfg, pos)
+            return k, v
+
+        xk, xv = jax.vmap(proj)(params["stack"]["decoder"])  # (L, B, S, KV, dh)
+        return enc_out, xk, xv

@@ -1,0 +1,206 @@
+"""Mixture-of-Experts FFN: top-k routing, shared experts, two dispatch modes.
+
+Dispatch modes (selectable per config; a §Perf hillclimb axis):
+
+  * ``einsum``  — GShard-style one-hot dispatch/combine matmuls. Faithful to
+    the classic TPU formulation, fully dense and MXU-mapped, but the dispatch
+    einsums cost O(T·E·C·D) FLOPs — comparable to the expert matmuls
+    themselves at high expert counts (visible in cost_analysis as a low
+    useful-FLOP ratio).
+  * ``scatter`` — sort-based: tokens are ordered by expert, gathered into
+    (E, C, D) expert buffers with take/scatter (no FLOPs), processed with a
+    batched expert matmul, and scattered back. Same semantics, removes the
+    dispatch-matmul FLOPs entirely.
+
+The expert axis is sharded over the ``exp`` logical axis (folded onto the
+mesh "model" axis) — expert parallelism.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import EXP, FSDP, TP
+
+# Launcher-installed NamedSharding constraint for grouped-token tensors
+# (G, Tg, D): groups ride the data axes so dispatch/combine einsums are
+# device-local (the GShard group dimension IS the data-parallel shard).
+_GROUP_SHARDING = [None]
+
+
+def set_group_sharding(sharding):
+    _GROUP_SHARDING[0] = sharding
+
+
+def _shard_groups(xg):
+    sh = _GROUP_SHARDING[0]
+    if sh is None:
+        return xg
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ns = NamedSharding(sh.mesh, P(sh.spec[0], *([None] * (xg.ndim - 1))))
+    return jax.lax.with_sharding_constraint(xg, ns)
+
+
+def init_moe(key, cfg):
+    d, fe, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {"gate": layers.dense_init(ks[0], (d, e), cfg.param_dtype),
+         "wi": (jax.random.normal(ks[1], (e, d, fe)) / jnp.sqrt(d)).astype(cfg.param_dtype),
+         "wg": (jax.random.normal(ks[2], (e, d, fe)) / jnp.sqrt(d)).astype(cfg.param_dtype),
+         "wo": (jax.random.normal(ks[3], (e, fe, d)) / jnp.sqrt(fe)).astype(cfg.param_dtype)}
+    if cfg.n_shared:
+        p["shared"] = layers.init_mlp(ks[4], d, fe * cfg.n_shared, cfg.param_dtype)
+    return p
+
+
+def spec_moe(cfg):
+    if cfg.expert_shard and cfg.moe_ff_fsdp:
+        # 2D expert sharding: EP over model x expert-FFN dim over data.
+        # Expert weights are fully sharded yet never all-gathered — the
+        # (much smaller) dispatched activations reshard instead.
+        p = {"gate": P(FSDP, None),
+             "wi": P(EXP, None, FSDP), "wg": P(EXP, None, FSDP),
+             "wo": P(EXP, FSDP, None)}
+    elif cfg.expert_shard:   # EP: expert dim over the model axis
+        p = {"gate": P(FSDP, None),
+             "wi": P(EXP, FSDP, None), "wg": P(EXP, FSDP, None),
+             "wo": P(EXP, None, FSDP)}
+    else:                  # few experts: TP over the expert FFN dim instead
+        p = {"gate": P(FSDP, None),
+             "wi": P(None, FSDP, TP), "wg": P(None, FSDP, TP),
+             "wo": P(None, TP, FSDP)}
+    if cfg.n_shared:
+        p["shared"] = layers.spec_mlp()
+    return p
+
+
+def _route(p, x, cfg):
+    """Top-k routing: returns (idx (T,k), weights (T,k), aux_loss)."""
+    cd = cfg.compute_dtype
+    logits = jnp.einsum("td,de->te", x, p["gate"].astype(cd)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # Switch-style load-balance auxiliary loss.
+    e = cfg.n_experts
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return idx, w.astype(cd), aux
+
+
+def _capacity(t: int, cfg) -> int:
+    c = int(t * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, (c + 127) // 128 * 128)  # lane-aligned
+
+
+def moe_apply_einsum(p, x2d, cfg):
+    """GShard one-hot dispatch. x2d: (T, D) -> (T, D)."""
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cd = cfg.compute_dtype
+    idx, w, aux = _route(p, x2d, cfg)
+    cap = _capacity(t, cfg)
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)            # (T, k, E)
+    pos = jnp.cumsum(onehot.sum(1), axis=0) - onehot.sum(1)     # (T, E) rank
+    keep = pos < cap
+    disp = (onehot * keep[:, None, :]).astype(cd)               # (T, k, E)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=cd)                 # (T, E, C)
+    dispatch = jnp.einsum("tke,tec->tec", disp, pos_oh)         # (T, E, C)
+    combine = jnp.einsum("tke,tk,tec->tec", disp, w, pos_oh)
+
+    xin = jnp.einsum("tec,td->ecd", dispatch, x2d)              # (E, C, D)
+    h = jnp.einsum("ecd,edf->ecf", xin, p["wi"].astype(cd))
+    g = jnp.einsum("ecd,edf->ecf", xin, p["wg"].astype(cd))
+    ho = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, p["wo"].astype(cd))
+    y = jnp.einsum("tec,ecd->td", combine, ho)
+    return y, aux
+
+
+def moe_apply_scatter(p, x2d, cfg):
+    """Sort-based dispatch: no one-hot matmuls; gather/scatter + grouped GEMM."""
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cd = cfg.compute_dtype
+    idx, w, aux = _route(p, x2d, cfg)
+    cap = _capacity(t, cfg)
+
+    flat_e = idx.reshape(-1)                                    # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = w.reshape(-1)
+    # Rank of each (token, slot) within its expert, via sort-free cumsum.
+    onehot = flat_e[:, None] == jnp.arange(e)                   # (T*k, E)
+    rank = (jnp.cumsum(onehot, axis=0) - 1)[jnp.arange(t * k), flat_e]
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap)                           # cap row is a trap
+
+    # Gather tokens into expert buffers (scatter with drop on overflow).
+    xin = jnp.zeros((e, cap, d), cd).at[flat_e, slot].set(
+        x2d[flat_t].astype(cd), mode="drop")
+    h = jnp.einsum("ecd,edf->ecf", xin, p["wi"].astype(cd))
+    g = jnp.einsum("ecd,edf->ecf", xin, p["wg"].astype(cd))
+    ho = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, p["wo"].astype(cd))
+    # Gather back and weight.
+    y_tok = ho[flat_e, jnp.minimum(slot, cap - 1)] * (flat_w * keep)[:, None]
+    y = jnp.zeros((t, d), cd).at[flat_t].add(y_tok)
+    return y, aux
+
+
+def moe_apply_grouped(p, xg, cfg):
+    """GShard grouped dispatch: xg (G, Tg, D) with G riding the data axes
+    (see _shard_groups) so the one-hot dispatch/combine einsums are local.
+    Capacity scales with Tg, turning the ungrouped O(T^2 k cf/E) dispatch
+    cost into O(T * Tg * k * cf/E)."""
+    g, tg, d = xg.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cd = cfg.compute_dtype
+    idx, w, aux = _route(p, xg.reshape(g * tg, d), cfg)
+    idx = idx.reshape(g, tg, k)
+    w = w.reshape(g, tg, k)
+    cap = _capacity(tg, cfg)
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)              # (G,T,k,E)
+    pos = jnp.cumsum(onehot.sum(2), axis=1) - onehot.sum(2)       # (G,T,E)
+    keep = pos < cap
+    disp = (onehot * keep[:, :, None, :]).astype(cd)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=cd)                   # (G,T,E,C)
+    dispatch = jnp.einsum("gtke,gtec->gtec", disp, pos_oh)
+    combine = jnp.einsum("gtke,gtk,gtec->gtec", disp, w, pos_oh)
+
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch, xg)              # (G,E,C,D)
+    h = jnp.einsum("gecd,edf->gecf", xin, p["wi"].astype(cd))
+    hg = jnp.einsum("gecd,edf->gecf", xin, p["wg"].astype(cd))
+    ho = jnp.einsum("gecf,efd->gecd", jax.nn.silu(hg) * h,
+                    p["wo"].astype(cd))
+    y = jnp.einsum("gtec,gecd->gtd", combine, ho)
+    return y, aux
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D). Routed experts + optional shared experts.
+
+    ``cfg.moe_group_tokens`` > 0 selects the GShard grouped path."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    t = x2d.shape[0]
+    gt = cfg.moe_group_tokens
+    if gt and t > gt and t % gt == 0:
+        xg = _shard_groups(x2d.reshape(t // gt, gt, d))
+        if cfg.moe_dispatch == "scatter":
+            yg, aux = jax.vmap(lambda xi: moe_apply_scatter(p, xi, cfg))(xg)
+            aux = jnp.mean(aux)
+        else:
+            yg, aux = moe_apply_grouped(p, xg, cfg)
+        y = _shard_groups(yg).reshape(t, d)
+    else:
+        fn = (moe_apply_scatter if cfg.moe_dispatch == "scatter"
+              else moe_apply_einsum)
+        y, aux = fn(p, x2d, cfg)
+    y = y.reshape(b, s, d)
+    if cfg.n_shared:
+        y = y + layers.mlp_apply(p["shared"], x, cfg.compute_dtype)
+    return y, aux

@@ -1,0 +1,297 @@
+"""Layer stacks: decoder-only (dense/MoE), hybrid (Mamba+shared-attn), and
+encoder-decoder — all scan-over-layers with configurable remat.
+
+Scan-over-layers keeps the HLO a single layer body regardless of depth
+(essential for 512-device dry-run compiles) and matches how production JAX
+frameworks (MaxText et al.) stack transformers. Per-layer params are stacked
+along a leading L axis; PartitionSpecs gain a leading None.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention, layers, mamba, moe
+from repro.models.layers import FSDP, TP
+
+
+def stack_spec(tree):
+    """Prepend the scanned-layer axis (never sharded) to every spec."""
+    return jax.tree.map(lambda s: P(None, *s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = None if cfg.remat == "full" else \
+        jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint(fn, policy=policy)
+
+
+# Launcher-installed NamedSharding for (B, S, D) activations at layer
+# boundaries (batch over data axes, sequence over the model axis — the
+# Megatron-SP analogue; XLA inserts gather/scatter around attention).
+# None (default, e.g. single-device tests) disables the constraint.
+_ACTIVATION_SHARDING = [None]
+
+
+def set_activation_sharding(sharding):
+    _ACTIVATION_SHARDING[0] = sharding
+
+
+def _shard_seq(x, cfg):
+    sh = _ACTIVATION_SHARDING[0]
+    if sh is None or not cfg.seq_shard_activations or x.ndim != 3 \
+            or x.shape[1] == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+# ---------------------------------------------------------------------------
+# Decoder layer (dense or MoE FFN)
+# ---------------------------------------------------------------------------
+
+def init_decoder_layer(key, cfg, *, use_moe: bool):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": layers.init_rms(k1, cfg.d_model, cfg.param_dtype),
+         "ln2": layers.init_rms(k2, cfg.d_model, cfg.param_dtype)}
+    if cfg.mla:
+        p["attn"] = attention.init_mla(k3, cfg)
+    else:
+        p["attn"] = attention.init_gqa(k3, cfg)
+    if use_moe:
+        p["moe"] = moe.init_moe(k4, cfg)
+    else:
+        p["mlp"] = layers.init_mlp(k4, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    return p
+
+
+def spec_decoder_layer(cfg, *, use_moe: bool):
+    p = {"ln1": layers.spec_rms(), "ln2": layers.spec_rms()}
+    p["attn"] = attention.spec_mla(cfg) if cfg.mla else attention.spec_gqa(cfg)
+    if use_moe:
+        p["moe"] = moe.spec_moe(cfg)
+    else:
+        p["mlp"] = layers.spec_mlp()
+    return p
+
+
+def apply_decoder_layer(p, x, cfg, positions, *, use_moe: bool, causal=True):
+    """Returns (x, aux_loss)."""
+    h = layers.rms_norm(x, p["ln1"])
+    if cfg.mla:
+        a = attention.mla_apply(p["attn"], h, cfg, positions, causal=causal)
+    else:
+        a = attention.gqa_apply(p["attn"], h, cfg, positions, causal=causal)
+    x = _shard_seq(x + a, cfg)
+    h = layers.rms_norm(x, p["ln2"])
+    if use_moe:
+        f, aux = moe.moe_apply(p["moe"], h, cfg)
+    else:
+        f, aux = layers.mlp_apply(p["mlp"], h, cfg.compute_dtype), 0.0
+    return _shard_seq(x + f, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only stack (dense / moe families)
+# ---------------------------------------------------------------------------
+
+def init_decoder_stack(key, cfg):
+    n_moe = cfg.n_layers - cfg.first_dense if cfg.n_experts else 0
+    n_dense_scan = cfg.n_layers - n_moe - cfg.first_dense
+    ks = jax.random.split(key, 3)
+    p = {}
+    if cfg.first_dense:
+        fk = jax.random.split(ks[0], cfg.first_dense)
+        p["first"] = jax.vmap(
+            lambda k: init_decoder_layer(k, cfg, use_moe=False))(fk)
+    main_moe = cfg.n_experts > 0
+    mk = jax.random.split(ks[1], cfg.n_layers - cfg.first_dense)
+    p["layers"] = jax.vmap(
+        lambda k: init_decoder_layer(k, cfg, use_moe=main_moe))(mk)
+    return p
+
+
+def spec_decoder_stack(cfg):
+    p = {}
+    if cfg.first_dense:
+        p["first"] = stack_spec(spec_decoder_layer(cfg, use_moe=False))
+    p["layers"] = stack_spec(spec_decoder_layer(cfg, use_moe=cfg.n_experts > 0))
+    return p
+
+
+def apply_decoder_stack(p, x, cfg, positions, *, causal=True):
+    aux_total = 0.0
+
+    def body_dense(x, lp):
+        y, _ = apply_decoder_layer(lp, x, cfg, positions, use_moe=False,
+                                   causal=causal)
+        return y, 0.0
+
+    def body_main(x, lp):
+        y, aux = apply_decoder_layer(lp, x, cfg, positions,
+                                     use_moe=cfg.n_experts > 0, causal=causal)
+        return y, aux
+
+    if cfg.first_dense:
+        x, _ = jax.lax.scan(_remat(body_dense, cfg), x, p["first"])
+    x, auxs = jax.lax.scan(_remat(body_main, cfg), x, p["layers"])
+    aux_total = jnp.sum(auxs) if cfg.n_experts else 0.0
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Hybrid stack (zamba2): Mamba2 layers + one shared attention block applied
+# every ``attn_every`` layers (weights shared across applications).
+# ---------------------------------------------------------------------------
+
+def init_hybrid_stack(key, cfg):
+    ks = jax.random.split(key, 3)
+    lk = jax.random.split(ks[0], cfg.n_layers)
+    p = {"layers": jax.vmap(lambda k: {
+            "ln": layers.init_rms(k, cfg.d_model, cfg.param_dtype),
+            "mamba": mamba.init_mamba2(k, cfg)})(lk),
+         "shared_attn": {
+            "ln": layers.init_rms(ks[1], cfg.d_model, cfg.param_dtype),
+            "attn": attention.init_gqa(ks[1], cfg),
+            "ln2": layers.init_rms(ks[2], cfg.d_model, cfg.param_dtype),
+            "mlp": layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.param_dtype)}}
+    return p
+
+
+def spec_hybrid_stack(cfg):
+    return {"layers": stack_spec({"ln": layers.spec_rms(),
+                                  "mamba": mamba.spec_mamba2(cfg)}),
+            "shared_attn": {"ln": layers.spec_rms(),
+                            "attn": attention.spec_gqa(cfg),
+                            "ln2": layers.spec_rms(),
+                            "mlp": layers.spec_mlp()}}
+
+
+def hybrid_attn_sites(cfg):
+    """Layer indices after which the shared attention block runs."""
+    if not cfg.attn_every:
+        return []
+    return [l for l in range(cfg.n_layers) if (l + 1) % cfg.attn_every == 0]
+
+
+def hybrid_groups(cfg):
+    """Split n_layers into contiguous groups, each followed by one shared-
+    attention application (except a trailing remainder group). Grouped form
+    keeps the HLO free of lax.cond — exact FLOP accounting + site-indexed
+    caches — while preserving 'shared attn every attn_every layers'."""
+    sites = hybrid_attn_sites(cfg)
+    bounds = [0] + [s + 1 for s in sites]
+    if bounds[-1] != cfg.n_layers:
+        bounds.append(cfg.n_layers)
+    return list(zip(bounds[:-1], bounds[1:])), len(sites)
+
+
+def _shared_attn_block(shared, x, cfg, positions):
+    h = layers.rms_norm(x, shared["ln"])
+    a = attention.gqa_apply(shared["attn"], h, cfg, positions, causal=True)
+    x = x + a
+    h = layers.rms_norm(x, shared["ln2"])
+    return x + layers.mlp_apply(shared["mlp"], h, cfg.compute_dtype)
+
+
+def apply_hybrid_stack(p, x, cfg, positions):
+    groups, n_sites = hybrid_groups(cfg)
+    shared = p["shared_attn"]
+
+    def body(x, lp):
+        h = layers.rms_norm(x, lp["ln"])
+        y, _ = mamba.mamba2_apply(lp["mamba"], h, cfg)
+        return _shard_seq(x + y, cfg), None
+
+    body = _remat(body, cfg)
+    attn_fn = _remat(lambda x: _shared_attn_block(shared, x, cfg, positions),
+                     cfg)
+    for gi, (lo, hi) in enumerate(groups):
+        grp = jax.tree.map(lambda a: a[lo:hi], p["layers"])
+        x, _ = jax.lax.scan(body, x, grp)
+        if gi < n_sites:
+            x = _shard_seq(attn_fn(x), cfg)
+    return x, 0.0
+
+
+# ---------------------------------------------------------------------------
+# SSM stack (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def init_ssm_stack(key, cfg):
+    lk = jax.random.split(key, cfg.n_layers)
+    return {"layers": jax.vmap(lambda k: {
+        "ln": layers.init_rms(k, cfg.d_model, cfg.param_dtype),
+        "mamba": mamba.init_mamba1(k, cfg)})(lk)}
+
+
+def spec_ssm_stack(cfg):
+    return {"layers": stack_spec({"ln": layers.spec_rms(),
+                                  "mamba": mamba.spec_mamba1(cfg)})}
+
+
+def apply_ssm_stack(p, x, cfg, positions):
+    def body(x, lp):
+        h = layers.rms_norm(x, lp["ln"])
+        y, _ = mamba.mamba1_apply(lp["mamba"], h, cfg)
+        return _shard_seq(x + y, cfg), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, p["layers"])
+    return x, 0.0
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder stack (seamless-m4t backbone)
+# ---------------------------------------------------------------------------
+
+def init_encdec_stack(key, cfg):
+    k1, k2 = jax.random.split(key)
+    ek = jax.random.split(k1, cfg.encoder_layers)
+    dk = jax.random.split(k2, cfg.n_layers)
+    enc = jax.vmap(lambda k: init_decoder_layer(k, cfg, use_moe=False))(ek)
+
+    def dec_layer(k):
+        ka, kb = jax.random.split(k)
+        p = init_decoder_layer(ka, cfg, use_moe=False)
+        p["ln_x"] = layers.init_rms(kb, cfg.d_model, cfg.param_dtype)
+        p["xattn"] = attention.init_gqa(kb, cfg)
+        return p
+
+    dec = jax.vmap(dec_layer)(dk)
+    return {"encoder": enc, "decoder": dec}
+
+
+def spec_encdec_stack(cfg):
+    dec = spec_decoder_layer(cfg, use_moe=False)
+    dec["ln_x"] = layers.spec_rms()
+    dec["xattn"] = attention.spec_gqa(cfg)
+    return {"encoder": stack_spec(spec_decoder_layer(cfg, use_moe=False)),
+            "decoder": stack_spec(dec)}
+
+
+def apply_encdec_stack(p, enc_x, dec_x, cfg, enc_pos, dec_pos):
+    def enc_body(x, lp):
+        y, _ = apply_decoder_layer(lp, x, cfg, enc_pos, use_moe=False,
+                                   causal=False)
+        return y, None
+
+    enc_out, _ = jax.lax.scan(_remat(enc_body, cfg), enc_x, p["encoder"])
+
+    def dec_body(x, lp):
+        y, _ = apply_decoder_layer(lp, x, cfg, dec_pos, use_moe=False,
+                                   causal=True)
+        h = layers.rms_norm(y, lp["ln_x"])
+        # cross-attention: kv from encoder output (non-causal)
+        _, k, v = attention.gqa_project_qkv(lp["xattn"], enc_out, cfg, enc_pos)
+        a = attention.gqa_apply(lp["xattn"], h, cfg, dec_pos, causal=False,
+                                kv_override=(k, v))
+        return _shard_seq(y + a, cfg), None
+
+    dec_out, _ = jax.lax.scan(_remat(dec_body, cfg), dec_x, p["decoder"])
+    return dec_out, 0.0

@@ -1,0 +1,70 @@
+"""Batched serving engine: prefill + decode loop over a shared KV cache.
+
+Drives Model.decode_step for a batch of requests with greedy or temperature
+sampling. Single-controller; the jitted steps are the same ones the dry-run
+lowers for the decode_* cells, so what serves here is what scales there.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    max_seq: int = 256
+    temperature: float = 0.0     # 0 => greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, prompts: np.ndarray, enc_embeds=None):
+        """prompts: (B, P) int32 token ids (right-aligned, no padding).
+        Returns (B, max_new_tokens) generated ids."""
+        model, cfg = self.model, self.cfg
+        b, p = prompts.shape
+        cache = model.init_cache(
+            b, cfg.max_seq,
+            enc_seq=enc_embeds.shape[1] if enc_embeds is not None else 0)
+        if model.cfg.family == "encdec":
+            _, xk, xv = model.prefill_encoder(self.params, jnp.asarray(enc_embeds))
+            cache = dict(cache, xk=xk, xv=xv)
+
+        # prefill by stepping the decoder over prompt tokens (cache fills
+        # incrementally; prefill-as-decode keeps one jitted path)
+        logits = None
+        for t in range(p):
+            cache, logits = self._decode(
+                self.params, cache, {"tokens": jnp.asarray(prompts[:, t:t + 1])},
+                jnp.int32(t))
+
+        key = jax.random.key(cfg.seed)
+        out = np.zeros((b, cfg.max_new_tokens), np.int32)
+        tok = self._sample(logits, key, 0)
+        for i in range(cfg.max_new_tokens):
+            out[:, i] = np.asarray(tok)
+            cache, logits = self._decode(
+                self.params, cache, {"tokens": jnp.asarray(tok)[:, None]},
+                jnp.int32(p + i))
+            tok = self._sample(logits, key, i + 1)
+        return out
+
+    def _sample(self, logits, key, i):
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(
+            k, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)

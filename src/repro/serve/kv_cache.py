@@ -1,0 +1,97 @@
+"""Paged KV cache with AerialDB content-hash block placement (beyond-paper).
+
+vLLM-style paged caches use a host-side allocator for block tables. Here the
+paper's placement machinery is reused instead: cache block (seq_id, block_idx)
+keys are placed into the physical slot pool by ``H_i`` (lane-split xxHash64)
+with AerialDB's deterministic successor probing on collision — i.e. the
+block table is an open-addressing hash table whose probe sequence is exactly
+the paper's replica-fallback rule. Benefits on TPU:
+
+  * allocation is a pure jittable function of the key (no host round-trip),
+  * eviction/failure of a slot range degrades gracefully (successor probing
+    finds the surviving copy when replication > 1, mirroring §3.5.3).
+
+The block TABLE is tiny and replicated; the slot POOL shards over devices.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+
+class PagedCache(NamedTuple):
+    pool_k: jnp.ndarray     # (n_slots, block, KV, dh)
+    pool_v: jnp.ndarray
+    slot_key: jnp.ndarray   # (n_slots, 2) int32 owner (seq_id, block_idx); -1 free
+    table: jnp.ndarray      # (max_seqs, max_blocks) int32 slot of each block
+
+
+def init_paged(n_slots: int, block: int, kv: int, dh: int, max_seqs: int,
+               max_blocks: int, dtype=jnp.bfloat16) -> PagedCache:
+    return PagedCache(
+        pool_k=jnp.zeros((n_slots, block, kv, dh), dtype),
+        pool_v=jnp.zeros((n_slots, block, kv, dh), dtype),
+        slot_key=jnp.full((n_slots, 2), -1, jnp.int32),
+        table=jnp.full((max_seqs, max_blocks), -1, jnp.int32))
+
+
+def _probe_slots(seq_id, block_idx, slot_key, n_probe: int = 16):
+    """Candidate slots for a (seq, block) key: H_i start + successor probes.
+
+    Returns (slot, found_free_or_own): the first slot that is free or already
+    owned by this key, following the deterministic successor sequence.
+    """
+    n_slots = slot_key.shape[0]
+    start = hashing.mod_u64(
+        hashing.xxh64_u64(hashing.u64(jnp.asarray(seq_id, jnp.uint32),
+                                      jnp.asarray(block_idx, jnp.uint32))),
+        n_slots)
+    offs = jnp.arange(n_probe, dtype=jnp.int32)
+    cand = (start + offs) % n_slots                       # (P,)
+    keys = slot_key[cand]                                 # (P, 2)
+    free = keys[:, 0] < 0
+    own = (keys[:, 0] == seq_id) & (keys[:, 1] == block_idx)
+    ok = free | own
+    first = jnp.argmax(ok)
+    return cand[first], jnp.any(ok)
+
+
+def append_token(cache: PagedCache, seq_id, pos, k_new, v_new, block: int):
+    """Append one token's K/V for one sequence at absolute position ``pos``.
+
+    k_new/v_new: (KV, dh). Allocates the block slot on first touch via
+    content-hash probing; returns (cache, ok flag).
+    """
+    block_idx = pos // block
+    off = pos % block
+    slot, ok = _probe_slots(seq_id, block_idx, cache.slot_key)
+    slot_key = cache.slot_key.at[slot].set(
+        jnp.where(ok, jnp.stack([jnp.asarray(seq_id, jnp.int32),
+                                 jnp.asarray(block_idx, jnp.int32)]),
+                  cache.slot_key[slot]))
+    table = cache.table.at[seq_id, block_idx].set(
+        jnp.where(ok, slot, cache.table[seq_id, block_idx]))
+    pool_k = cache.pool_k.at[slot, off].set(
+        jnp.where(ok, k_new.astype(cache.pool_k.dtype), cache.pool_k[slot, off]))
+    pool_v = cache.pool_v.at[slot, off].set(
+        jnp.where(ok, v_new.astype(cache.pool_v.dtype), cache.pool_v[slot, off]))
+    return PagedCache(pool_k, pool_v, slot_key, table), ok
+
+
+def gather_sequence(cache: PagedCache, seq_id, max_blocks: int):
+    """(S_max, KV, dh) contiguous view of one sequence's K and V."""
+    slots = cache.table[seq_id, :max_blocks]              # (NB,)
+    safe = jnp.maximum(slots, 0)
+    k = cache.pool_k[safe]                                # (NB, block, KV, dh)
+    v = cache.pool_v[safe]
+    valid = slots >= 0
+    k = jnp.where(valid[:, None, None, None], k, 0)
+    v = jnp.where(valid[:, None, None, None], v, 0)
+    nb, blk = k.shape[0], k.shape[1]
+    return (k.reshape(nb * blk, *k.shape[2:]),
+            v.reshape(nb * blk, *v.shape[2:]))

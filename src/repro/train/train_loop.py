@@ -1,0 +1,130 @@
+"""Train/serve step factories: jitted, sharded, donated — the functions the
+dry-run lowers and the trainer drives.
+
+``make_train_step``: loss -> grads (with microbatch gradient accumulation)
+-> AdamW update. Params/opt-state shardings come from the model's logical
+specs; the batch shards over the data axes; activations get layer-boundary
+constraints (SP).
+
+``make_serve_steps``: prefill (full forward, no cache for train-style
+scoring) and decode (one token against a populated cache).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shlib
+from repro.models import attention, moe, transformer
+from repro.models.model import Model
+from repro.train import optimizer as optlib
+
+
+def loss_with_microbatch(model: Model, params, batch, n_micro: int):
+    """Mean loss over n_micro microbatches (scan = gradient accumulation;
+    bounds activation memory for the train_4k cells).
+
+    The body is checkpointed: without it, every microbatch's layer-scan
+    residuals stay live until the accumulation scan's backward runs —
+    n_micro x the intended activation footprint."""
+    if n_micro <= 1:
+        return model.loss(params, batch)
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    mb = jax.tree.map(split, batch)
+
+    @jax.checkpoint
+    def body(acc, one):
+        return acc + model.loss(params, one), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), mb)
+    return total / n_micro
+
+
+def make_train_step(model: Model, opt_cfg: optlib.OptConfig, mesh: Mesh,
+                    *, multi_pod: bool = False, n_micro: int = 1,
+                    fsdp_over_pod: bool = False, donate: bool = True):
+    """Returns (train_step, shardings) where
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    pspecs = model.pspecs()
+    param_sh = shlib.resolve_tree(pspecs, mesh, multi_pod, fsdp_over_pod)
+    opt_sh = shlib.resolve_tree(
+        optlib.opt_state_pspecs(pspecs, opt_cfg.keep_master), mesh,
+        multi_pod, fsdp_over_pod)
+    transformer.set_activation_sharding(
+        shlib.activation_sharding(mesh, multi_pod))
+    attention.set_kv_gather_sharding(
+        shlib.activation_sharding(mesh, multi_pod))
+    moe.set_group_sharding(shlib.activation_sharding(mesh, multi_pod))
+
+    def batch_shardings(batch_like):
+        return jax.tree.map(
+            lambda x: shlib.batch_sharding(mesh, multi_pod, x.ndim), batch_like)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return loss_with_microbatch(model, p, batch, n_micro)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, metrics = optlib.adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    def jit_for(batch_like):
+        return jax.jit(
+            train_step,
+            in_shardings=(param_sh, opt_sh, batch_shardings(batch_like)),
+            out_shardings=(param_sh, opt_sh, None),
+            donate_argnums=(0, 1) if donate else ())
+
+    return train_step, {
+        "params": param_sh, "opt": opt_sh,
+        "batch_fn": batch_shardings, "jit_for": jit_for,
+    }
+
+
+def make_serve_steps(model: Model, mesh: Mesh, *, multi_pod: bool = False):
+    """Returns (prefill_step, decode_step, shardings)."""
+    pspecs = model.pspecs()
+    param_sh = shlib.resolve_tree(pspecs, mesh, multi_pod)
+    cache_sh = shlib.resolve_tree(model.cache_pspecs(multi_pod), mesh,
+                                  multi_pod)
+    transformer.set_activation_sharding(
+        shlib.activation_sharding(mesh, multi_pod))
+    attention.set_kv_gather_sharding(
+        shlib.activation_sharding(mesh, multi_pod))
+    moe.set_group_sharding(shlib.activation_sharding(mesh, multi_pod))
+
+    def batch_shardings(batch_like):
+        return jax.tree.map(
+            lambda x: shlib.batch_sharding(mesh, multi_pod, x.ndim), batch_like)
+
+    def prefill_step(params, batch):
+        hidden, _ = model.forward(params, batch)
+        return model.logits(params, hidden[:, -1:, :])[:, 0]
+
+    def decode_step(params, cache, inputs, pos):
+        return model.decode_step(params, cache, inputs, pos)
+
+    def jit_prefill(batch_like):
+        return jax.jit(prefill_step,
+                       in_shardings=(param_sh, batch_shardings(batch_like)))
+
+    def jit_decode(inputs_like):
+        return jax.jit(decode_step,
+                       in_shardings=(param_sh, cache_sh,
+                                     batch_shardings(inputs_like), None),
+                       out_shardings=(cache_sh, None),
+                       donate_argnums=(1,))
+
+    return prefill_step, decode_step, {
+        "params": param_sh, "cache": cache_sh,
+        "jit_prefill": jit_prefill, "jit_decode": jit_decode,
+    }

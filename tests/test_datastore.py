@@ -1,0 +1,153 @@
+"""End-to-end datastore tests: insert + query vs a global-scan oracle
+(paper §3.4–3.5), including AND/OR predicates, planners, and baselines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.datastore import (StoreConfig, init_store, insert_step,
+                                  make_pred, query_step)
+from repro.core.placement import ShardMeta
+from repro.data.synthetic import CityConfig, DroneFleet, make_sites
+
+
+def small_store(n_edges=8, planner="min_shards", replication=3, use_index=True):
+    sites = make_sites(n_edges, CityConfig(), seed=3)
+    return StoreConfig(
+        n_edges=n_edges, sites=tuple(map(tuple, sites.tolist())),
+        tuple_capacity=4096, index_capacity=512, max_shards_per_query=64,
+        records_per_shard=12, n_values=4, planner=planner,
+        replication=replication, use_index=use_index)
+
+
+def load_fleet(cfg, n_drones=12, rounds=4, alive=None):
+    fleet = DroneFleet(n_drones, records_per_shard=cfg.records_per_shard)
+    state = init_store(cfg)
+    if alive is None:
+        alive = jnp.ones(cfg.n_edges, bool)
+    all_payloads, all_meta = [], []
+    for _ in range(rounds):
+        payload, meta = fleet.next_shards()
+        meta = ShardMeta(*[jnp.asarray(x) for x in meta])
+        state, _ = insert_step(cfg, state, jnp.asarray(payload), meta, alive)
+        all_payloads.append(payload)
+        all_meta.append(meta)
+    return state, fleet, np.concatenate(all_payloads), all_meta
+
+
+def oracle(payloads, pred, qi):
+    """Global scan over every inserted tuple (replication-free semantics)."""
+    t, lat, lon, v0 = (payloads[..., 0].ravel(), payloads[..., 1].ravel(),
+                       payloads[..., 2].ravel(), payloads[..., 3].ravel())
+    p = jax.tree.map(lambda x: np.asarray(x)[qi], pred)
+    sp = (p.lat0 <= lat) & (lat <= p.lat1) & (p.lon0 <= lon) & (lon <= p.lon1)
+    tp = (p.t0 <= t) & (t <= p.t1)
+    # sid of each tuple: payloads are (rounds*D, R, W) in drone-major order
+    n_shards, r = payloads.shape[0], payloads.shape[1]
+    m_and = (sp | ~p.has_spatial) & (tp | ~p.has_temporal)
+    m_or = (sp & p.has_spatial) | (tp & p.has_temporal)
+    m = m_and if p.is_and else m_or
+    return m, v0
+
+
+def check_result(result, qi, m, v0):
+    cnt = int(np.asarray(result.count)[qi])
+    assert cnt == int(m.sum()), (cnt, int(m.sum()))
+    if cnt:
+        np.testing.assert_allclose(np.asarray(result.vsum)[qi], v0[m].sum(), rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(result.vmin)[qi], v0[m].min(), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(result.vmax)[qi], v0[m].max(), rtol=1e-5)
+
+
+@pytest.mark.parametrize("planner", ["random", "min_shards", "min_edges"])
+def test_query_matches_oracle(planner):
+    cfg = small_store(planner=planner)
+    state, fleet, payloads, _ = load_fleet(cfg)
+    alive = jnp.ones(cfg.n_edges, bool)
+    city = CityConfig()
+    pred = make_pred(
+        q=4,
+        lat0=[city.lat_min, 12.9, 12.95, city.lat_min],
+        lat1=[city.lat_max, 13.0, 13.05, city.lat_max],
+        lon0=[city.lon_min, 77.5, 77.55, city.lon_min],
+        lon1=[city.lon_max, 77.6, 77.65, city.lon_max],
+        t0=[0.0, 0.0, 60.0, 100.0],
+        t1=[1e9, 120.0, 180.0, 150.0],
+        has_spatial=True, has_temporal=True, is_and=True)
+    result, info = query_step(cfg, state, pred, alive, jax.random.key(0))
+    assert not bool(np.asarray(result.overflow).any())
+    for qi in range(4):
+        m, v0 = oracle(payloads, pred, qi)
+        check_result(result, qi, m, v0)
+
+
+def test_or_query_matches_oracle():
+    cfg = small_store()
+    state, fleet, payloads, _ = load_fleet(cfg)
+    alive = jnp.ones(cfg.n_edges, bool)
+    pred = make_pred(q=2, lat0=12.9, lat1=12.95, lon0=77.5, lon1=77.6,
+                     t0=[0.0, 30.0], t1=[60.0, 90.0],
+                     has_spatial=True, has_temporal=True, is_and=False)
+    result, info = query_step(cfg, state, pred, alive, jax.random.key(1))
+    for qi in range(2):
+        m, v0 = oracle(payloads, pred, qi)
+        check_result(result, qi, m, v0)
+
+
+def test_sid_query():
+    """shardID point query (H_i path): returns exactly that shard's tuples."""
+    cfg = small_store()
+    state, fleet, payloads, metas = load_fleet(cfg)
+    alive = jnp.ones(cfg.n_edges, bool)
+    pred = make_pred(q=1, sid_hi=3, sid_lo=1, has_sid=True, is_and=True)
+    result, info = query_step(cfg, state, pred, alive, jax.random.key(2))
+    assert int(result.count[0]) == cfg.records_per_shard
+    # drone 3, round 1 lives at payload row 1*12+3
+    v0 = payloads[1 * 12 + 3, :, 3]
+    np.testing.assert_allclose(float(result.vsum[0]), v0.sum(), rtol=1e-4)
+
+
+def test_no_duplicates_despite_replication():
+    """3x replication must not triple-count: each shard is queried on exactly
+    one replica edge (paper §3.5.2)."""
+    cfg = small_store(replication=3)
+    state, fleet, payloads, _ = load_fleet(cfg)
+    alive = jnp.ones(cfg.n_edges, bool)
+    pred = make_pred(q=1, t0=0.0, t1=1e9, has_temporal=True, is_and=True)
+    result, _ = query_step(cfg, state, pred, alive, jax.random.key(3))
+    assert int(result.count[0]) == payloads.shape[0] * payloads.shape[1]
+
+
+def test_broadcast_baseline_matches_oracle():
+    """Feather-like config (no index, replication=1) still answers exactly."""
+    cfg = small_store(replication=1, use_index=False)
+    state, fleet, payloads, _ = load_fleet(cfg)
+    alive = jnp.ones(cfg.n_edges, bool)
+    pred = make_pred(q=1, lat0=12.9, lat1=13.0, lon0=77.5, lon1=77.65,
+                     t0=0.0, t1=200.0, has_spatial=True, has_temporal=True)
+    result, info = query_step(cfg, state, pred, alive, jax.random.key(4))
+    m, v0 = oracle(payloads, pred, 0)
+    check_result(result, 0, m, v0)
+    assert bool(np.asarray(info.broadcast)[0])
+
+
+def test_centralized_baseline():
+    """Cloud baseline: E=1 stores everything on one edge."""
+    cfg = small_store(n_edges=1, replication=1)
+    state, fleet, payloads, _ = load_fleet(cfg, n_drones=6, rounds=2)
+    alive = jnp.ones(1, bool)
+    pred = make_pred(q=1, t0=0.0, t1=1e9, has_temporal=True)
+    result, _ = query_step(cfg, state, pred, alive, jax.random.key(5))
+    assert int(result.count[0]) == payloads.shape[0] * payloads.shape[1]
+
+
+def test_insert_telemetry_and_balance():
+    cfg = small_store()
+    state, fleet, payloads, _ = load_fleet(cfg, n_drones=32, rounds=3)
+    per_edge = np.asarray(state.tup_count)
+    # every shard lands on exactly 3 edges
+    assert per_edge.sum() == 32 * 3 * cfg.records_per_shard * 3
+    assert int(np.asarray(state.tup_dropped).sum()) == 0
+    # §4.4.2-style balance: no edge holds a wildly disproportionate share
+    assert per_edge.max() < 4 * per_edge.mean()

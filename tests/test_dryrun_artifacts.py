@@ -1,0 +1,70 @@
+"""Integrity checks over the committed dry-run artifacts (experiments/):
+the multi-pod deliverable is 'every cell lowers+compiles' — this test keeps
+the claim checkable without re-running the 14-minute sweep. Skips cleanly
+when the artifacts have not been generated yet."""
+
+import glob
+import json
+from pathlib import Path
+
+import pytest
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+pytestmark = pytest.mark.skipif(not DRYRUN.exists(),
+                                reason="dry-run artifacts not generated")
+
+ARCHS = {"internlm2-1.8b", "qwen3-14b", "deepseek-7b", "stablelm-12b",
+         "grok-1-314b", "deepseek-v2-236b", "seamless-m4t-large-v2",
+         "zamba2-1.2b", "qwen2-vl-72b", "falcon-mamba-7b"}
+SHAPES = {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+SSM_LIKE = {"zamba2-1.2b", "falcon-mamba-7b"}
+
+
+def load_all():
+    return [json.loads(Path(f).read_text())
+            for f in glob.glob(str(DRYRUN / "*.json"))]
+
+
+def test_full_matrix_present():
+    cells = {(r["arch"], r["shape"], r["mesh"]) for r in load_all()}
+    assert len(cells) == 80  # 10 archs x 4 shapes x 2 meshes
+    archs = {a for a, _, _ in cells}
+    assert archs == ARCHS
+
+
+def test_no_failures_and_correct_skips():
+    for r in load_all():
+        if r["shape"] == "long_500k" and r["arch"] not in SSM_LIKE:
+            assert r["status"] == "skipped", r["arch"]
+        else:
+            assert r["status"] == "ok", (r["arch"], r["shape"], r["mesh"],
+                                         r.get("error", "")[:100])
+
+
+def test_ok_cells_have_analysis():
+    for r in load_all():
+        if r["status"] != "ok":
+            continue
+        ha = r["hlo_analysis_per_device"]
+        assert ha["flops"] > 0, (r["arch"], r["shape"])
+        assert ha["bytes_accessed"] > 0
+        assert "memory_analysis" in r and "temp_size_in_bytes" in r["memory_analysis"]
+        # multi-pod cells must actually shard the pod axis: a 512-way module
+        # compiled from the same model should not exceed ~1.2x the single-pod
+        # per-device flops (pure-DP pod axis halves per-device work for
+        # batch-bound steps; decode B=1 replicates)
+        assert r["param_bytes_global"] > 0
+
+
+def test_multi_pod_shards_batch():
+    """train cells: per-device FLOPs on 512 chips ~ half of 256 chips."""
+    by = {(r["arch"], r["shape"], r["mesh"]): r for r in load_all()}
+    for arch in ARCHS:
+        single = by.get((arch, "train_4k", "16x16"))
+        multi = by.get((arch, "train_4k", "2x16x16"))
+        if not single or not multi or single["status"] != "ok":
+            continue
+        f1 = single["hlo_analysis_per_device"]["flops"]
+        f2 = multi["hlo_analysis_per_device"]["flops"]
+        assert f2 < 0.75 * f1, (arch, f1, f2)

@@ -1,0 +1,73 @@
+"""Unit + property tests for the lane-split xxHash64 and hash functions."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hashing
+from repro.kernels.hash64 import ref as href
+
+U32 = st.integers(min_value=0, max_value=(1 << 32) - 1)
+
+
+@given(st.lists(st.tuples(U32, U32), min_size=1, max_size=32))
+@settings(deadline=None, max_examples=50)
+def test_xxh64_matches_reference(pairs):
+    hi = np.array([p[0] for p in pairs], np.uint32)
+    lo = np.array([p[1] for p in pairs], np.uint32)
+    got_hi, got_lo = hashing.xxh64_u64((jnp.asarray(hi), jnp.asarray(lo)))
+    exp_hi, exp_lo = href.xxh64_batch_py(hi, lo)
+    np.testing.assert_array_equal(np.asarray(got_hi), exp_hi)
+    np.testing.assert_array_equal(np.asarray(got_lo), exp_lo)
+
+
+@given(U32, U32, st.integers(min_value=1, max_value=65535))
+@settings(deadline=None, max_examples=100)
+def test_mod_u64(hi, lo, n):
+    got = hashing.mod_u64((jnp.uint32(hi), jnp.uint32(lo)), n)
+    assert int(got) == ((hi << 32) | lo) % n
+
+
+def test_mul64_random():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << 64, 256, dtype=np.uint64)
+    b = rng.integers(0, 1 << 64, 256, dtype=np.uint64)
+    ah = jnp.asarray((a >> 32).astype(np.uint32))
+    al = jnp.asarray((a & 0xFFFFFFFF).astype(np.uint32))
+    bh = jnp.asarray((b >> 32).astype(np.uint32))
+    bl = jnp.asarray((b & 0xFFFFFFFF).astype(np.uint32))
+    hi, lo = hashing.mul64((ah, al), (bh, bl))
+    exp = (a.astype(object) * b.astype(object)) % (1 << 64)
+    exp_hi = np.array([int(x) >> 32 for x in exp], np.uint32)
+    exp_lo = np.array([int(x) & 0xFFFFFFFF for x in exp], np.uint32)
+    np.testing.assert_array_equal(np.asarray(hi), exp_hi)
+    np.testing.assert_array_equal(np.asarray(lo), exp_lo)
+
+
+def test_hash_shard_id_uniformity():
+    """Placement balance: xxh64 mod E over sequential ids must be near-uniform
+    (underpins the paper's §4.4.2 load-balance observation)."""
+    n, e = 20000, 20
+    sid_hi = jnp.zeros(n, jnp.int32)
+    sid_lo = jnp.arange(n, dtype=jnp.int32)
+    edges = np.asarray(hashing.hash_shard_id(sid_hi, sid_lo, e))
+    counts = np.bincount(edges, minlength=e)
+    assert counts.min() > 0.85 * n / e
+    assert counts.max() < 1.15 * n / e
+
+
+def test_hash_time_debunches_periodicity():
+    """Shards collected every tau seconds must not hit one edge repeatedly."""
+    e, tau = 20, 300.0
+    t = jnp.arange(0, 600) * tau  # exactly one per bucket
+    edges = np.asarray(hashing.hash_time(t.astype(jnp.float32), tau, e))
+    counts = np.bincount(edges, minlength=e)
+    assert counts.max() < 3.0 * len(t) / e
+
+
+def test_time_bucket_widths():
+    t = jnp.asarray([0.0, 299.9, 300.0, 599.9, 600.0])
+    np.testing.assert_array_equal(
+        np.asarray(hashing.time_bucket(t, 300.0)), [0, 0, 1, 1, 2])

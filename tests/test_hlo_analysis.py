@@ -1,0 +1,70 @@
+"""Unit tests for the structural HLO analyzer on hand-written modules —
+the roofline numbers are only as good as this parser."""
+
+import textwrap
+
+from repro.launch import hlo_analysis as H
+
+MODULE = textwrap.dedent("""\
+    HloModule test
+
+    %body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16] get-tuple-element(%p), index=1
+      %w = f32[16,16] constant({...})
+      %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16] all-reduce(%dot.1), replica_groups={}
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+    }
+
+    %cond.2 (p2: (s32[], f32[8,16])) -> pred[] {
+      %p2 = (s32[], f32[8,16]) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i2, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16] parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,16]) tuple(%zero, %a)
+      %w1 = (s32[], f32[8,16]) while(%init), condition=%cond.2, body=%body.1
+      ROOT %out = f32[8,16] get-tuple-element(%w1), index=1
+    }
+""")
+
+
+def test_trip_count_and_flops():
+    comps, entry = H.parse_module(MODULE)
+    assert entry == "main"
+    assert set(comps) == {"body.1", "cond.2", "main"}
+    counts = H.exec_counts(comps, entry)
+    assert counts["body.1"] == 10         # loop bound from the condition
+    assert counts["cond.2"] == 11
+    res = H.analyze(MODULE)
+    # dot: 2 * (8*16 out) * 16 contraction = 4096 flops, x10 trips
+    assert res["flops"] == 10 * 2 * 8 * 16 * 16
+    # all-reduce: 8*16*4B = 512 B x 10 trips; wire = 2x for the ring
+    assert res["collectives"]["all-reduce"] == 10 * 512
+    assert res["collectives"]["wire_bytes"] == 2 * 10 * 512
+    assert res["collectives"]["counts"]["all-reduce"] == 10
+
+
+def test_type_bytes_tuple_and_scalar():
+    assert H.type_bytes("f32[8,16]") == 512
+    assert H.type_bytes("(s32[], f32[8,16])") == 4 + 512
+    assert H.type_bytes("bf16[2,3]{1,0}") == 12
+    assert H.type_bytes("pred[]") == 1
+
+
+def test_while_operand_not_charged():
+    """Control-flow ops alias their carried tuple: charging it would count
+    the full loop state as traffic once per while op."""
+    res = H.analyze(MODULE)
+    # traffic per iter: dot (x 512 + w 1024 + out 512), all-reduce
+    # (512 + 512), add 12 — the 516 B while-carry tuple is never charged
+    per_iter = (512 + 1024 + 512) + (512 + 512) + 12
+    assert res["bytes_accessed"] <= 10 * per_iter + 200

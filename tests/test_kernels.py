@@ -1,0 +1,166 @@
+"""Per-kernel allclose tests against the pure oracles, swept over shapes and
+dtypes, executed in Pallas interpret mode (CPU validation of the TPU target).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.datastore import make_pred
+from repro.data.synthetic import CityConfig, make_sites
+from repro.kernels.hash64 import ref as href
+from repro.kernels.hash64.hash64 import xxh64
+from repro.kernels.st_scan import ops as st_ops
+from repro.kernels.st_scan import ref as st_ref
+from repro.kernels.voronoi_assign import ref as vref
+from repro.kernels.voronoi_assign.voronoi_assign import voronoi_assign
+
+
+# ---------------------------------------------------------------------------
+# hash64
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 1024, 3000])
+def test_hash64_kernel_vs_oracle(n):
+    rng = np.random.default_rng(n)
+    hi = rng.integers(0, 1 << 32, n, dtype=np.uint32)
+    lo = rng.integers(0, 1 << 32, n, dtype=np.uint32)
+    got_hi, got_lo = xxh64(jnp.asarray(hi), jnp.asarray(lo), interpret=True)
+    exp_hi, exp_lo = href.xxh64_batch_py(hi, lo)
+    np.testing.assert_array_equal(np.asarray(got_hi), exp_hi)
+    np.testing.assert_array_equal(np.asarray(got_lo), exp_lo)
+
+
+# ---------------------------------------------------------------------------
+# voronoi_assign
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,e,block", [(64, 8, 64), (1000, 20, 256), (4096, 80, 1024)])
+def test_voronoi_kernel_vs_oracle(n, e, block):
+    rng = np.random.default_rng(e)
+    sites = make_sites(e, CityConfig(), seed=3)
+    pts = rng.uniform([12.85, 77.45], [13.10, 77.75], (n, 2)).astype(np.float32)
+    got = np.asarray(voronoi_assign(jnp.asarray(pts), jnp.asarray(sites),
+                                    block_p=block, interpret=True))
+    exp = vref.voronoi_assign_ref(pts, sites)
+    diff = got != exp
+    if diff.any():  # only near-equidistant points may disagree (fp32)
+        d = ((pts[diff, None, :] - sites[None]) ** 2).sum(-1)
+        best2 = np.sort(d, axis=1)[:, :2]
+        assert np.all((best2[:, 1] - best2[:, 0]) < 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# st_scan
+# ---------------------------------------------------------------------------
+
+def random_scan_problem(rng, e=4, c=1024, q=3, l=8, w=7):
+    tup_f = rng.uniform(0, 100, (e, c, w)).astype(np.float32)
+    tup_sid = rng.integers(0, 6, (e, c, 2)).astype(np.int32)
+    tup_count = rng.integers(0, c + 1, (e,)).astype(np.int32)
+    sublists = rng.integers(0, 6, (q, e, l, 2)).astype(np.int32)
+    sublist_len = rng.integers(-1, l + 1, (q, e)).astype(np.int32)
+    pred = make_pred(
+        q=q,
+        lat0=rng.uniform(0, 50, q).astype(np.float32),
+        lat1=rng.uniform(50, 100, q).astype(np.float32),
+        lon0=rng.uniform(0, 50, q).astype(np.float32),
+        lon1=rng.uniform(50, 100, q).astype(np.float32),
+        t0=rng.uniform(0, 50, q).astype(np.float32),
+        t1=rng.uniform(50, 100, q).astype(np.float32),
+        sid_hi=rng.integers(0, 6, q).astype(np.int32),
+        sid_lo=rng.integers(0, 6, q).astype(np.int32),
+        has_spatial=rng.random(q) < 0.7,
+        has_temporal=rng.random(q) < 0.7,
+        has_sid=rng.random(q) < 0.3,
+        is_and=rng.random(q) < 0.7)
+    return (jnp.asarray(tup_f), jnp.asarray(tup_sid), jnp.asarray(tup_count),
+            pred, jnp.asarray(sublists), jnp.asarray(sublist_len))
+
+
+@pytest.mark.parametrize("seed,c,block", [(0, 512, 128), (1, 1024, 256),
+                                          (2, 1536, 512), (3, 640, 128)])
+def test_st_scan_kernel_vs_ref(seed, c, block):
+    rng = np.random.default_rng(seed)
+    args = random_scan_problem(rng, c=c)
+    exp = st_ref.st_scan_ref(*args)
+    got = st_ops.st_scan(*args, block_c=block, interpret=True)
+    for g, x, name in zip(got, exp, ["count", "vsum", "vmin", "vmax"]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(x), rtol=1e-5,
+                                   err_msg=name)
+
+
+def test_st_scan_scan_all_sentinel():
+    """sublist_len < 0 must scan without shard scoping (broadcast mode)."""
+    rng = np.random.default_rng(7)
+    tup_f, tup_sid, tup_count, pred, sublists, _ = random_scan_problem(rng)
+    q, e = sublists.shape[:2]
+    slen = jnp.full((q, e), -1, jnp.int32)
+    exp = st_ref.st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, slen)
+    got = st_ops.st_scan(tup_f, tup_sid, tup_count, pred, sublists, slen,
+                         block_c=256, interpret=True)
+    for g, x in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(x), rtol=1e-5)
+
+
+def test_st_scan_empty_edges():
+    rng = np.random.default_rng(9)
+    tup_f, tup_sid, _, pred, sublists, slen = random_scan_problem(rng)
+    zero = jnp.zeros(tup_f.shape[0], jnp.int32)
+    got = st_ops.st_scan(tup_f, tup_sid, zero, pred, sublists, slen,
+                         block_c=256, interpret=True)
+    assert int(np.asarray(got[0]).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attention.ops import flash_attention_pallas
+from repro.models.attention import naive_attention
+
+
+@pytest.mark.parametrize("b,s,h,kv,dh,bq,bk,causal", [
+    (1, 256, 4, 4, 64, 128, 128, True),
+    (2, 256, 8, 2, 32, 64, 128, True),     # GQA group=4
+    (1, 384, 4, 1, 64, 128, 128, False),   # MQA, bidirectional
+    (1, 128, 2, 2, 128, 64, 64, True),
+])
+def test_flash_pallas_vs_naive(b, s, h, kv, dh, bq, bk, causal):
+    key = jax.random.key(s + h)
+    q = jax.random.normal(key, (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, dh), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, dh), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
+                                 block_k=bk, interpret=True)
+    exp = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_flash_pallas_bf16():
+    key = jax.random.key(9)
+    q = jax.random.normal(key, (1, 256, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 4, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 4, 64), jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    exp = naive_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(exp),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_pallas_q_offset_decode_window():
+    """Chunked decode: q block at offset p attends only to k[:p+block]."""
+    key = jax.random.key(11)
+    b, s, h, dh, p = 1, 256, 2, 32, 128
+    q = jax.random.normal(key, (b, 128, h, dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, dh), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, dh), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, q_offset=p,
+                                 interpret=True)
+    from repro.models.attention import flash_attention as flash_jnp
+    exp = flash_jnp(q, k, v, causal=True, q_offset=p, chunk_kv=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-5,
+                               atol=2e-5)

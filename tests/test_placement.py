@@ -1,0 +1,85 @@
+"""Placement + Voronoi tests (paper §3.4.1–3.4.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.placement import ShardMeta, place_replicas, successor_resolve
+from repro.core.voronoi import voronoi_assign
+from repro.data.synthetic import CityConfig, DroneFleet, make_sites
+from repro.kernels.voronoi_assign import ref as vref
+
+
+def _meta(n, rng, city=CityConfig()):
+    lat = rng.uniform(city.lat_min, city.lat_max, (n, 2)).astype(np.float32)
+    lon = rng.uniform(city.lon_min, city.lon_max, (n, 2)).astype(np.float32)
+    t = rng.uniform(0, 86400, (n, 2)).astype(np.float32)
+    return ShardMeta(
+        sid_hi=rng.integers(0, 100, n).astype(np.int32),
+        sid_lo=rng.integers(0, 1 << 30, n).astype(np.int32),
+        lat0=lat.min(1), lat1=lat.max(1),
+        lon0=lon.min(1), lon1=lon.max(1),
+        t0=t.min(1), t1=t.max(1))
+
+
+def test_voronoi_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    sites = make_sites(20, CityConfig(), seed=3)
+    pts = rng.uniform([12.85, 77.45], [13.10, 77.75], (500, 2)).astype(np.float32)
+    got = np.asarray(voronoi_assign(jnp.asarray(pts), jnp.asarray(sites)))
+    exp = vref.voronoi_assign_ref(pts, sites)
+    # fp32 matmul-form distance can flip genuinely equidistant points; allow
+    # disagreement only where the two distances are almost equal.
+    diff = got != exp
+    if diff.any():
+        d = ((pts[diff, None, :] - sites[None]) ** 2).sum(-1)
+        best2 = np.sort(d, axis=1)[:, :2]
+        assert np.all((best2[:, 1] - best2[:, 0]) < 1e-4)
+
+
+def test_replicas_distinct_and_alive():
+    rng = np.random.default_rng(1)
+    sites = jnp.asarray(make_sites(20, CityConfig(), seed=3))
+    meta = _meta(256, rng)
+    alive = jnp.ones(20, bool).at[jnp.asarray([3, 7])].set(False)
+    reps = np.asarray(place_replicas(meta, sites, alive, 300.0))
+    assert reps.shape == (256, 3)
+    for row in reps:
+        assert len(set(row.tolist())) == 3, row
+        assert 3 not in row and 7 not in row
+
+
+@given(st.integers(min_value=3, max_value=20), st.data())
+@settings(deadline=None, max_examples=25)
+def test_replicas_property(n_alive, data):
+    """With >= 3 alive edges, placement always returns 3 distinct alive edges
+    (the precondition for the paper's 2-failure durability guarantee)."""
+    e = 20
+    alive_idx = data.draw(st.sets(st.integers(0, e - 1), min_size=n_alive,
+                                  max_size=n_alive))
+    alive = np.zeros(e, bool)
+    alive[list(alive_idx)] = True
+    rng = np.random.default_rng(data.draw(st.integers(0, 1 << 30)))
+    meta = _meta(16, rng)
+    sites = jnp.asarray(make_sites(e, CityConfig(), seed=3))
+    reps = np.asarray(place_replicas(meta, sites, jnp.asarray(alive), 300.0))
+    for row in reps:
+        assert len(set(row.tolist())) == 3
+        assert all(alive[r] for r in row)
+
+
+def test_successor_resolve_wraps():
+    forbidden = jnp.asarray([[True, True, False, True]])
+    got = successor_resolve(jnp.asarray([3], jnp.int32), forbidden)
+    assert int(got[0]) == 2  # wraps 3 -> 0 -> 1 -> 2
+
+
+def test_fleet_generates_valid_shards():
+    fleet = DroneFleet(8, records_per_shard=12)
+    payload, meta = fleet.next_shards()
+    assert payload.shape == (8, 12, 7)
+    assert np.all(meta.lat0 <= meta.lat1) and np.all(meta.t0 <= meta.t1)
+    payload2, meta2 = fleet.next_shards()
+    assert np.all(meta2.t0 >= meta.t1)  # rounds advance in time
+    assert meta2.sid_lo[0] == 1

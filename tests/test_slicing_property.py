@@ -1,0 +1,74 @@
+"""THE index-correctness invariant (paper §3.4.3), property-tested:
+
+If a query range overlaps a shard range, then the query's slice->edge set
+must intersect the edges holding that shard's index entry — otherwise the
+shard would be invisible to the query. Both sides quantize with the same
+fixed grid, so any shared point lands in the same slice, which hashes to
+the same edge. Overflowed (over-budget) ranges fall back to broadcast and
+are exempt (handled by the datastore's broadcast path).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import assume, given, settings
+from hypothesis import strategies as st
+
+from repro.core.slicing import SliceConfig, spatial_slice_edges, temporal_slice_edges
+from repro.data.synthetic import CityConfig, make_sites
+
+E = 16
+SITES = jnp.asarray(make_sites(E, CityConfig(), seed=3))
+CFG = SliceConfig()
+
+coord = st.floats(min_value=12.85, max_value=13.10, allow_nan=False)
+lon_c = st.floats(min_value=77.45, max_value=77.75, allow_nan=False)
+tval = st.floats(min_value=0.0, max_value=86400.0, allow_nan=False)
+
+
+def _rng(a, b):
+    return (min(a, b), max(a, b))
+
+
+ext = st.floats(min_value=0.0, max_value=2000.0, allow_nan=False)
+
+
+@given(tval, ext, ext, ext, ext)
+@settings(deadline=None, max_examples=60)
+def test_temporal_overlap_implies_edge_intersection(pt, e1, e2, e3, e4):
+    # build both ranges AROUND a shared point => overlap by construction
+    s0, s1 = pt - e1, pt + e2     # shard range
+    q0, q1 = pt - e3, pt + e4     # query range
+    sm, s_ovf = temporal_slice_edges(jnp.asarray([s0], jnp.float32),
+                                     jnp.asarray([s1], jnp.float32), E, CFG)
+    qm, q_ovf = temporal_slice_edges(jnp.asarray([q0], jnp.float32),
+                                     jnp.asarray([q1], jnp.float32), E, CFG)
+    assume(not bool(s_ovf[0]) and not bool(q_ovf[0]))
+    assert bool(jnp.any(sm[0] & qm[0])), (s0, s1, q0, q1)
+
+
+sext = st.floats(min_value=0.0, max_value=0.05, allow_nan=False)
+
+
+@given(coord, lon_c, sext, sext, sext, sext, sext, sext, sext, sext)
+@settings(deadline=None, max_examples=40)
+def test_spatial_overlap_implies_edge_intersection(lat, lon, a1, a2, b1, b2,
+                                                   c1, c2, d1, d2):
+    # both bboxes contain (lat, lon) => overlap by construction
+    slat0, slat1 = lat - a1, lat + a2
+    slon0, slon1 = lon - b1, lon + b2
+    qlat0, qlat1 = lat - c1, lat + c2
+    qlon0, qlon1 = lon - d1, lon + d2
+    f32 = lambda x: jnp.asarray([x], jnp.float32)
+    sm, s_ovf = spatial_slice_edges(f32(slat0), f32(slat1), f32(slon0),
+                                    f32(slon1), SITES, CFG)
+    qm, q_ovf = spatial_slice_edges(f32(qlat0), f32(qlat1), f32(qlon0),
+                                    f32(qlon1), SITES, CFG)
+    assume(not bool(s_ovf[0]) and not bool(q_ovf[0]))
+    assert bool(jnp.any(sm[0] & qm[0]))
+
+
+def test_point_range_slices():
+    """Degenerate (point) ranges produce exactly one slice edge."""
+    m, ovf = temporal_slice_edges(jnp.asarray([500.0]), jnp.asarray([500.0]),
+                                  E, CFG)
+    assert int(m.sum()) == 1 and not bool(ovf[0])
