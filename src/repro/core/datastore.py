@@ -8,8 +8,31 @@ operations are pure jittable functions: ``insert_step(state, shards) ->
 
   tup_f:   (E, CAP_T, 3+V) float32   t, lat, lon, v0..  — the per-edge tuple log
   tup_sid: (E, CAP_T, 2)   int32     owning shard id (hi, lo)
-  tup_count, tup_dropped: (E,)       append cursor / overflow telemetry
+  tup_count: (E,)          int32     total tuples EVER written (monotonic)
+  tup_pos: (E,)            int32     ring write cursor in [0, capacity)
+  tup_overwritten, tup_dropped: (E,) retention / loss telemetry
   index:   IndexState                sliced distributed index (index.py)
+
+Retention semantics (sustained ingest, paper §3.4: drones offload 60-sample
+shards every 5 minutes *indefinitely*): the tuple log is a **ring buffer** —
+``tup_count`` counts every tuple ever written and the physical slot is
+``position % tuple_capacity``, so once an edge's log is full new tuples
+overwrite the oldest ones instead of being dropped. The retained window on an
+edge is always the most recent ``min(tup_count, tuple_capacity)`` tuples
+(scan validity rule ``slot < min(count, cap)``). ``tup_overwritten`` counts
+tuples aged out by retention; ``tup_dropped`` counts tuples actually *lost*
+(stays 0 under ring-buffer semantics). Every ``retention_every``-th insert
+step derives a per-edge watermark (oldest retained timestamp, once the ring
+has wrapped) and runs ``index.retire_entries`` + ``index.compact_index`` so
+the shard index tracks the same sliding window instead of saturating.
+
+Query exactness under retention: replicas' rings wrap at independent rates,
+and the planner picks one replica per shard without retention awareness, so
+exact results are guaranteed for windows that lie inside *every* replica's
+retained window (what the sustained-ingest tests and fig15 assert). Windows
+straddling the retention boundary are answered best-effort — a
+faster-wrapping replica may already have overwritten tuples a slower one
+still holds; loss is bounded by the replicas' retention skew.
 
 The per-edge query engine (the paper's InfluxDB role) is a predicate scan —
 ``repro.kernels.st_scan`` provides the Pallas TPU kernel; ``scan_engine`` here
@@ -27,9 +50,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing, planner as planner_lib
-from repro.core.index import IndexState, MatchedShards, QueryPred, init_index, insert_entries, lookup
+from repro.core.index import (IndexState, MatchedShards, QueryPred,
+                              compact_index, init_index, insert_entries,
+                              lookup, retire_entries)
 from repro.core.placement import ShardMeta, place_replicas
 from repro.core.slicing import SliceConfig, spatial_slice_edges, temporal_slice_edges
+
+
+def _default_site_grid(n_edges: int) -> Tuple[Tuple[float, float], ...]:
+    """Deterministic lat/lon grid over the synthetic-city bbox, slightly
+    inset — used when ``sites`` is left empty so a default-constructed
+    StoreConfig is immediately usable. Bounds come from CityConfig itself
+    (lazy import; the data layer already depends on core) so the default
+    deployment region can never drift from the default data region."""
+    from repro.data.synthetic import CityConfig
+    city = CityConfig()
+    pad_lat = 0.08 * (city.lat_max - city.lat_min)
+    pad_lon = 0.08 * (city.lon_max - city.lon_min)
+    rows = int(np.ceil(np.sqrt(n_edges)))
+    cols = int(np.ceil(n_edges / rows))
+    lat = np.linspace(city.lat_min + pad_lat, city.lat_max - pad_lat, rows)
+    lon = np.linspace(city.lon_min + pad_lon, city.lon_max - pad_lon, cols)
+    grid = [(float(la), float(lo)) for la in lat for lo in lon]
+    return tuple(grid[:n_edges])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,7 +82,7 @@ class StoreConfig:
     sites: Tuple[Tuple[float, float], ...] = ()   # (E, 2) edge locations
     tau: float = 300.0
     slice_cfg: SliceConfig = SliceConfig()
-    tuple_capacity: int = 1 << 14                 # tuples per edge
+    tuple_capacity: int = 1 << 14                 # ring-buffer slots per edge
     index_capacity: int = 1 << 12                 # index entries per edge
     max_shards_per_query: int = 128               # S
     records_per_shard: int = 60                   # R (paper: 60 samples / 5 min)
@@ -48,6 +91,32 @@ class StoreConfig:
     use_index: bool = True                        # False => broadcast baseline
     planner: str = "min_shards"
     or_group: int = 150                           # paper: sub-queries split at 150 sids
+    retention_every: int = 4                      # insert steps between index sweeps
+
+    def __post_init__(self):
+        if not (1 <= self.replication <= 3):
+            raise ValueError(
+                f"replication={self.replication} is unsupported: index entries "
+                "carry exactly 3 replica slots (paper §3.4.2); pass "
+                "1 <= replication <= 3.")
+        if not self.use_index and self.replication != 1:
+            raise ValueError(
+                f"use_index=False with replication={self.replication} would "
+                f"overcount results ~{self.replication}x: the broadcast "
+                "baseline has no shard scoping, so every replica edge scans "
+                "every tuple. Use replication=1 for the Feather-like "
+                "baseline, or keep the index enabled.")
+        if self.retention_every < 1:
+            raise ValueError(
+                f"retention_every={self.retention_every} must be >= 1 (index "
+                "retention sweeps run every retention_every insert steps).")
+        if not self.sites:
+            object.__setattr__(self, "sites", _default_site_grid(self.n_edges))
+        elif len(self.sites) != self.n_edges:
+            raise ValueError(
+                f"sites has {len(self.sites)} entries but n_edges="
+                f"{self.n_edges}; pass one (lat, lon) per edge or leave "
+                "sites=() for a deterministic default grid.")
 
     @property
     def tuple_width(self) -> int:
@@ -61,8 +130,19 @@ class StoreState(NamedTuple):
     index: IndexState
     tup_f: jnp.ndarray
     tup_sid: jnp.ndarray
-    tup_count: jnp.ndarray
-    tup_dropped: jnp.ndarray
+    tup_count: jnp.ndarray        # (E,) total tuples ever written (monotonic;
+                                  #      saturates near 2^31 — see _COUNT_SAT)
+    tup_pos: jnp.ndarray          # (E,) ring write cursor, always in [0, cap)
+    tup_overwritten: jnp.ndarray  # (E,) tuples aged out by ring retention
+    tup_dropped: jnp.ndarray      # (E,) tuples actually lost (0 by design)
+    steps: jnp.ndarray            # () insert steps executed (retention cadence)
+
+
+# The monotonic counter saturates here instead of wrapping int32 negative
+# (which would silently blank every scan). The ring write position uses
+# tup_pos, which never overflows, so ingest continues correctly past this
+# point — only the total-written telemetry stops being exact.
+_COUNT_SAT = (1 << 31) - (1 << 26)
 
 
 class QueryResult(NamedTuple):
@@ -107,7 +187,10 @@ def init_store(cfg: StoreConfig) -> StoreState:
         tup_f=jnp.zeros((e, cfg.tuple_capacity, cfg.tuple_width), jnp.float32),
         tup_sid=jnp.full((e, cfg.tuple_capacity, 2), -1, jnp.int32),
         tup_count=jnp.zeros((e,), jnp.int32),
+        tup_pos=jnp.zeros((e,), jnp.int32),
+        tup_overwritten=jnp.zeros((e,), jnp.int32),
         tup_dropped=jnp.zeros((e,), jnp.int32),
+        steps=jnp.zeros((), jnp.int32),
     )
 
 
@@ -136,6 +219,11 @@ def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
                 meta: ShardMeta, alive: jnp.ndarray):
     """Insert B shards (R tuples each) — placement, replication, indexing.
 
+    The tuple log is a ring buffer: writes land at ``position % capacity``
+    (oldest-first overwrite), so inserts never saturate; every
+    ``cfg.retention_every``-th call additionally retires + compacts index
+    entries that aged out of the retained window.
+
     Args:
       payload: (B, R, 3+V) tuple records (t, lat, lon, values...).
       meta:    ShardMeta of the B shards.
@@ -145,6 +233,12 @@ def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     """
     e, cap = cfg.n_edges, cfg.tuple_capacity
     b, r, w = payload.shape
+    if b * r > cap:
+        raise ValueError(
+            f"batch writes {b}x{r}={b * r} tuples, exceeding tuple_capacity="
+            f"{cap}: one edge could wrap its own ring within a single "
+            "insert_step (scatter order would be undefined). Split the batch "
+            "or raise tuple_capacity.")
     sites = cfg.sites_array()
 
     replicas = place_replicas(meta, sites, alive, cfg.tau)      # (B, 3)
@@ -154,10 +248,10 @@ def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     dm = jnp.any(replicas[..., None] == jnp.arange(e, dtype=jnp.int32), axis=1)  # (B, E)
     dm = dm & alive[None, :]
     rank = jnp.cumsum(dm, axis=0) - 1                            # (B, E)
-    start = state.tup_count[None, :] + rank * r                  # (B, E)
+    start = state.tup_pos[None, :] + rank * r                    # (B, E)
     pos = start[..., None] + jnp.arange(r, dtype=jnp.int32)      # (B, E, R)
-    ok = dm[..., None] & (pos < cap)
-    pp = jnp.where(ok, pos, cap)                                 # drop OOB
+    ok = dm[..., None]
+    pp = jnp.where(ok, pos % cap, cap)                           # ring slot; sentinel drops
     ee = jnp.broadcast_to(jnp.arange(e, dtype=jnp.int32)[None, :, None], (b, e, r))
 
     pay = jnp.broadcast_to(payload[:, None], (b, e, r, w))
@@ -167,23 +261,55 @@ def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     tup_f = state.tup_f.at[ee, pp].set(pay, mode="drop")
     tup_sid = state.tup_sid.at[ee, pp].set(sid, mode="drop")
     n_in = jnp.sum(dm, axis=0) * r                               # (E,)
-    tup_count = jnp.minimum(state.tup_count + n_in, cap).astype(jnp.int32)
-    n_dropped = state.tup_dropped + jnp.sum(jnp.sum(dm[..., None] & (pos >= cap),
-                                                    axis=-1), axis=0)
+    tup_pos = ((state.tup_pos + n_in) % cap).astype(jnp.int32)
+    tup_count = jnp.minimum(state.tup_count + n_in,
+                            _COUNT_SAT).astype(jnp.int32)        # monotonic
+    # Retention telemetry: slots reclaimed from the previous window.
+    valid_before = jnp.minimum(state.tup_count, cap)
+    valid_after = jnp.minimum(tup_count, cap)
+    overwritten_now = (valid_before + n_in - valid_after).astype(jnp.int32)
+    tup_overwritten = jnp.minimum(state.tup_overwritten + overwritten_now,
+                                  _COUNT_SAT).astype(jnp.int32)
+
+    # --- index retention (cadenced): retire entries whose data has aged out
+    # of every replica edge's ring, then compact so the cursor is reusable.
+    # Runs BEFORE this batch's index writes so freed slots host the fresh
+    # entries. Watermarks (oldest retained timestamp; -inf until the ring
+    # wraps) are only computed on sweep steps — the (E, CAP) reduction stays
+    # off the ingest hot path. ---
+    steps = state.steps + 1
+
+    def _sweep(ix):
+        retained = (jnp.arange(cap, dtype=jnp.int32)[None, :]
+                    < valid_after[:, None])                      # (E, CAP)
+        t_oldest = jnp.min(jnp.where(retained, tup_f[..., 0], jnp.inf), axis=1)
+        wm = jnp.where(tup_count > cap, t_oldest,
+                       -jnp.inf).astype(jnp.float32)             # (E,)
+        return compact_index(retire_entries(ix, wm)), wm
+
+    def _no_sweep(ix):
+        return ix, jnp.full((e,), -jnp.inf, jnp.float32)
+
+    index, watermark = jax.lax.cond(
+        steps % cfg.retention_every == 0, _sweep, _no_sweep, state.index)
 
     # --- sliced index entries (§3.4.3) ---
     idx_mask = _index_edge_mask(cfg, meta, replicas, sites, alive)
-    index = insert_entries(state.index, meta,
+    index = insert_entries(index, meta,
                            jnp.pad(replicas, ((0, 0), (0, 3 - cfg.replication)),
                                    constant_values=-1),
                            idx_mask)
 
-    new_state = StoreState(index, tup_f, tup_sid, tup_count, n_dropped)
+    new_state = StoreState(index, tup_f, tup_sid, tup_count, tup_pos,
+                           tup_overwritten, state.tup_dropped, steps)
     info = {
         "replicas": replicas,
         "intake_per_edge": n_in,
         "index_writes_per_edge": jnp.sum(idx_mask, axis=0),
-        "tuples_dropped": n_dropped - state.tup_dropped,
+        "tuples_overwritten": overwritten_now,
+        "tuples_dropped": jnp.zeros_like(n_in),
+        "index_entries_retired": index.retired - state.index.retired,
+        "retention_watermark": watermark,
     }
     return new_state, info
 
@@ -234,26 +360,33 @@ def _lookup_sets(cfg: StoreConfig, pred: QueryPred, sites: jnp.ndarray,
 
 
 def scan_engine(tup_f, tup_sid, tup_count, pred: QueryPred, sublists,
-                sublist_len, use_kernel: bool = False):
+                sublist_len, use_kernel: bool = False,
+                interpret: Optional[bool] = None):
     """Per-edge predicate scan (the InfluxDB role). Evaluates each query's
-    predicate + shard OR-list against every edge-local tuple.
+    predicate + shard OR-list against the edge-local retained window
+    (``slot < min(tup_count, capacity)`` — ring-buffer validity).
 
     Args:
       sublists:    (Q, E, L, 2) int32 shard ids assigned to each (query, edge).
       sublist_len: (Q, E) int32 — #valid entries in each OR-list.
+      use_kernel:  dispatch to the Pallas TPU kernel instead of the jnp ref.
+      interpret:   force Pallas interpret mode; None = auto (compiled on TPU,
+                   interpreted elsewhere).
 
     Returns (count, vsum, vmin, vmax): each (Q, E).
     """
     if use_kernel:
         from repro.kernels.st_scan import ops as st_ops
-        return st_ops.st_scan(tup_f, tup_sid, tup_count, pred, sublists, sublist_len)
+        return st_ops.st_scan(tup_f, tup_sid, tup_count, pred, sublists,
+                              sublist_len, interpret=interpret)
     from repro.kernels.st_scan import ref as st_ref
     return st_ref.st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len)
 
 
-@partial(jax.jit, static_argnums=(0, 5))
+@partial(jax.jit, static_argnums=(0, 5, 6))
 def query_step(cfg: StoreConfig, state: StoreState, pred: QueryPred,
-               alive: jnp.ndarray, key: jax.Array, use_kernel: bool = False):
+               alive: jnp.ndarray, key: jax.Array, use_kernel: bool = False,
+               interpret: Optional[bool] = None):
     """Decentralized query execution (paper Fig 4): index lookup -> planning
     -> per-edge sub-queries -> combine. Returns (QueryResult, QueryInfo)."""
     e = cfg.n_edges
@@ -281,7 +414,8 @@ def query_step(cfg: StoreConfig, state: StoreState, pred: QueryPred,
         shards_matched = jnp.sum(matched.valid, axis=-1)
     else:
         # Broadcast baseline (Feather-like): no shard scoping; every alive
-        # edge scans everything. Correct only under replication=1.
+        # edge scans everything. StoreConfig rejects use_index=False with
+        # replication > 1, which would overcount ~R-fold here.
         sublists = jnp.zeros((q, e, 1, 2), jnp.int32)
         sublist_len = jnp.where(jnp.broadcast_to(alive, (q, e)), -1, 0).astype(jnp.int32)
         ovf = jnp.zeros((q,), jnp.bool_)
@@ -289,7 +423,8 @@ def query_step(cfg: StoreConfig, state: StoreState, pred: QueryPred,
 
     count, vsum, vmin, vmax = scan_engine(state.tup_f, state.tup_sid,
                                           state.tup_count, pred,
-                                          sublists, sublist_len, use_kernel)
+                                          sublists, sublist_len, use_kernel,
+                                          interpret)
 
     result = QueryResult(
         count=jnp.sum(count, axis=-1).astype(jnp.int32),

@@ -1,4 +1,4 @@
-"""Distributed in-memory shard index with slicing (paper §3.4.3).
+"""Distributed in-memory shard index with slicing + retention (paper §3.4.3).
 
 Every edge keeps a fixed-capacity table of index entries
 ``{shardID, bbox, trange, replicas[3]}``. An entry for a shard is written to
@@ -12,6 +12,17 @@ Static-shape storage (TPU adaptation):
   valid:  (E, CAP)     bool
   cursor: (E,)         int32    append position
   dropped:(E,)         int32    entries lost to capacity overflow (telemetry)
+  retired:(E,)         int32    entries invalidated by retention (telemetry)
+
+Retention (sustained ingest): the tuple log is a ring buffer, so an edge only
+retains a sliding window of recent tuples. ``retire_entries`` invalidates
+entries whose newest timestamp (t1) has fallen behind the per-edge retention
+watermark — their tuples have been overwritten and a lookup hit would only
+produce an empty sub-query. ``compact_index`` then squashes the surviving
+entries to the front of the table so the append cursor is reusable; together
+they keep the index serving indefinitely instead of saturating at CAP. The
+datastore wires both into ``insert_step`` on a configurable cadence
+(``StoreConfig.retention_every``).
 
 The leading E axis is the *logical edge axis* — sharded over the device mesh
 by the datastore; every operation here is batched dense array math so the
@@ -34,6 +45,7 @@ class IndexState(NamedTuple):
     valid: jnp.ndarray
     cursor: jnp.ndarray
     dropped: jnp.ndarray
+    retired: jnp.ndarray
 
 
 class QueryPred(NamedTuple):
@@ -72,6 +84,7 @@ def init_index(n_edges: int, capacity: int) -> IndexState:
         valid=jnp.zeros((n_edges, capacity), jnp.bool_),
         cursor=jnp.zeros((n_edges,), jnp.int32),
         dropped=jnp.zeros((n_edges,), jnp.int32),
+        retired=jnp.zeros((n_edges,), jnp.int32),
     )
 
 
@@ -109,7 +122,49 @@ def insert_entries(state: IndexState, meta: ShardMeta, replicas: jnp.ndarray,
     ent_i = state.ent_i.at[ee, pp].set(vals_i, mode="drop")
     valid = state.valid.at[ee, pp].set(ok, mode="drop")
     cursor = jnp.minimum(state.cursor + jnp.sum(edge_mask, axis=0), cap).astype(jnp.int32)
-    return IndexState(ent_f, ent_i, valid, cursor, state.dropped + n_dropped)
+    return IndexState(ent_f, ent_i, valid, cursor, state.dropped + n_dropped,
+                      state.retired)
+
+
+def retire_entries(state: IndexState, t_watermark: jnp.ndarray) -> IndexState:
+    """Invalidate entries whose tuples have left the retention window.
+
+    Args:
+      t_watermark: (E,) float32 — per-edge oldest retained tuple timestamp
+          (``-inf`` until that edge's ring buffer has wrapped).
+
+    An entry's data lives on its *replica* edges (``ent_i[..., 2:5]``), not on
+    the slice-owner edge holding the entry, so the test is replica-aware: an
+    entry is retired only when its newest timestamp ``t1`` is behind the
+    watermark of **every** replica edge — every tuple of the shard has
+    t <= t1 < watermark[r] <= all timestamps retained on replica r, i.e. the
+    shard is gone from everywhere it was stored. Entries whose data may
+    survive on a slower replica edge are kept. Keeping a stale entry costs
+    occupancy, not result quality: a fully-overwritten shard's id matches no
+    tuple (empty sub-query), a partially-overwritten one still surfaces its
+    surviving tuples. Exactness guarantees are scoped to query windows
+    retained on every replica — see the retention notes in ``datastore.py``.
+    """
+    reps = state.ent_i[..., 2:5]                                  # (E, CAP, 3)
+    rep_wm = t_watermark[jnp.clip(reps, 0, t_watermark.shape[0] - 1)]
+    rep_wm = jnp.where(reps >= 0, rep_wm, jnp.inf)                # unused slots
+    gone_everywhere = state.ent_f[..., 5] < jnp.min(rep_wm, axis=-1)
+    stale = state.valid & gone_everywhere
+    return state._replace(
+        valid=state.valid & ~stale,
+        retired=state.retired + jnp.sum(stale, axis=1).astype(jnp.int32))
+
+
+def compact_index(state: IndexState) -> IndexState:
+    """Squash valid entries to the front of each edge's table (stable order)
+    and rewind the append cursor, making slots freed by ``retire_entries``
+    writable again. Pure fixed-shape gather — jit/pjit compatible."""
+    order = jnp.argsort(~state.valid, axis=1, stable=True)   # valid-first
+    ent_f = jnp.take_along_axis(state.ent_f, order[..., None], axis=1)
+    ent_i = jnp.take_along_axis(state.ent_i, order[..., None], axis=1)
+    valid = jnp.take_along_axis(state.valid, order, axis=1)
+    cursor = jnp.sum(state.valid, axis=1).astype(jnp.int32)
+    return IndexState(ent_f, ent_i, valid, cursor, state.dropped, state.retired)
 
 
 def entry_matches(state: IndexState, pred: QueryPred) -> jnp.ndarray:

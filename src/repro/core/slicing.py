@@ -26,7 +26,7 @@ degenerate case for unindexable predicates (§3.5.1).
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
 
@@ -45,7 +45,7 @@ class SliceConfig(NamedTuple):
 
 
 def temporal_slice_edges(t0: jnp.ndarray, t1: jnp.ndarray, n_edges: int,
-                         cfg: SliceConfig) -> jnp.ndarray:
+                         cfg: SliceConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Multi-hot (..., E) mask of edges owning the temporal slices of [t0, t1].
 
     Returns (mask, overflow): overflow=True marks ranges wider than the static
@@ -65,11 +65,14 @@ def temporal_slice_edges(t0: jnp.ndarray, t1: jnp.ndarray, n_edges: int,
 
 
 def spatial_slice_edges(lat0, lat1, lon0, lon1, sites: jnp.ndarray,
-                        cfg: SliceConfig):
+                        cfg: SliceConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Multi-hot (..., E) mask of edges owning the spatial cells of a bbox.
 
     Cells are a fixed grid of width cfg.cell; each covered cell's center is
     located in the Voronoi diagram (H_s). Budget is max_s_slices per axis.
+
+    Returns (mask, overflow): overflow=True marks bboxes wider than the
+    static slice budget — callers must broadcast for those.
     """
     n_edges = sites.shape[0]
     i0 = jnp.floor((lat0 - cfg.lat0) / cfg.cell).astype(jnp.int32)

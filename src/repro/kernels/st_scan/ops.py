@@ -1,14 +1,15 @@
 """Jit'd wrapper for the st_scan Pallas kernel.
 
 Accepts the datastore's row-major layout and QueryPred struct, performs the
-TPU-friendly column-major relayout + padding, and invokes the kernel. On CPU
-(tests / this container) the kernel runs in interpret mode; on TPU set
-``interpret=False``.
+TPU-friendly column-major relayout + padding, and invokes the kernel.
+``interpret=None`` (the default) auto-selects: compiled execution on TPU,
+interpret mode elsewhere (CPU tests / this container).
 """
 
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +33,16 @@ def pack_pred(pred):
 
 @partial(jax.jit, static_argnames=("block_c", "interpret"))
 def st_scan(tup_f, tup_sid, tup_count, pred, sublists, sublist_len,
-            block_c: int = 512, interpret: bool = True):
-    """Drop-in replacement for ref.st_scan_ref backed by the Pallas kernel."""
+            block_c: int = 512, interpret: Optional[bool] = None):
+    """Drop-in replacement for ref.st_scan_ref backed by the Pallas kernel.
+
+    ``tup_count`` is the monotonic total-written counter; the valid window is
+    ``min(count, C)`` (ring-buffer retention). The unpadded C is forwarded to
+    the kernel as ``valid_c`` so its per-lane bound never admits the lanes
+    this wrapper pads on.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     e, c, w = tup_f.shape
     pad_c = (-c) % block_c
     tupf_t = jnp.swapaxes(tup_f, 1, 2)           # (E, W, C): tuples on lanes
@@ -50,4 +59,4 @@ def st_scan(tup_f, tup_sid, tup_count, pred, sublists, sublist_len,
     pred_f, pred_i = pack_pred(pred)
     return st_scan_kernel(tupf_t, sid_t, tup_count[:, None], pred_f, pred_i,
                           sublists, sublist_len, block_c=block_c,
-                          interpret=interpret)
+                          interpret=interpret, valid_c=c)

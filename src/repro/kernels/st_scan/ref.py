@@ -39,7 +39,8 @@ def st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len):
     Args:
       tup_f:       (E, C, 3+V) float32.
       tup_sid:     (E, C, 2) int32.
-      tup_count:   (E,) int32 valid prefix length.
+      tup_count:   (E,) int32 total tuples ever written (monotonic); the log
+                   is a ring buffer, so slots < min(count, C) hold live data.
       pred:        QueryPred with (Q,) fields.
       sublists:    (Q, E, L, 2) int32 shard OR-lists.
       sublist_len: (Q, E) int32 (see module docstring).
@@ -52,7 +53,10 @@ def st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len):
     q = sublists.shape[0]
     l = sublists.shape[2]
 
-    alive_t = jnp.arange(c, dtype=jnp.int32)[None, :] < tup_count[:, None]   # (E, C)
+    # Ring-buffer validity: every slot below min(count, capacity) is live
+    # (once the ring wraps, all slots are — count keeps growing past C).
+    n_valid = jnp.minimum(tup_count, c)
+    alive_t = jnp.arange(c, dtype=jnp.int32)[None, :] < n_valid[:, None]     # (E, C)
     pm = tuple_pred_match(tup_f[None], tup_sid[None], pred)                  # (Q, E, C)
 
     # Shard OR-list membership: tuple sid against each list entry.

@@ -29,7 +29,8 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(tupf_ref, sidl_ref, cnt_ref, predf_ref, predi_ref, subl_ref,
-            slen_ref, count_ref, vsum_ref, vmin_ref, vmax_ref, *, block_c: int):
+            slen_ref, count_ref, vsum_ref, vmin_ref, vmax_ref, *, block_c: int,
+            valid_c: int):
     pc = pl.program_id(2)
 
     @pl.when(pc == 0)
@@ -46,7 +47,10 @@ def _kernel(tupf_ref, sidl_ref, cnt_ref, predf_ref, predi_ref, subl_ref,
     sid_hi = sidl_ref[0, 0:1, :]
     sid_lo = sidl_ref[0, 1:2, :]
 
-    n_valid = cnt_ref[0, 0]
+    # Ring-buffer validity: slots below min(count, valid_c) are live, where
+    # valid_c is the UNPADDED log length — a monotonic total-written count
+    # above capacity must never admit zero-padding lanes.
+    n_valid = jnp.minimum(cnt_ref[0, 0], valid_c)
     base = pc * block_c
     idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1)
     alive = idx < n_valid
@@ -80,28 +84,39 @@ def _kernel(tupf_ref, sidl_ref, cnt_ref, predf_ref, predi_ref, subl_ref,
 
 
 def st_scan_kernel(tupf_t, sid_t, tup_count, pred_f, pred_i, sublists_t,
-                   sublist_len, *, block_c: int = 512, interpret: bool = True):
+                   sublist_len, *, block_c: int = 512,
+                   interpret: "bool | None" = None,
+                   valid_c: "int | None" = None):
     """Invoke the Pallas scan.
 
     Args:
       tupf_t:      (E, W, C) float32 column-major tuple log (W >= 4).
       sid_t:       (E, 2, C) int32 shard ids.
-      tup_count:   (E, 1) int32.
+      tup_count:   (E, 1) int32 — ring-buffer total-written counter; clamped
+                   in-kernel to min(count, valid_c).
       pred_f:      (Q, 8) float32 packed predicate.
       pred_i:      (Q, 8) int32 packed predicate.
       sublists_t:  (Q, E, L, 2) int32 OR-lists.
       sublist_len: (Q, E) int32.
+      interpret:   None = auto (compiled on TPU, interpreted elsewhere).
+      valid_c:     unpadded log length (ops.py pads C to a block multiple and
+                   passes the original here so padding lanes are never
+                   admitted); None = C.
 
     Returns (count, vsum, vmin, vmax), each (Q, E).
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     e, w, c = tupf_t.shape
+    if valid_c is None:
+        valid_c = c
     q = pred_f.shape[0]
     l = sublists_t.shape[2]
     if c % block_c:
         raise ValueError(f"C={c} must be a multiple of block_c={block_c}")
     grid = (e, q, c // block_c)
 
-    kernel = functools.partial(_kernel, block_c=block_c)
+    kernel = functools.partial(_kernel, block_c=block_c, valid_c=valid_c)
     out = pl.pallas_call(
         kernel,
         grid=grid,

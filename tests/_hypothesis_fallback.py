@@ -1,0 +1,208 @@
+"""Deterministic fallback for the subset of the `hypothesis` API this repo
+uses, for environments where the real package cannot be installed (the
+canonical dependency is declared in pyproject's ``[test]`` extra and CI
+installs it). ``tests/conftest.py`` installs this module under the
+``hypothesis`` / ``hypothesis.strategies`` names only when the real import
+fails, so test modules stay byte-identical either way.
+
+Semantics: ``@given`` draws ``max_examples`` examples (default 25) from a PRNG
+seeded by the test's qualified name, so runs are reproducible; there is no
+shrinking or example database. ``assume(False)`` rejects the current example;
+a test whose every example is rejected fails loudly rather than silently
+passing.
+"""
+
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+_REJECT_MULTIPLIER = 20      # draw budget per accepted example before giving up
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class SearchStrategy:
+    def do_draw(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.min_value = float(min_value)
+        self.max_value = float(max_value)
+
+    def do_draw(self, rng):
+        # Hit the endpoints with elevated probability — boundary values are
+        # where range/slicing properties break.
+        u = rng.random()
+        if u < 0.05:
+            return self.min_value
+        if u < 0.10:
+            return self.max_value
+        return float(rng.uniform(self.min_value, self.max_value))
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.min_value = int(min_value)
+        self.max_value = int(max_value)
+
+    def do_draw(self, rng):
+        u = rng.random()
+        if u < 0.05:
+            return self.min_value
+        if u < 0.10:
+            return self.max_value
+        return int(rng.integers(self.min_value, self.max_value + 1))
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size, max_size):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size
+
+    def do_draw(self, rng):
+        n = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.do_draw(rng) for _ in range(n)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, strategies):
+        self.strategies = strategies
+
+    def do_draw(self, rng):
+        return tuple(s.do_draw(rng) for s in self.strategies)
+
+
+class _Sets(SearchStrategy):
+    def __init__(self, elements, min_size, max_size):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size
+
+    def do_draw(self, rng):
+        target = int(rng.integers(self.min_size, self.max_size + 1))
+        out = set()
+        for _ in range(1000):
+            if len(out) >= target:
+                break
+            out.add(self.elements.do_draw(rng))
+        if len(out) < self.min_size:
+            raise UnsatisfiedAssumption()  # element domain too small
+        return out
+
+
+class _DataObject:
+    """Interactive draws inside a test body (``st.data()``)."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.do_draw(self._rng)
+
+
+class _Data(SearchStrategy):
+    def do_draw(self, rng):
+        return _DataObject(rng)
+
+
+def floats(min_value=None, max_value=None, allow_nan=None, allow_infinity=None,
+           width=64, **_):
+    if min_value is None or max_value is None:
+        raise NotImplementedError("fallback floats() needs explicit bounds")
+    return _Floats(min_value, max_value)
+
+
+def integers(min_value=None, max_value=None):
+    if min_value is None or max_value is None:
+        raise NotImplementedError("fallback integers() needs explicit bounds")
+    return _Integers(min_value, max_value)
+
+
+def lists(elements, min_size=0, max_size=None, **_):
+    return _Lists(elements, min_size, max_size if max_size is not None
+                  else min_size + 10)
+
+
+def tuples(*strategies):
+    return _Tuples(strategies)
+
+
+def sets(elements, min_size=0, max_size=None, **_):
+    return _Sets(elements, min_size, max_size if max_size is not None
+                 else min_size + 10)
+
+
+def data():
+    return _Data()
+
+
+class settings:
+    """Decorator recording max_examples; deadline/other knobs are ignored."""
+
+    def __init__(self, deadline=None, max_examples=DEFAULT_MAX_EXAMPLES, **_):
+        self.max_examples = max_examples
+
+    def __call__(self, f):
+        f._fallback_settings = self
+        return f
+
+
+def given(*strategies):
+    def decorate(f):
+        def runner():
+            cfg = (getattr(runner, "_fallback_settings", None)
+                   or getattr(f, "_fallback_settings", None))
+            max_examples = cfg.max_examples if cfg else DEFAULT_MAX_EXAMPLES
+            seed = zlib.crc32(f.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            executed = 0
+            for _ in range(max_examples * _REJECT_MULTIPLIER):
+                if executed >= max_examples:
+                    break
+                try:
+                    args = [s.do_draw(rng) for s in strategies]
+                    f(*args)
+                except UnsatisfiedAssumption:
+                    continue
+                executed += 1
+            if executed == 0:
+                raise RuntimeError(
+                    f"{f.__qualname__}: every generated example was rejected "
+                    "by assume(); the strategy bounds are unsatisfiable")
+
+        # Intentionally no functools.wraps: __wrapped__ would make pytest
+        # resurrect the inner signature and demand fixtures for drawn args.
+        runner.__name__ = f.__name__
+        runner.__qualname__ = f.__qualname__
+        runner.__doc__ = f.__doc__
+        runner.__module__ = f.__module__
+        if hasattr(f, "pytestmark"):
+            runner.pytestmark = f.pytestmark
+        return runner
+
+    return decorate
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.floats = floats
+strategies.integers = integers
+strategies.lists = lists
+strategies.tuples = tuples
+strategies.sets = sets
+strategies.data = data
+strategies.SearchStrategy = SearchStrategy

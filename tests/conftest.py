@@ -1,0 +1,20 @@
+"""Test-session bootstrap.
+
+If the real `hypothesis` package is unavailable (offline containers — the
+canonical dependency lives in pyproject's ``[test]`` extra), install the
+deterministic fallback shim under the same module names before any test
+module imports it. Test files import ``hypothesis`` unconditionally and are
+identical under either implementation.
+"""
+
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies

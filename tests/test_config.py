@@ -1,0 +1,60 @@
+"""StoreConfig validation: default construction, replication bounds, the
+broadcast-baseline x replication interaction, and insert batch limits."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.datastore import StoreConfig, init_store, insert_step
+from repro.core.placement import ShardMeta
+from repro.data.synthetic import DroneFleet
+
+
+def test_default_config_constructs_and_is_usable():
+    """StoreConfig() with no sites synthesizes a deterministic grid."""
+    cfg = StoreConfig()
+    sites = np.asarray(cfg.sites_array())
+    assert sites.shape == (cfg.n_edges, 2)
+    assert len({tuple(s) for s in sites.tolist()}) == cfg.n_edges  # distinct
+    assert StoreConfig().sites == cfg.sites                        # deterministic
+    state = init_store(cfg)
+    assert state.tup_f.shape == (cfg.n_edges, cfg.tuple_capacity, cfg.tuple_width)
+
+
+def test_sites_length_mismatch_raises():
+    with pytest.raises(ValueError, match="n_edges"):
+        StoreConfig(n_edges=4, sites=((0.0, 0.0), (1.0, 1.0)))
+
+
+@pytest.mark.parametrize("replication", [0, -1, 4, 7])
+def test_replication_out_of_range_raises(replication):
+    """Seed bug: replication > 3 crashed insert_step with a negative pad
+    width; now rejected at config construction."""
+    with pytest.raises(ValueError, match="replication"):
+        StoreConfig(replication=replication)
+
+
+def test_broadcast_baseline_requires_replication_one():
+    """Seed bug: use_index=False with replication > 1 silently overcounted
+    ~R-fold (every replica edge scans every tuple); now rejected."""
+    with pytest.raises(ValueError, match="overcount"):
+        StoreConfig(use_index=False, replication=3)
+    StoreConfig(use_index=False, replication=1)  # the valid baseline
+
+
+def test_retention_every_validated():
+    with pytest.raises(ValueError, match="retention_every"):
+        StoreConfig(retention_every=0)
+
+
+def test_insert_batch_larger_than_capacity_raises():
+    """A single batch that could wrap one edge's ring within one insert_step
+    is rejected at trace time (scatter order would be undefined)."""
+    cfg = StoreConfig(n_edges=4, tuple_capacity=64, records_per_shard=16)
+    state = init_store(cfg)
+    fleet = DroneFleet(8, records_per_shard=16)
+    payload, meta = fleet.next_shards()
+    meta = ShardMeta(*[jnp.asarray(x) for x in meta])
+    alive = jnp.ones(cfg.n_edges, bool)
+    with pytest.raises(ValueError, match="tuple_capacity"):
+        insert_step(cfg, state, jnp.asarray(payload), meta, alive)

@@ -104,6 +104,25 @@ def test_st_scan_scan_all_sentinel():
         np.testing.assert_allclose(np.asarray(g), np.asarray(x), rtol=1e-5)
 
 
+def test_st_scan_ring_count_clamp():
+    """Ring-buffer validity: tup_count above capacity (monotonic total-written
+    counter) must behave exactly like a full log — min(count, cap) — in both
+    engines."""
+    rng = np.random.default_rng(11)
+    tup_f, tup_sid, _, pred, sublists, slen = random_scan_problem(rng)
+    c = tup_f.shape[1]
+    over = jnp.asarray(rng.integers(c + 1, 5 * c, tup_f.shape[0]), jnp.int32)
+    full = jnp.full(tup_f.shape[0], c, jnp.int32)
+    exp = st_ref.st_scan_ref(tup_f, tup_sid, full, pred, sublists, slen)
+    got_ref = st_ref.st_scan_ref(tup_f, tup_sid, over, pred, sublists, slen)
+    got_ker = st_ops.st_scan(tup_f, tup_sid, over, pred, sublists, slen,
+                             block_c=256, interpret=True)
+    for g, x in zip(got_ref, exp):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(x))
+    for g, x in zip(got_ker, exp):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(x), rtol=1e-5)
+
+
 def test_st_scan_empty_edges():
     rng = np.random.default_rng(9)
     tup_f, tup_sid, _, pred, sublists, slen = random_scan_problem(rng)
