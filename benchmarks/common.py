@@ -19,6 +19,7 @@ from repro.core.datastore import (StoreConfig, init_store, insert_step,
                                   make_pred, query_step)
 from repro.core.placement import ShardMeta
 from repro.data.synthetic import CityConfig, DroneFleet, make_sites, make_query_workload
+from repro.distributed.federation import ingest_rounds, shard_store
 
 ROWS = []
 
@@ -40,25 +41,27 @@ def timeit(fn, *args, warmup=1, iters=3):
 
 def build_store(n_edges=20, n_drones=20, rounds=4, records=30, planner="min_shards",
                 replication=3, use_index=True, tuple_capacity=1 << 15, seed=0,
-                stagger_s=0.0, index_capacity=4096, retention_every=4):
+                stagger_s=0.0, index_capacity=4096, retention_every=4,
+                mesh=None, max_shards=512):
+    """Stand up a loaded store. Ingest goes through the fused lax.scan driver
+    (one dispatch for all rounds, donated state); pass ``mesh`` (an edge mesh)
+    to load through the sharded federated runtime instead of 1-device jit."""
     sites = make_sites(n_edges, CityConfig(), seed=3)
     cfg = StoreConfig(
         n_edges=n_edges, sites=tuple(map(tuple, sites.tolist())),
         tuple_capacity=tuple_capacity, index_capacity=index_capacity,
-        max_shards_per_query=512, records_per_shard=records,
+        max_shards_per_query=max_shards, records_per_shard=records,
         planner=planner, replication=replication, use_index=use_index,
         retention_every=retention_every)
     fleet = DroneFleet(n_drones, records_per_shard=records, seed=seed + 1,
                        stagger_s=stagger_s)
     state = init_store(cfg)
+    if mesh is not None:
+        state = shard_store(state, mesh)
     alive = jnp.ones(n_edges, bool)
-    payloads = []
-    for _ in range(rounds):
-        payload, meta = fleet.next_shards()
-        meta = ShardMeta(*[jnp.asarray(x) for x in meta])
-        state, _ = insert_step(cfg, state, jnp.asarray(payload), meta, alive)
-        payloads.append(payload)
-    flat = np.concatenate(payloads).reshape(-1, payloads[0].shape[-1])
+    payloads, metas = fleet.next_rounds(rounds)
+    state, _ = ingest_rounds(cfg, state, payloads, metas, alive, mesh=mesh)
+    flat = payloads.reshape(-1, payloads.shape[-1])
     t_max = float(flat[:, 0].max())
     anchors = flat[:, :3]          # (t, lat, lon) of every inserted tuple
     return cfg, state, alive, fleet, t_max, anchors

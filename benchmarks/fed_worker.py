@@ -1,0 +1,78 @@
+"""Subprocess worker for the fig7 sharded-runtime scaling sweep.
+
+Runs a paper-scale deployment (default: 80 edges / 400 drones, §4.4.2 D400)
+through the sharded federated runtime on N simulated host devices and emits
+the usual ``name,us_per_call,derived`` rows on stdout. Must be launched with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` already in the
+environment (jax locks the device count at first backend initialization, so
+the parent — fig7_insertion_scaling.py — sets it and spawns this module).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m benchmarks.fed_worker --devices 4
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, required=True)
+    ap.add_argument("--edges", type=int, default=80)
+    ap.add_argument("--drones", type=int, default=400)
+    ap.add_argument("--records", type=int, default=15)
+    ap.add_argument("--prefill-rounds", type=int, default=2)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    if jax.device_count() != args.devices:
+        raise SystemExit(
+            f"expected {args.devices} devices, found {jax.device_count()} — "
+            "launch with XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{args.devices}")
+
+    from benchmarks.common import build_store, timeit
+    from repro.core.datastore import make_pred, query_step
+    from repro.core.placement import ShardMeta
+    from repro.distributed.federation import (federated_insert_step,
+                                              federated_query_step)
+    from repro.launch.mesh import make_edge_mesh
+
+    mesh = make_edge_mesh(args.devices)
+    # tuple_capacity sized so the H_t hotspot edge (§3.4.1: one synchronous
+    # round can land every shard's temporal replica on one edge) never wraps
+    # within the run — keeps the catch-all count exact. min_edges planner:
+    # its greedy loop is O(E) iterations vs O(#shards) for min_shards, which
+    # matters at 1200 matched shards.
+    cfg, state, alive, fleet, t_max, anchors = build_store(
+        n_edges=args.edges, n_drones=args.drones, rounds=args.prefill_rounds,
+        records=args.records, tuple_capacity=1 << 15, mesh=mesh,
+        planner="min_edges",
+        max_shards=2048)
+
+    payload, meta = fleet.next_shards()
+    meta = ShardMeta(*[jnp.asarray(x) for x in meta])
+    pj = jnp.asarray(payload)
+    us, (state2, _) = timeit(
+        lambda: federated_insert_step(cfg, state, pj, meta, alive, mesh))
+    tag = f"E{args.edges}/D{args.drones}/dev{args.devices}"
+    print(f"fig7/sharded_insert/{tag},{us:.1f},"
+          f"us_per_shard={us / args.drones:.1f};devices={args.devices}",
+          flush=True)
+
+    # Query smoke on the sharded store: exact catch-all count proves the
+    # sharded runtime answered, not just ingested.
+    pred = make_pred(q=1, t0=0.0, t1=1e9, has_temporal=True, is_and=True)
+    result, _ = federated_query_step(cfg, state2, pred, alive,
+                                     jax.random.key(0), mesh)
+    expected = (args.prefill_rounds + 1) * args.drones * args.records
+    got = int(np.asarray(result.count)[0])
+    if got != expected:
+        raise SystemExit(f"sharded catch-all count {got} != {expected}")
+    print(f"fig7/sharded_query_exact/{tag},0.0,count={got}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

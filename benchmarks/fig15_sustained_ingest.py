@@ -75,6 +75,23 @@ def run():
          f"retired={int(np.asarray(state.index.retired).sum())};"
          f"idx_dropped={int(np.asarray(state.index.dropped).sum())}")
 
+    # Fused ingest driver: the same steady-state ingest as ONE lax.scan
+    # dispatch over stacked rounds with donated state (federation.ingest_rounds)
+    # — amortizes per-round dispatch + host sync vs the per-step loop above.
+    from repro.distributed.federation import ingest_rounds
+    n_fused = 16
+    payloads_f, metas_f = fleet.next_rounds(n_fused)
+    warm, _ = ingest_rounds(cfg, jax.tree.map(jnp.copy, state), payloads_f,
+                            metas_f, alive)     # compile; donates the copy
+    jax.block_until_ready(warm.tup_count)
+    t0 = time.perf_counter()
+    warm, _ = ingest_rounds(cfg, warm, payloads_f, metas_f, alive)
+    jax.block_until_ready(warm.tup_count)
+    us_fused = (time.perf_counter() - t0) * 1e6 / n_fused
+    emit("fig15/insert_steady_fused", us_fused,
+         f"rounds_per_dispatch={n_fused};"
+         f"speedup_vs_loop={np.mean(steady_us[1:]) / us_fused:.2f}x")
+
     # Retained-window query: widest recent window that provably fits every ring.
     intakes_arr = np.asarray(intakes)
     k = 1

@@ -1,5 +1,8 @@
-"""Fig 7 + §4.4.2: insertion latency D100 (20 edges) vs D400 (80 edges), and
-the replica load-balance band across edges.
+"""Fig 7 + §4.4.2: insertion latency D100 (20 edges) vs D400 (80 edges), the
+replica load-balance band across edges, and sharded-runtime insertion scaling
+(the paper-scale D400 config over 1/2/4/8 simulated devices — each worker
+subprocess forces its own host device count, since jax locks it at backend
+initialization).
 
 Balance note: the paper's §3.4.1 discusses the temporal-clustering hotspot —
 when every drone emits a shard with the SAME collection timestamp, H_t sends
@@ -8,6 +11,11 @@ that hotspot here (visible as max >> mean); with multiple rounds (temporal
 diversity, as in the paper's 48 h workload) the band tightens toward the
 paper's 3846-4479 range.
 """
+import os
+import subprocess
+import sys
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +23,30 @@ import numpy as np
 from benchmarks.common import build_store, emit, timeit
 from repro.core.datastore import insert_step
 from repro.core.placement import ShardMeta
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_sharded_scaling(device_counts=(1, 2, 4, 8)):
+    """Paper-scale 80-edge/400-drone ingest through the sharded federated
+    runtime, one subprocess per simulated device count."""
+    for ndev in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+        src = str(REPO_ROOT / "src")
+        env["PYTHONPATH"] = src + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.fed_worker",
+             "--devices", str(ndev)],
+            capture_output=True, text=True, env=env, cwd=REPO_ROOT)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"fed_worker (devices={ndev}) failed:\n{proc.stderr[-4000:]}")
+        for line in proc.stdout.splitlines():
+            if line.startswith("fig7/"):
+                name, us, derived = line.split(",", 2)
+                emit(name, float(us), derived)
 
 
 def run():
@@ -40,3 +72,6 @@ def run():
         emit(f"fig7/hotspot_single_round/{name}", 0.0,
              f"max={pe1.max()};mean={pe1.mean():.0f};"
              f"paper_s3.4.1_temporal_clustering")
+
+    # --- sharded federated runtime: D400 over 1/2/4/8 simulated devices ---
+    run_sharded_scaling()

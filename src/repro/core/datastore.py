@@ -6,6 +6,20 @@ insertion path literally reuses the dispatch-by-one-hot pattern). All
 operations are pure jittable functions: ``insert_step(state, shards) ->
 (state, info)`` and ``query_step(state, queries) -> (results, info)``.
 
+Sharded-state layout contract (the federation story, paper §3.3): the leading
+E dimension of every ``StoreState`` array (including the nested ``IndexState``)
+is the mesh axis ``"edge"`` — each device of an ``("edge",)`` mesh hosts a
+contiguous block of ``E / n_devices`` ground edge servers, exactly like one
+edge site owning its local InfluxDB. The bodies here are therefore factored as
+*shard-local* functions (``insert_local`` / ``query_local``) parameterized by
+``edge_ids`` — the global ids of the edges this state slice holds — plus a
+collective hook for the two metadata-scale cross-device exchanges (the
+retention-watermark all-gather and the candidate-shard merge).
+``insert_step``/``query_step`` are the 1-device special case
+(``edge_ids = arange(E)``, identity hooks); ``repro.distributed.federation``
+wraps the same bodies in ``shard_map`` so the per-edge tuple scan runs
+device-local and only the final (Q, E) combine crosses devices.
+
   tup_f:   (E, CAP_T, 3+V) float32   t, lat, lon, v0..  — the per-edge tuple log
   tup_sid: (E, CAP_T, 2)   int32     owning shard id (hi, lo)
   tup_count: (E,)          int32     total tuples EVER written (monotonic)
@@ -214,53 +228,52 @@ def _index_edge_mask(cfg: StoreConfig, meta: ShardMeta, replicas: jnp.ndarray,
     return mask & alive[None, :]
 
 
-@partial(jax.jit, static_argnums=(0,))
-def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
-                meta: ShardMeta, alive: jnp.ndarray):
-    """Insert B shards (R tuples each) — placement, replication, indexing.
+def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
+                 meta: ShardMeta, alive: jnp.ndarray, edge_ids: jnp.ndarray,
+                 gather_watermark=lambda wm: wm):
+    """Shard-local insert body — placement, replication, indexing.
 
-    The tuple log is a ring buffer: writes land at ``position % capacity``
-    (oldest-first overwrite), so inserts never saturate; every
-    ``cfg.retention_every``-th call additionally retires + compacts index
-    entries that aged out of the retained window.
+    ``state`` arrays carry a slice of the logical edge axis whose global ids
+    are ``edge_ids`` (the full ``arange(E)`` on one device); ``payload``,
+    ``meta``, ``alive`` are global and replicated. Placement and slice masks
+    are metadata-scale, recomputed replicated on every shard; the tuple
+    scatter and index writes touch only the local edges.
 
-    Args:
-      payload: (B, R, 3+V) tuple records (t, lat, lon, values...).
-      meta:    ShardMeta of the B shards.
-      alive:   (E,) availability mask.
+    ``gather_watermark`` maps this shard's (E_local,) retention watermark to
+    the global (E,) watermark that ``retire_entries`` needs (entries name
+    replica edges anywhere in the deployment): identity on one device, an
+    all-gather over the "edge" mesh axis under shard_map.
 
-    Returns (new_state, info dict).
+    Returns (new_state, info dict) with per-edge info sliced like ``state``.
     """
-    e, cap = cfg.n_edges, cfg.tuple_capacity
+    cap = cfg.tuple_capacity
+    e_loc = edge_ids.shape[0]
     b, r, w = payload.shape
-    if b * r > cap:
-        raise ValueError(
-            f"batch writes {b}x{r}={b * r} tuples, exceeding tuple_capacity="
-            f"{cap}: one edge could wrap its own ring within a single "
-            "insert_step (scatter order would be undefined). Split the batch "
-            "or raise tuple_capacity.")
     sites = cfg.sites_array()
 
     replicas = place_replicas(meta, sites, alive, cfg.tau)      # (B, 3)
     replicas = replicas[:, : cfg.replication]
+    alive_loc = jnp.take(alive, edge_ids)
 
     # --- tuple dispatch: one-hot shard->edge routing (MoE-style) ---
-    dm = jnp.any(replicas[..., None] == jnp.arange(e, dtype=jnp.int32), axis=1)  # (B, E)
-    dm = dm & alive[None, :]
-    rank = jnp.cumsum(dm, axis=0) - 1                            # (B, E)
-    start = state.tup_pos[None, :] + rank * r                    # (B, E)
-    pos = start[..., None] + jnp.arange(r, dtype=jnp.int32)      # (B, E, R)
+    dm = jnp.any(replicas[..., None] == edge_ids, axis=1)        # (B, E_loc)
+    dm = dm & alive_loc[None, :]
+    rank = jnp.cumsum(dm, axis=0) - 1                            # (B, E_loc)
+    start = state.tup_pos[None, :] + rank * r                    # (B, E_loc)
+    pos = start[..., None] + jnp.arange(r, dtype=jnp.int32)      # (B, E_loc, R)
     ok = dm[..., None]
     pp = jnp.where(ok, pos % cap, cap)                           # ring slot; sentinel drops
-    ee = jnp.broadcast_to(jnp.arange(e, dtype=jnp.int32)[None, :, None], (b, e, r))
+    ee = jnp.broadcast_to(
+        jnp.arange(e_loc, dtype=jnp.int32)[None, :, None], (b, e_loc, r))
 
-    pay = jnp.broadcast_to(payload[:, None], (b, e, r, w))
+    pay = jnp.broadcast_to(payload[:, None], (b, e_loc, r, w))
     sid = jnp.broadcast_to(
-        jnp.stack([meta.sid_hi, meta.sid_lo], axis=-1)[:, None, None, :], (b, e, r, 2))
+        jnp.stack([meta.sid_hi, meta.sid_lo], axis=-1)[:, None, None, :],
+        (b, e_loc, r, 2))
 
     tup_f = state.tup_f.at[ee, pp].set(pay, mode="drop")
     tup_sid = state.tup_sid.at[ee, pp].set(sid, mode="drop")
-    n_in = jnp.sum(dm, axis=0) * r                               # (E,)
+    n_in = jnp.sum(dm, axis=0) * r                               # (E_loc,)
     tup_pos = ((state.tup_pos + n_in) % cap).astype(jnp.int32)
     tup_count = jnp.minimum(state.tup_count + n_in,
                             _COUNT_SAT).astype(jnp.int32)        # monotonic
@@ -276,25 +289,30 @@ def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     # Runs BEFORE this batch's index writes so freed slots host the fresh
     # entries. Watermarks (oldest retained timestamp; -inf until the ring
     # wraps) are only computed on sweep steps — the (E, CAP) reduction stays
-    # off the ingest hot path. ---
+    # off the ingest hot path. The watermark gather sits OUTSIDE the cond so
+    # every device executes the same collective schedule regardless of how
+    # rep-checking handles conditional branches. ---
     steps = state.steps + 1
+    do_sweep = steps % cfg.retention_every == 0
 
-    def _sweep(ix):
+    def _local_wm(_):
         retained = (jnp.arange(cap, dtype=jnp.int32)[None, :]
-                    < valid_after[:, None])                      # (E, CAP)
+                    < valid_after[:, None])                      # (E_loc, CAP)
         t_oldest = jnp.min(jnp.where(retained, tup_f[..., 0], jnp.inf), axis=1)
-        wm = jnp.where(tup_count > cap, t_oldest,
-                       -jnp.inf).astype(jnp.float32)             # (E,)
-        return compact_index(retire_entries(ix, wm)), wm
+        return jnp.where(tup_count > cap, t_oldest,
+                         -jnp.inf).astype(jnp.float32)           # (E_loc,)
 
-    def _no_sweep(ix):
-        return ix, jnp.full((e,), -jnp.inf, jnp.float32)
-
-    index, watermark = jax.lax.cond(
-        steps % cfg.retention_every == 0, _sweep, _no_sweep, state.index)
+    wm_local = jax.lax.cond(
+        do_sweep, _local_wm,
+        lambda _: jnp.full((e_loc,), -jnp.inf, jnp.float32), None)
+    watermark = gather_watermark(wm_local)                       # (E,) global
+    index = jax.lax.cond(
+        do_sweep, lambda ix: compact_index(retire_entries(ix, watermark)),
+        lambda ix: ix, state.index)
 
     # --- sliced index entries (§3.4.3) ---
-    idx_mask = _index_edge_mask(cfg, meta, replicas, sites, alive)
+    idx_mask = _index_edge_mask(cfg, meta, replicas, sites, alive)  # (B, E)
+    idx_mask = jnp.take(idx_mask, edge_ids, axis=1)                 # (B, E_loc)
     index = insert_entries(index, meta,
                            jnp.pad(replicas, ((0, 0), (0, 3 - cfg.replication)),
                                    constant_values=-1),
@@ -312,6 +330,48 @@ def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
         "retention_watermark": watermark,
     }
     return new_state, info
+
+
+def check_batch_fits(cfg: StoreConfig, payload_shape) -> None:
+    """Reject batches that could wrap one edge's ring within a single insert
+    (scatter order would be undefined). Static — call before tracing."""
+    b, r = payload_shape[0], payload_shape[1]
+    if b * r > cfg.tuple_capacity:
+        raise ValueError(
+            f"batch writes {b}x{r}={b * r} tuples, exceeding tuple_capacity="
+            f"{cfg.tuple_capacity}: one edge could wrap its own ring within a "
+            "single insert_step (scatter order would be undefined). Split the "
+            "batch or raise tuple_capacity.")
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _insert_step_jit(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
+                     meta: ShardMeta, alive: jnp.ndarray):
+    edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
+    return insert_local(cfg, state, payload, meta, alive, edge_ids)
+
+
+def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
+                meta: ShardMeta, alive: jnp.ndarray):
+    """Insert B shards (R tuples each) — the 1-device special case of
+    ``insert_local`` (see the sharded-state layout contract in the module
+    docstring; ``repro.distributed.federation`` runs the same body over a
+    device mesh).
+
+    The tuple log is a ring buffer: writes land at ``position % capacity``
+    (oldest-first overwrite), so inserts never saturate; every
+    ``cfg.retention_every``-th call additionally retires + compacts index
+    entries that aged out of the retained window.
+
+    Args:
+      payload: (B, R, 3+V) tuple records (t, lat, lon, values...).
+      meta:    ShardMeta of the B shards.
+      alive:   (E,) availability mask.
+
+    Returns (new_state, info dict).
+    """
+    check_batch_fits(cfg, payload.shape)
+    return _insert_step_jit(cfg, state, payload, meta, alive)
 
 
 # ---------------------------------------------------------------------------
@@ -383,55 +443,82 @@ def scan_engine(tup_f, tup_sid, tup_count, pred: QueryPred, sublists,
     return st_ref.st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len)
 
 
-@partial(jax.jit, static_argnums=(0, 5, 6))
-def query_step(cfg: StoreConfig, state: StoreState, pred: QueryPred,
-               alive: jnp.ndarray, key: jax.Array, use_kernel: bool = False,
-               interpret: Optional[bool] = None):
-    """Decentralized query execution (paper Fig 4): index lookup -> planning
-    -> per-edge sub-queries -> combine. Returns (QueryResult, QueryInfo)."""
-    e = cfg.n_edges
+def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
+                alive: jnp.ndarray, key: jax.Array, edge_ids: jnp.ndarray,
+                combine_matched=lambda local: local,
+                use_kernel: bool = False, interpret: Optional[bool] = None):
+    """Shard-local query body: index lookup -> planning -> per-edge sub-query
+    scan, over the slice of the edge axis named by ``edge_ids``.
+
+    Lookup-set selection and planning are metadata-scale and computed
+    replicated from the global ``pred``/``alive``; the index match and the
+    tuple scan touch only local state. ``combine_matched`` merges per-shard
+    candidate lists into the global ``MatchedShards`` every device plans
+    against: identity on one device; under shard_map, an all-gather of each
+    device's local top-S candidates re-deduplicated with
+    ``index.dedup_matched`` (exactly the single-device result — see there).
+
+    Returns (partials, sublist_len, (lookup_mask, broadcast, overflow,
+    shards_matched)): ``partials`` are the (Q, E_local) per-edge aggregates,
+    ``sublist_len`` is (Q, E_local); the rest is replicated metadata. Feed the
+    pieces (with per-edge arrays concatenated back to full E) to
+    ``finalize_query`` for the final combine.
+    """
     q = pred.lat0.shape[0]
     s = cfg.max_shards_per_query
+    e_loc = edge_ids.shape[0]
     sites = cfg.sites_array()
 
-    lookup_mask, broadcast = _lookup_sets(cfg, pred, sites, alive)
+    lookup_mask, broadcast = _lookup_sets(cfg, pred, sites, alive)   # (Q, E)
+    lookup_loc = jnp.take(lookup_mask, edge_ids, axis=1)             # (Q, E_loc)
 
     if cfg.use_index:
-        matched = lookup(state.index, pred, lookup_mask, s)
+        matched = combine_matched(
+            lookup(state.index, pred, lookup_loc, s))
         assignment = planner_lib.plan(cfg.planner, matched, alive, key)  # (Q, S)
         # Per-edge OR-lists: rank of shard within its assigned edge.
-        am = (assignment[..., None] == jnp.arange(e, dtype=jnp.int32))   # (Q, S, E)
+        am = (assignment[..., None] == edge_ids)                      # (Q, S, E_loc)
         rank = jnp.cumsum(am, axis=1) - 1
         pos = jnp.where(am, rank, s)
-        sublists = jnp.full((q, e, s, 2), -1, jnp.int32)
-        qq = jnp.broadcast_to(jnp.arange(q, dtype=jnp.int32)[:, None, None], (q, s, e))
-        ee = jnp.broadcast_to(jnp.arange(e, dtype=jnp.int32)[None, None, :], (q, s, e))
-        sidv = jnp.stack([matched.sid_hi, matched.sid_lo], axis=-1)       # (Q, S, 2)
-        sidv = jnp.broadcast_to(sidv[:, :, None, :], (q, s, e, 2))
+        sublists = jnp.full((q, e_loc, s, 2), -1, jnp.int32)
+        qq = jnp.broadcast_to(jnp.arange(q, dtype=jnp.int32)[:, None, None],
+                              (q, s, e_loc))
+        ee = jnp.broadcast_to(jnp.arange(e_loc, dtype=jnp.int32)[None, None, :],
+                              (q, s, e_loc))
+        sidv = jnp.stack([matched.sid_hi, matched.sid_lo], axis=-1)   # (Q, S, 2)
+        sidv = jnp.broadcast_to(sidv[:, :, None, :], (q, s, e_loc, 2))
         sublists = sublists.at[qq, ee, pos].set(sidv, mode="drop")
-        sublist_len = jnp.sum(am, axis=1).astype(jnp.int32)               # (Q, E)
+        sublist_len = jnp.sum(am, axis=1).astype(jnp.int32)           # (Q, E_loc)
         ovf = matched.overflow
         shards_matched = jnp.sum(matched.valid, axis=-1)
     else:
         # Broadcast baseline (Feather-like): no shard scoping; every alive
         # edge scans everything. StoreConfig rejects use_index=False with
         # replication > 1, which would overcount ~R-fold here.
-        sublists = jnp.zeros((q, e, 1, 2), jnp.int32)
-        sublist_len = jnp.where(jnp.broadcast_to(alive, (q, e)), -1, 0).astype(jnp.int32)
+        alive_loc = jnp.take(alive, edge_ids)
+        sublists = jnp.zeros((q, e_loc, 1, 2), jnp.int32)
+        sublist_len = jnp.where(jnp.broadcast_to(alive_loc, (q, e_loc)),
+                                -1, 0).astype(jnp.int32)
         ovf = jnp.zeros((q,), jnp.bool_)
         shards_matched = jnp.full((q,), -1, jnp.int32)
 
-    count, vsum, vmin, vmax = scan_engine(state.tup_f, state.tup_sid,
-                                          state.tup_count, pred,
-                                          sublists, sublist_len, use_kernel,
-                                          interpret)
+    partials = scan_engine(state.tup_f, state.tup_sid, state.tup_count, pred,
+                           sublists, sublist_len, use_kernel, interpret)
+    return partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched)
 
+
+def finalize_query(partials, sublist_len, lookup_mask, broadcast, overflow,
+                   shards_matched):
+    """Final (Q, E) -> (Q,) combine shared by the 1-device and sharded paths
+    (under the federated runtime, this is the only tuple-volume-independent
+    reduction crossing devices). ``partials`` are full-E per-edge aggregates."""
+    count, vsum, vmin, vmax = partials
     result = QueryResult(
         count=jnp.sum(count, axis=-1).astype(jnp.int32),
         vsum=jnp.sum(vsum, axis=-1),
         vmin=jnp.min(vmin, axis=-1),
         vmax=jnp.max(vmax, axis=-1),
-        overflow=ovf,
+        overflow=overflow,
     )
     info = QueryInfo(
         lookup_edges=jnp.sum(lookup_mask, axis=-1),
@@ -441,3 +528,18 @@ def query_step(cfg: StoreConfig, state: StoreState, pred: QueryPred,
         broadcast=broadcast,
     )
     return result, info
+
+
+@partial(jax.jit, static_argnums=(0, 5, 6))
+def query_step(cfg: StoreConfig, state: StoreState, pred: QueryPred,
+               alive: jnp.ndarray, key: jax.Array, use_kernel: bool = False,
+               interpret: Optional[bool] = None):
+    """Decentralized query execution (paper Fig 4): index lookup -> planning
+    -> per-edge sub-queries -> combine. The 1-device special case of
+    ``query_local``. Returns (QueryResult, QueryInfo)."""
+    edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
+    partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched) = \
+        query_local(cfg, state, pred, alive, key, edge_ids,
+                    use_kernel=use_kernel, interpret=interpret)
+    return finalize_query(partials, sublist_len, lookup_mask, broadcast, ovf,
+                          shards_matched)

@@ -184,26 +184,30 @@ def entry_matches(state: IndexState, pred: QueryPred) -> jnp.ndarray:
     return jnp.where(is_and, m_and, m_or) & state.valid[None]
 
 
-def lookup(state: IndexState, pred: QueryPred, lookup_mask: jnp.ndarray,
-           max_shards: int) -> MatchedShards:
-    """Index lookup (paper §3.5.1): match entries on the selected lookup
-    edges, deduplicate shard ids across edges, return up to ``max_shards``.
+def dedup_matched(matched: jnp.ndarray, sid_hi: jnp.ndarray, sid_lo: jnp.ndarray,
+                  replicas: jnp.ndarray, max_shards: int) -> MatchedShards:
+    """Deduplicate candidate shard ids, batched over queries.
+
+    Sorts matched-first by (sid_hi, sid_lo), keeps the first occurrence of
+    each distinct sid, and compacts the distinct matches to the front (so the
+    valid slots hold the ``max_shards`` smallest distinct sids in ascending
+    order — a canonical form). ``overflow`` flags queries with more distinct
+    matches than fit.
+
+    Used by ``lookup`` over the whole index, and by the federated runtime to
+    merge per-device candidate lists: because the valid slots are the
+    lexicographically smallest distinct sids, merging each device's local
+    top-``max_shards`` and re-deduplicating yields exactly the single-device
+    result (any sid excluded from a local top list has >= max_shards smaller
+    sids locally, hence globally — the distributed top-k argument).
 
     Args:
-      lookup_mask: (Q, E) bool — edges whose index each query consults.
+      matched:  (Q, N) bool — candidate participates.
+      sid_hi:   (Q, N) int32.
+      sid_lo:   (Q, N) int32.
+      replicas: (Q, N, 3) int32.
     """
-    q = pred.lat0.shape[0]
-    e, cap = state.valid.shape
-    match = entry_matches(state, pred) & lookup_mask[:, :, None]   # (Q, E, CAP)
-
-    flat_m = match.reshape(q, e * cap)
-    sid_hi = jnp.broadcast_to(state.ent_i[None, :, :, 0], (q, e, cap)).reshape(q, -1)
-    sid_lo = jnp.broadcast_to(state.ent_i[None, :, :, 1], (q, e, cap)).reshape(q, -1)
-    reps = jnp.broadcast_to(state.ent_i[None, :, :, 2:5], (q, e, cap, 3)).reshape(q, -1, 3)
-
     def one_query(m, hi, lo, rep):
-        # Sort matched-first by (sid_hi, sid_lo); mark first occurrence of
-        # each distinct sid; compact the distinct matches to the front.
         order = jnp.lexsort((lo, hi, ~m))
         m_s, hi_s, lo_s = m[order], hi[order], lo[order]
         rep_s = rep[order]
@@ -215,5 +219,34 @@ def lookup(state: IndexState, pred: QueryPred, lookup_mask: jnp.ndarray,
         return (hi_s[order2], lo_s[order2], rep_s[order2],
                 is_new[order2], n_unique > max_shards)
 
-    hi2, lo2, rep2, val2, ovf = jax.vmap(one_query)(flat_m, sid_hi, sid_lo, reps)
+    hi2, lo2, rep2, val2, ovf = jax.vmap(one_query)(matched, sid_hi, sid_lo,
+                                                    replicas)
     return MatchedShards(hi2, lo2, rep2, val2, ovf)
+
+
+def match_candidates(state: IndexState, pred: QueryPred,
+                     lookup_mask: jnp.ndarray):
+    """Flatten this index slice's entries into per-query candidate lists for
+    ``dedup_matched``: (matched, sid_hi, sid_lo, replicas), each (Q, E*CAP).
+    ``state`` may be a shard-local slice of the edge axis; ``lookup_mask`` is
+    (Q, E_local) over the same slice."""
+    q = pred.lat0.shape[0]
+    e, cap = state.valid.shape
+    match = entry_matches(state, pred) & lookup_mask[:, :, None]   # (Q, E, CAP)
+    flat_m = match.reshape(q, e * cap)
+    sid_hi = jnp.broadcast_to(state.ent_i[None, :, :, 0], (q, e, cap)).reshape(q, -1)
+    sid_lo = jnp.broadcast_to(state.ent_i[None, :, :, 1], (q, e, cap)).reshape(q, -1)
+    reps = jnp.broadcast_to(state.ent_i[None, :, :, 2:5], (q, e, cap, 3)).reshape(q, -1, 3)
+    return flat_m, sid_hi, sid_lo, reps
+
+
+def lookup(state: IndexState, pred: QueryPred, lookup_mask: jnp.ndarray,
+           max_shards: int) -> MatchedShards:
+    """Index lookup (paper §3.5.1): match entries on the selected lookup
+    edges, deduplicate shard ids across edges, return up to ``max_shards``.
+
+    Args:
+      lookup_mask: (Q, E) bool — edges whose index each query consults.
+    """
+    flat_m, sid_hi, sid_lo, reps = match_candidates(state, pred, lookup_mask)
+    return dedup_matched(flat_m, sid_hi, sid_lo, reps, max_shards)

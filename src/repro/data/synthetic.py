@@ -102,6 +102,16 @@ class DroneFleet:
         self.seq += 1
         return payload, meta
 
+    def next_rounds(self, n: int):
+        """Stack ``n`` collection rounds for the fused ingest driver
+        (``distributed.federation.ingest_rounds``): returns
+        (payloads (N, D, R, 3+V) float32, ShardMeta with (N, D) fields)."""
+        rounds = [self.next_shards() for _ in range(n)]
+        payloads = np.stack([p for p, _ in rounds])
+        meta = ShardMeta(*(np.stack([np.asarray(getattr(m, f)) for _, m in rounds])
+                           for f in ShardMeta._fields))
+        return payloads, meta
+
 
 def make_query_workload(rng, n_queries: int, city: CityConfig, t_max: float,
                         spatial_km: float, temporal_s: float):

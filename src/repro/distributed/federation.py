@@ -1,0 +1,247 @@
+"""Sharded federated runtime: the datastore partitioned over a device mesh.
+
+The paper's federation story at device scale — a 1-D ``("edge",)`` mesh
+(``launch.mesh.make_edge_mesh``) where each device plays a block of
+``E / n_devices`` ground edge servers, holding exactly those edges' slice of
+every ``StoreState`` array (leading logical-E dim; contract in
+``distributed.sharding.store_partition_specs``). The shard-local bodies in
+``core.datastore`` (``insert_local`` / ``query_local``) run under ``shard_map``
+so the tuple scatter, the index writes, and the per-edge predicate scan are
+all device-local; cross-device traffic is tuple-volume independent:
+
+  * insert — one (E,) all-gather of per-edge retention watermarks (entries
+    name replica edges anywhere, so retirement needs every edge's watermark);
+  * query  — one all-gather of each device's local top-S candidate shards,
+    re-deduplicated replicated (``index.dedup_matched``: distributed top-k,
+    bit-identical to the single-device lookup), then the final (Q, E) -> (Q,)
+    combine of per-edge partial aggregates;
+
+everything else (placement, slice masks, planning) is metadata-scale and
+recomputed replicated. ``tests/test_federation.py`` is the differential
+harness proving both paths produce identical results and states.
+
+Sustained ingest goes through ``ingest_rounds`` — a fused ``lax.scan`` over
+collection rounds that replaces Python-loop round-tripping (one dispatch, no
+per-round host sync) and **donates** the store so the tuple ring is updated
+in place instead of double-allocating (donation is a no-op on CPU backends).
+
+Paper-scale runs (80 edges / 400 drones over 1/2/4/8 simulated devices) are
+driven by ``benchmarks/fig7_insertion_scaling.py`` via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache, partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.core.datastore import (StoreConfig, StoreState, check_batch_fits,
+                                  finalize_query, insert_local, query_local)
+from repro.core.index import MatchedShards, dedup_matched
+from repro.core.placement import ShardMeta
+from repro.distributed.sharding import (EDGE_AXIS, shard_store,
+                                        store_partition_specs)
+
+__all__ = [
+    "federated_insert_step", "federated_query_step", "ingest_rounds",
+    "shard_store", "store_partition_specs",
+]
+
+
+def check_edge_mesh(cfg: StoreConfig, mesh: Mesh) -> int:
+    """Validate the mesh against the deployment; returns the device count."""
+    if EDGE_AXIS not in mesh.shape:
+        raise ValueError(
+            f"mesh axes {tuple(mesh.shape)} lack the '{EDGE_AXIS}' axis; "
+            "build the datastore mesh with launch.mesh.make_edge_mesh.")
+    n_dev = mesh.shape[EDGE_AXIS]
+    if cfg.n_edges % n_dev:
+        raise ValueError(
+            f"n_edges={cfg.n_edges} is not divisible by the edge-mesh size "
+            f"{n_dev}: every device must host the same number of edges "
+            "(contiguous blocks of the leading E axis).")
+    return n_dev
+
+
+def _replicated_like(tree):
+    """A pytree of replicated PartitionSpecs matching ``tree``'s structure."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def _insert_info_specs(scanned: bool):
+    """PartitionSpec tree for the insert info dict. Per-edge telemetry is
+    sharded like the state; replicas and the (post-gather) watermark are
+    replicated. ``scanned`` adds the leading rounds dim of ``ingest_rounds``."""
+    per_edge = P(None, EDGE_AXIS) if scanned else P(EDGE_AXIS)
+    return {
+        "replicas": P(),
+        "intake_per_edge": per_edge,
+        "index_writes_per_edge": per_edge,
+        "tuples_overwritten": per_edge,
+        "tuples_dropped": per_edge,
+        "index_entries_retired": per_edge,
+        "retention_watermark": P(),
+    }
+
+
+def _gather_watermark(wm_local: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.all_gather(wm_local, EDGE_AXIS, axis=0, tiled=True)
+
+
+def _merge_matched(local: MatchedShards, max_shards: int) -> MatchedShards:
+    """Merge per-device candidate lists into the global MatchedShards.
+
+    Each device contributes its local top-``max_shards`` distinct sids (in
+    dedup_matched's canonical ascending order); gathering those lists and
+    re-deduplicating yields exactly the single-device lookup result — any sid
+    missing from a local top list is preceded by >= max_shards smaller sids on
+    that device alone, so it cannot be in the global top-``max_shards``
+    either. Overflow is the OR of local overflows (a device that clipped has
+    > max_shards distinct sids globally too) and the merged count test.
+    """
+    cat = lambda x: jax.lax.all_gather(x, EDGE_AXIS, axis=1, tiled=True)
+    merged = dedup_matched(cat(local.valid), cat(local.sid_hi),
+                           cat(local.sid_lo), cat(local.replicas), max_shards)
+    any_local_ovf = jnp.any(
+        jax.lax.all_gather(local.overflow, EDGE_AXIS, axis=0, tiled=False),
+        axis=0)
+    return merged._replace(overflow=merged.overflow | any_local_ovf)
+
+
+@lru_cache(maxsize=None)
+def _insert_fn(cfg: StoreConfig, mesh: Mesh):
+    state_specs = store_partition_specs()
+    meta_specs = _replicated_like(ShardMeta(*ShardMeta._fields))
+
+    def body(state, payload, meta, alive, edge_ids):
+        return insert_local(cfg, state, payload, meta, alive, edge_ids,
+                            gather_watermark=_gather_watermark)
+
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(state_specs, P(), meta_specs, P(), P(EDGE_AXIS)),
+        out_specs=(state_specs, _insert_info_specs(scanned=False)),
+        check_rep=False)
+
+    def step(state, payload, meta, alive):
+        edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
+        return sharded(state, payload, meta, alive, edge_ids)
+
+    return jax.jit(step)
+
+
+def federated_insert_step(cfg: StoreConfig, state: StoreState,
+                          payload: jnp.ndarray, meta: ShardMeta,
+                          alive: jnp.ndarray, mesh: Mesh):
+    """``insert_step`` over an edge mesh: identical semantics, state sharded
+    per ``store_partition_specs``, device-local tuple/index writes."""
+    check_edge_mesh(cfg, mesh)
+    check_batch_fits(cfg, payload.shape)
+    return _insert_fn(cfg, mesh)(state, payload, meta, alive)
+
+
+@lru_cache(maxsize=None)
+def _ingest_fn(cfg: StoreConfig, mesh: Optional[Mesh]):
+    state_specs = store_partition_specs()
+    meta_specs = _replicated_like(ShardMeta(*ShardMeta._fields))
+    gather = _gather_watermark if mesh is not None else (lambda wm: wm)
+
+    def run(state, payloads, metas, alive, edge_ids):
+        def round_body(carry, xs):
+            payload, meta = xs
+            return insert_local(cfg, carry, payload, meta, alive, edge_ids,
+                                gather_watermark=gather)
+        return jax.lax.scan(round_body, state, (payloads, metas))
+
+    if mesh is None:
+        def single(state, payloads, metas, alive):
+            edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
+            return run(state, payloads, metas, alive, edge_ids)
+        return jax.jit(single, donate_argnums=(0,))
+
+    sharded = shard_map(
+        run, mesh=mesh,
+        in_specs=(state_specs, P(), meta_specs, P(), P(EDGE_AXIS)),
+        out_specs=(state_specs, _insert_info_specs(scanned=True)),
+        check_rep=False)
+
+    def multi(state, payloads, metas, alive):
+        edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
+        return sharded(state, payloads, metas, alive, edge_ids)
+
+    return jax.jit(multi, donate_argnums=(0,))
+
+
+def ingest_rounds(cfg: StoreConfig, state: StoreState, payloads, metas,
+                  alive: jnp.ndarray, mesh: Optional[Mesh] = None):
+    """Fused multi-round ingest: a single jitted ``lax.scan`` over N
+    collection rounds (replaces Python-loop round-tripping in tests and
+    benchmarks). The incoming ``state`` is **donated** — do not reuse it
+    after the call (sustained ingest updates the tuple ring in place rather
+    than double-allocating; donation is a no-op on CPU backends).
+
+    Args:
+      payloads: (N, B, R, 3+V) — N rounds of B shards.
+      metas:    ShardMeta with (N, B) fields.
+      alive:    (E,) availability mask, held fixed across the N rounds.
+      mesh:     optional edge mesh; None runs the 1-device jit path.
+
+    Returns (state, info) with every info entry stacked over the N rounds.
+    """
+    payloads = jnp.asarray(payloads)
+    metas = ShardMeta(*[jnp.asarray(x) for x in metas])
+    check_batch_fits(cfg, payloads.shape[1:])
+    if mesh is not None:
+        check_edge_mesh(cfg, mesh)
+    return _ingest_fn(cfg, mesh)(state, payloads, metas, alive)
+
+
+@lru_cache(maxsize=None)
+def _query_fn(cfg: StoreConfig, mesh: Mesh, use_kernel: bool,
+              interpret: Optional[bool]):
+    state_specs = store_partition_specs()
+    s = cfg.max_shards_per_query
+
+    def body(state, pred, alive, key_data, edge_ids):
+        key = jax.random.wrap_key_data(key_data)
+        partials, sublist_len, meta_info = query_local(
+            cfg, state, pred, alive, key, edge_ids,
+            combine_matched=partial(_merge_matched, max_shards=s),
+            use_kernel=use_kernel, interpret=interpret)
+        return partials, sublist_len, meta_info
+
+    def outer(state, pred, alive, key_data):
+        edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
+        sharded = shard_map(
+            body, mesh=mesh,
+            in_specs=(state_specs, _replicated_like(pred), P(), P(),
+                      P(EDGE_AXIS)),
+            out_specs=((P(None, EDGE_AXIS),) * 4, P(None, EDGE_AXIS),
+                       (P(), P(), P(), P())),
+            check_rep=False)
+        partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched) = \
+            sharded(state, pred, alive, key_data, edge_ids)
+        # The only tuple-volume-independent cross-device reduction: the final
+        # (Q, E) combine over the sharded per-edge partials.
+        return finalize_query(partials, sublist_len, lookup_mask, broadcast,
+                              ovf, shards_matched)
+
+    return jax.jit(outer)
+
+
+def federated_query_step(cfg: StoreConfig, state: StoreState, pred,
+                         alive: jnp.ndarray, key: jax.Array, mesh: Mesh,
+                         use_kernel: bool = False,
+                         interpret: Optional[bool] = None):
+    """``query_step`` over an edge mesh: device-local index match + tuple
+    scan, metadata-scale candidate merge, replicated planning, and a final
+    cross-device (Q, E) combine. Returns (QueryResult, QueryInfo)."""
+    check_edge_mesh(cfg, mesh)
+    return _query_fn(cfg, mesh, use_kernel, interpret)(
+        state, pred, alive, jax.random.key_data(key))

@@ -1,7 +1,15 @@
 """Logical-axis -> mesh-axis resolution.
 
-Model code annotates parameters with logical axes (FSDP / TP / EXP, see
-models/layers.py). This module resolves them onto the physical mesh:
+Two sharding domains live here:
+
+* the **datastore** edge axis — every ``StoreState`` array carries the
+  logical edge axis E in front, partitioned over a 1-D ``("edge",)`` mesh
+  (``launch.mesh.make_edge_mesh``); ``store_partition_specs`` is the
+  PartitionSpec tree of that contract, used by ``distributed.federation``'s
+  shard_map in/out specs and by ``shard_store`` for device placement;
+
+* the **model** logical axes (FSDP / TP / EXP, see models/layers.py),
+  resolved onto the physical training mesh:
 
   single pod  (16, 16)    axes ("data", "model")
   multi-pod (2, 16, 16)   axes ("pod", "data", "model")
@@ -23,6 +31,35 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import EXP, FSDP, TP
+
+
+EDGE_AXIS = "edge"
+
+
+def store_partition_specs():
+    """StoreState-shaped PartitionSpec tree of the sharded-state layout
+    contract: every per-edge array (leading logical-E dim, including the
+    nested IndexState) is partitioned over the mesh "edge" axis; the scalar
+    step counter replicates. Dims beyond the leading one replicate."""
+    from repro.core.datastore import StoreState
+    from repro.core.index import IndexState
+    edge = P(EDGE_AXIS)
+    return StoreState(
+        index=IndexState(ent_f=edge, ent_i=edge, valid=edge, cursor=edge,
+                         dropped=edge, retired=edge),
+        tup_f=edge, tup_sid=edge, tup_count=edge, tup_pos=edge,
+        tup_overwritten=edge, tup_dropped=edge, steps=P())
+
+
+def shard_store(state, mesh: Mesh):
+    """Place a StoreState onto an edge mesh per ``store_partition_specs``
+    (leading-E dim split into contiguous per-device blocks)."""
+    leaves, treedef = jax.tree.flatten(state)
+    specs = jax.tree.flatten(store_partition_specs(),
+                             is_leaf=lambda x: isinstance(x, P))[0]
+    placed = [jax.device_put(x, NamedSharding(mesh, s))
+              for x, s in zip(leaves, specs)]
+    return jax.tree.unflatten(treedef, placed)
 
 
 def logical_rules(multi_pod: bool, fsdp_over_pod: bool = False):

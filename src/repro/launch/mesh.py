@@ -22,3 +22,14 @@ def make_local_mesh(model_axis: int = 1):
     """Whatever devices exist locally, as (data, model) — tests/examples."""
     n = jax.device_count()
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def make_edge_mesh(n_devices: int | None = None):
+    """1-D datastore mesh over the logical edge axis ("edge",): each device
+    hosts a contiguous block of E / n_devices ground edge servers (the
+    federation story — a device plays the role of one edge site's local
+    store). ``n_devices`` defaults to every local device; it must divide the
+    deployment's ``StoreConfig.n_edges``. Simulate a fleet on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    n = jax.device_count() if n_devices is None else n_devices
+    return jax.make_mesh((n,), ("edge",))

@@ -1,14 +1,38 @@
 """Test-session bootstrap.
 
-If the real `hypothesis` package is unavailable (offline containers — the
-canonical dependency lives in pyproject's ``[test]`` extra), install the
-deterministic fallback shim under the same module names before any test
-module imports it. Test files import ``hypothesis`` unconditionally and are
-identical under either implementation.
+Two pieces, both of which must run before anything imports jax or hypothesis:
+
+1. Force a 4-device host platform (unless the caller already pinned a device
+   count via XLA_FLAGS) so the sharded federated runtime is exercised by the
+   tier-1 suite: tests/test_federation.py differentially tests the shard_map
+   path against the single-device jit path on a real multi-device mesh. jax
+   locks the device count at first backend initialization, hence here.
+   Single-device jit tests are unaffected — they run on device 0.
+
+2. If the real `hypothesis` package is unavailable (offline containers — the
+   canonical dependency lives in pyproject's ``[test]`` extra), install the
+   deterministic fallback shim under the same module names before any test
+   module imports it. Test files import ``hypothesis`` unconditionally and
+   are identical under either implementation.
 """
 
 import os
 import sys
+
+_FORCE = "--xla_force_host_platform_device_count"
+if _FORCE not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FORCE}=4").strip()
+
+# Persistent XLA compilation cache: the suite is compile-dominated, so repeat
+# local runs drop well below the cold-start time. Keyed by jax/XLA version and
+# flags internally; repo-local dir (gitignored) so `git clean -dfx` resets it.
+os.environ.setdefault(
+    "JAX_COMPILATION_CACHE_DIR",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 ".jax_cache"))
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0.1")
+
 
 try:
     import hypothesis  # noqa: F401

@@ -1,5 +1,12 @@
 """End-to-end datastore tests: insert + query vs a global-scan oracle
-(paper §3.4–3.5), including AND/OR predicates, planners, and baselines."""
+(paper §3.4–3.5), including AND/OR predicates, planners, and baselines.
+
+The default-config store is loaded once per module (module-scoped fixture);
+tests that only differ in *query-time* config (planner choice) reuse it via
+``dataclasses.replace`` — the state layout is identical and re-ingesting
+would only re-measure the same insert path."""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +17,7 @@ from repro.core.datastore import (StoreConfig, init_store, insert_step,
                                   make_pred, query_step)
 from repro.core.placement import ShardMeta
 from repro.data.synthetic import CityConfig, DroneFleet, make_sites
+from repro.distributed.federation import ingest_rounds
 
 
 def small_store(n_edges=8, planner="min_shards", replication=3, use_index=True):
@@ -22,18 +30,25 @@ def small_store(n_edges=8, planner="min_shards", replication=3, use_index=True):
 
 
 def load_fleet(cfg, n_drones=12, rounds=4, alive=None):
+    """Ingest through the fused lax.scan driver (one dispatch for all
+    rounds). Returns the same tuple shape as the old Python-loop version."""
     fleet = DroneFleet(n_drones, records_per_shard=cfg.records_per_shard)
-    state = init_store(cfg)
     if alive is None:
         alive = jnp.ones(cfg.n_edges, bool)
-    all_payloads, all_meta = [], []
-    for _ in range(rounds):
-        payload, meta = fleet.next_shards()
-        meta = ShardMeta(*[jnp.asarray(x) for x in meta])
-        state, _ = insert_step(cfg, state, jnp.asarray(payload), meta, alive)
-        all_payloads.append(payload)
-        all_meta.append(meta)
-    return state, fleet, np.concatenate(all_payloads), all_meta
+    payloads, metas = fleet.next_rounds(rounds)
+    state, _ = ingest_rounds(cfg, init_store(cfg), payloads, metas, alive)
+    all_meta = [ShardMeta(*[np.asarray(f)[i] for f in metas])
+                for i in range(rounds)]
+    return (state, fleet, payloads.reshape(-1, *payloads.shape[2:]), all_meta)
+
+
+@pytest.fixture(scope="module")
+def default_loaded():
+    """(cfg, state, fleet, payloads, metas) for the default small store —
+    shared by every test that doesn't mutate it (queries are read-only)."""
+    cfg = small_store()
+    state, fleet, payloads, metas = load_fleet(cfg)
+    return cfg, state, fleet, payloads, metas
 
 
 def oracle(payloads, pred, qi):
@@ -61,9 +76,9 @@ def check_result(result, qi, m, v0):
 
 
 @pytest.mark.parametrize("planner", ["random", "min_shards", "min_edges"])
-def test_query_matches_oracle(planner):
-    cfg = small_store(planner=planner)
-    state, fleet, payloads, _ = load_fleet(cfg)
+def test_query_matches_oracle(default_loaded, planner):
+    cfg, state, fleet, payloads, _ = default_loaded
+    cfg = dataclasses.replace(cfg, planner=planner)
     alive = jnp.ones(cfg.n_edges, bool)
     city = CityConfig()
     pred = make_pred(
@@ -82,9 +97,8 @@ def test_query_matches_oracle(planner):
         check_result(result, qi, m, v0)
 
 
-def test_or_query_matches_oracle():
-    cfg = small_store()
-    state, fleet, payloads, _ = load_fleet(cfg)
+def test_or_query_matches_oracle(default_loaded):
+    cfg, state, fleet, payloads, _ = default_loaded
     alive = jnp.ones(cfg.n_edges, bool)
     pred = make_pred(q=2, lat0=12.9, lat1=12.95, lon0=77.5, lon1=77.6,
                      t0=[0.0, 30.0], t1=[60.0, 90.0],
@@ -95,10 +109,9 @@ def test_or_query_matches_oracle():
         check_result(result, qi, m, v0)
 
 
-def test_sid_query():
+def test_sid_query(default_loaded):
     """shardID point query (H_i path): returns exactly that shard's tuples."""
-    cfg = small_store()
-    state, fleet, payloads, metas = load_fleet(cfg)
+    cfg, state, fleet, payloads, metas = default_loaded
     alive = jnp.ones(cfg.n_edges, bool)
     pred = make_pred(q=1, sid_hi=3, sid_lo=1, has_sid=True, is_and=True)
     result, info = query_step(cfg, state, pred, alive, jax.random.key(2))
@@ -108,11 +121,10 @@ def test_sid_query():
     np.testing.assert_allclose(float(result.vsum[0]), v0.sum(), rtol=1e-4)
 
 
-def test_no_duplicates_despite_replication():
+def test_no_duplicates_despite_replication(default_loaded):
     """3x replication must not triple-count: each shard is queried on exactly
-    one replica edge (paper §3.5.2)."""
-    cfg = small_store(replication=3)
-    state, fleet, payloads, _ = load_fleet(cfg)
+    one replica edge (paper §3.5.2). (Default config is replication=3.)"""
+    cfg, state, fleet, payloads, _ = default_loaded
     alive = jnp.ones(cfg.n_edges, bool)
     pred = make_pred(q=1, t0=0.0, t1=1e9, has_temporal=True, is_and=True)
     result, _ = query_step(cfg, state, pred, alive, jax.random.key(3))
@@ -142,6 +154,7 @@ def test_centralized_baseline():
     assert int(result.count[0]) == payloads.shape[0] * payloads.shape[1]
 
 
+@pytest.mark.slow
 def test_insert_telemetry_and_balance():
     cfg = small_store()
     state, fleet, payloads, _ = load_fleet(cfg, n_drones=32, rounds=3)

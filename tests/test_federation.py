@@ -1,0 +1,262 @@
+"""Differential test harness for the sharded federated runtime.
+
+The core equivalence oracle: the same inserts and queries driven through the
+single-device jit path (``insert_step``/``query_step``) and through the
+shard_map path (``distributed.federation``) on a forced 4-host-device
+``("edge",)`` mesh must produce identical ``StoreState`` (bitwise — the
+sharded path scatters the same values into the same slots) and identical
+``QueryResult``/``QueryInfo``. The only tolerated difference is ``vsum``,
+where the final (Q, E) combine crosses devices and float accumulation order
+may differ; counts/min/max/telemetry are order-independent and compared
+exactly.
+
+``tests/conftest.py`` forces ``--xla_force_host_platform_device_count=4``
+before jax initializes, so the mesh is real multi-device even on CPU.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.datastore import (StoreConfig, init_store, insert_step,
+                                  make_pred, query_step)
+from repro.core.placement import ShardMeta
+from repro.data.synthetic import CityConfig, DroneFleet, make_sites
+from repro.distributed.federation import (federated_insert_step,
+                                          federated_query_step, ingest_rounds,
+                                          shard_store, store_partition_specs)
+from repro.launch.mesh import make_edge_mesh
+
+N_DEV = 4
+E = 8
+ROUNDS = 6
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < N_DEV,
+    reason=f"needs {N_DEV} host devices (conftest forces them via XLA_FLAGS)")
+
+
+def make_cfg(**overrides):
+    sites = make_sites(E, CityConfig(), seed=3)
+    kw = dict(n_edges=E, sites=tuple(map(tuple, sites.tolist())),
+              tuple_capacity=2048, index_capacity=512, max_shards_per_query=64,
+              records_per_shard=12, retention_every=2)
+    kw.update(overrides)
+    return StoreConfig(**kw)
+
+
+def fleet_rounds(n_drones=12, rounds=ROUNDS, records=12, seed=1):
+    fleet = DroneFleet(n_drones, records_per_shard=records, seed=seed)
+    return fleet.next_rounds(rounds)
+
+
+def both_paths(cfg, mesh, payloads, metas, alive):
+    """Drive identical inserts through both paths; returns (ref, fed) states."""
+    ref = init_store(cfg)
+    for i in range(payloads.shape[0]):
+        meta = ShardMeta(*[jnp.asarray(np.asarray(f)[i]) for f in metas])
+        ref, _ = insert_step(cfg, ref, jnp.asarray(payloads[i]), meta, alive)
+    fed, _ = ingest_rounds(cfg, shard_store(init_store(cfg), mesh),
+                           payloads, metas, alive, mesh=mesh)
+    return ref, fed
+
+
+def assert_states_identical(ref, fed):
+    names = [jax.tree_util.keystr(p) for p, _
+             in jax.tree_util.tree_flatten_with_path(ref)[0]]
+    for name, a, b in zip(names, jax.tree.leaves(ref), jax.tree.leaves(fed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def assert_queries_identical(r1, i1, r2, i2):
+    for f in r1._fields:
+        a, b = np.asarray(getattr(r1, f)), np.asarray(getattr(r2, f))
+        if f == "vsum":  # cross-device accumulation order
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6, err_msg=f)
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=f)
+    for f in i1._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(i1, f)),
+                                      np.asarray(getattr(i2, f)), err_msg=f)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_edge_mesh(N_DEV)
+
+
+@pytest.fixture(scope="module")
+def loaded(mesh):
+    """One store, fully loaded through both paths (shared across tests —
+    queries below are read-only)."""
+    cfg = make_cfg()
+    alive = jnp.ones(E, bool)
+    payloads, metas = fleet_rounds()
+    ref, fed = both_paths(cfg, mesh, payloads, metas, alive)
+    return cfg, ref, fed, alive
+
+
+QUERY_PREDS = {
+    "and_spatiotemporal": make_pred(
+        q=3, lat0=[12.85, 12.90, 12.95], lat1=[13.10, 13.00, 13.05],
+        lon0=[77.45, 77.50, 77.55], lon1=[77.75, 77.60, 77.65],
+        t0=[0.0, 0.0, 60.0], t1=[1e9, 120.0, 180.0],
+        has_spatial=True, has_temporal=True, is_and=True),
+    "or": make_pred(q=2, lat0=12.9, lat1=12.95, lon0=77.5, lon1=77.6,
+                    t0=[0.0, 30.0], t1=[60.0, 90.0],
+                    has_spatial=True, has_temporal=True, is_and=False),
+    "sid_point": make_pred(q=2, sid_hi=[3, 7], sid_lo=[1, 4], has_sid=True,
+                           is_and=True),
+    "catch_all_temporal": make_pred(q=1, t0=0.0, t1=1e9, has_temporal=True,
+                                    is_and=True),
+}
+
+
+def test_insert_state_identical(loaded):
+    """After N rounds (including retention sweeps: retention_every=2), every
+    StoreState leaf — tuple ring, counters, and the whole index — is bitwise
+    identical between the jit and shard_map paths."""
+    _, ref, fed, _ = loaded
+    assert int(np.asarray(ref.steps)) == ROUNDS  # sweeps actually ran
+    assert_states_identical(ref, fed)
+
+
+def test_insert_info_identical(mesh):
+    """Per-step info (per-edge telemetry, replicas, retention watermark) is
+    identical, round by round, including sweep rounds."""
+    cfg = make_cfg()
+    alive = jnp.ones(E, bool)
+    payloads, metas = fleet_rounds(rounds=4)
+    ref = init_store(cfg)
+    fed = shard_store(init_store(cfg), mesh)
+    for i in range(payloads.shape[0]):
+        meta = ShardMeta(*[jnp.asarray(np.asarray(f)[i]) for f in metas])
+        p = jnp.asarray(payloads[i])
+        ref, ri = insert_step(cfg, ref, p, meta, alive)
+        fed, fi = federated_insert_step(cfg, fed, p, meta, alive, mesh)
+        for k in ri:
+            np.testing.assert_array_equal(np.asarray(ri[k]), np.asarray(fi[k]),
+                                          err_msg=f"round {i}: {k}")
+    assert_states_identical(ref, fed)
+
+
+@pytest.mark.parametrize("pred_name", sorted(QUERY_PREDS))
+def test_query_identical(loaded, mesh, pred_name):
+    cfg, ref, fed, alive = loaded
+    pred = QUERY_PREDS[pred_name]
+    key = jax.random.key(0)
+    r1, i1 = query_step(cfg, ref, pred, alive, key)
+    r2, i2 = federated_query_step(cfg, fed, pred, alive, key, mesh)
+    assert_queries_identical(r1, i1, r2, i2)
+
+
+@pytest.mark.parametrize("planner", ["random", "min_edges", "min_shards"])
+def test_query_identical_across_planners(loaded, mesh, planner):
+    """Planning runs replicated in the sharded path — same key, same
+    assignment, identical QueryInfo (which exposes the assignment shape)."""
+    cfg, ref, fed, alive = loaded
+    cfg = dataclasses.replace(cfg, planner=planner)
+    pred = QUERY_PREDS["and_spatiotemporal"]
+    key = jax.random.key(7)
+    r1, i1 = query_step(cfg, ref, pred, alive, key)
+    r2, i2 = federated_query_step(cfg, fed, pred, alive, key, mesh)
+    assert_queries_identical(r1, i1, r2, i2)
+
+
+def test_query_identical_with_failures(loaded, mesh):
+    """Edges die AFTER insertion (the paper's experiment shape — so the
+    loaded store is reusable): lookup fallback, planner re-routing, and the
+    scan must stay equivalent."""
+    cfg, ref, fed, alive = loaded
+    alive2 = alive.at[jnp.asarray([1, 5])].set(False)
+    for name, pred in QUERY_PREDS.items():
+        key = jax.random.key(11)
+        r1, i1 = query_step(cfg, ref, pred, alive2, key)
+        r2, i2 = federated_query_step(cfg, fed, pred, alive2, key, mesh)
+        assert_queries_identical(r1, i1, r2, i2)
+
+
+def test_query_identical_under_overflow(loaded, mesh):
+    """max_shards_per_query smaller than the matched set (query-time config —
+    the loaded state is layout-identical): the distributed top-S candidate
+    merge must clip to exactly the same shard set and raise the same overflow
+    flags as the single-device lookup."""
+    cfg, ref, fed, alive = loaded
+    cfg = dataclasses.replace(cfg, max_shards_per_query=4)
+    pred = QUERY_PREDS["catch_all_temporal"]
+    key = jax.random.key(3)
+    r1, i1 = query_step(cfg, ref, pred, alive, key)
+    r2, i2 = federated_query_step(cfg, fed, pred, alive, key, mesh)
+    assert bool(np.asarray(r1.overflow).all())  # overflow actually exercised
+    assert_queries_identical(r1, i1, r2, i2)
+
+
+def test_broadcast_baseline_identical(mesh):
+    """Feather-like config (no index, replication=1): the scan-all sentinel
+    path through shard_map equals the jit path."""
+    cfg = make_cfg(use_index=False, replication=1)
+    alive = jnp.ones(E, bool)
+    payloads, metas = fleet_rounds(seed=2, rounds=3)
+    ref, fed = both_paths(cfg, mesh, payloads, metas, alive)
+    assert_states_identical(ref, fed)
+    pred = make_pred(q=1, lat0=12.9, lat1=13.0, lon0=77.5, lon1=77.65,
+                     t0=0.0, t1=200.0, has_spatial=True, has_temporal=True)
+    key = jax.random.key(4)
+    r1, i1 = query_step(cfg, ref, pred, alive, key)
+    r2, i2 = federated_query_step(cfg, fed, pred, alive, key, mesh)
+    assert_queries_identical(r1, i1, r2, i2)
+
+
+@pytest.mark.slow
+def test_query_kernel_path_identical(loaded, mesh):
+    """The Pallas st_scan kernel dispatches per-device inside shard_map; the
+    sharded kernel path must equal the single-device kernel path."""
+    cfg, ref, fed, alive = loaded
+    pred = QUERY_PREDS["and_spatiotemporal"]
+    key = jax.random.key(0)
+    r1, i1 = query_step(cfg, ref, pred, alive, key, use_kernel=True,
+                        interpret=True)
+    r2, i2 = federated_query_step(cfg, fed, pred, alive, key, mesh,
+                                  use_kernel=True, interpret=True)
+    assert_queries_identical(r1, i1, r2, i2)
+
+
+def test_fused_ingest_matches_python_loop():
+    """The lax.scan ingest driver (1-device) is bitwise equivalent to the
+    sequential insert_step loop it replaces."""
+    cfg = make_cfg()
+    alive = jnp.ones(E, bool)
+    payloads, metas = fleet_rounds(seed=13)
+    ref = init_store(cfg)
+    for i in range(payloads.shape[0]):
+        meta = ShardMeta(*[jnp.asarray(np.asarray(f)[i]) for f in metas])
+        ref, _ = insert_step(cfg, ref, jnp.asarray(payloads[i]), meta, alive)
+    fused, info = ingest_rounds(cfg, init_store(cfg), payloads, metas, alive)
+    assert_states_identical(ref, fused)
+    # info is stacked over rounds
+    assert np.asarray(info["intake_per_edge"]).shape == (ROUNDS, E)
+
+
+def test_store_sharding_layout(mesh):
+    """shard_store realizes the layout contract: leading-E arrays split into
+    E/n_dev contiguous blocks, one per device; the step counter replicates."""
+    cfg = make_cfg()
+    state = shard_store(init_store(cfg), mesh)
+    assert len(state.tup_f.sharding.device_set) == N_DEV
+    shard_shapes = {s.data.shape for s in state.tup_f.addressable_shards}
+    assert shard_shapes == {(E // N_DEV,) + state.tup_f.shape[1:]}
+    assert state.steps.sharding.is_fully_replicated
+    specs = store_partition_specs()
+    assert specs.tup_f.index("edge") == 0
+
+
+def test_mesh_divisibility_rejected(mesh):
+    cfg = make_cfg(n_edges=6, sites=())
+    with pytest.raises(ValueError, match="not divisible"):
+        federated_query_step(cfg, init_store(cfg),
+                             QUERY_PREDS["catch_all_temporal"],
+                             jnp.ones(6, bool), jax.random.key(0), mesh)

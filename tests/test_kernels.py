@@ -132,6 +132,90 @@ def test_st_scan_empty_edges():
     assert int(np.asarray(got[0]).sum()) == 0
 
 
+def _assert_kernel_matches_ref(args, block_c, interpret):
+    """Pallas vs ref: counts bitwise, float aggregates to accumulation order.
+    ``interpret=None`` exercises the auto dispatch (compiled on TPU,
+    interpreted elsewhere)."""
+    exp = st_ref.st_scan_ref(*args)
+    got = st_ops.st_scan(*args, block_c=block_c, interpret=interpret)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]),
+                                  err_msg="count")
+    for g, x, name in zip(got[1:], exp[1:], ["vsum", "vmin", "vmax"]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(x), rtol=1e-5,
+                                   err_msg=name)
+
+
+@pytest.mark.parametrize("interpret", [True, None])
+@pytest.mark.parametrize("c", [100, 129, 384])
+def test_st_scan_non_lane_multiple_capacity(c, interpret):
+    """Capacities that are not lane (128) or block multiples force the
+    wrapper's C padding; padded lanes must never be admitted."""
+    rng = np.random.default_rng(c)
+    args = random_scan_problem(rng, c=c)
+    _assert_kernel_matches_ref(args, block_c=128, interpret=interpret)
+
+
+@pytest.mark.parametrize("interpret", [True, None])
+def test_st_scan_zero_count_everywhere(interpret):
+    """tup_count == 0 on every edge: both engines agree on all-zero counts
+    even though the tuple arrays hold (stale) data."""
+    rng = np.random.default_rng(21)
+    tup_f, tup_sid, _, pred, sublists, slen = random_scan_problem(rng)
+    zero = jnp.zeros(tup_f.shape[0], jnp.int32)
+    _assert_kernel_matches_ref(
+        (tup_f, tup_sid, zero, pred, sublists, slen), 256, interpret)
+    exp = st_ref.st_scan_ref(tup_f, tup_sid, zero, pred, sublists, slen)
+    assert int(np.asarray(exp[0]).sum()) == 0
+
+
+@pytest.mark.parametrize("interpret", [True, None])
+def test_st_scan_exactly_at_capacity(interpret):
+    """tup_count == capacity: the whole ring is live, nothing more (the
+    validity rule min(count, cap) sits exactly on its boundary)."""
+    rng = np.random.default_rng(23)
+    tup_f, tup_sid, _, pred, sublists, slen = random_scan_problem(rng, c=512)
+    full = jnp.full(tup_f.shape[0], 512, jnp.int32)
+    _assert_kernel_matches_ref(
+        (tup_f, tup_sid, full, pred, sublists, slen), 128, interpret)
+
+
+@pytest.fixture(scope="module")
+def wrapped_ring_state():
+    """A ring grown through the real insert path to well past capacity
+    (every edge wrapped several times). Built once; the scan tests below are
+    read-only."""
+    from repro.core.datastore import StoreConfig, init_store
+    from repro.data.synthetic import DroneFleet, make_sites
+    from repro.distributed.federation import ingest_rounds
+
+    e, cap = 4, 256
+    sites = make_sites(e, CityConfig(), seed=3)
+    cfg = StoreConfig(n_edges=e, sites=tuple(map(tuple, sites.tolist())),
+                      tuple_capacity=cap, index_capacity=256,
+                      max_shards_per_query=32, records_per_shard=8)
+    fleet = DroneFleet(8, records_per_shard=8)
+    payloads, metas = fleet.next_rounds(16)
+    state, _ = ingest_rounds(cfg, init_store(cfg), payloads, metas,
+                             jnp.ones(e, bool))
+    assert int(np.asarray(state.tup_count).min()) > cap  # every ring wrapped
+    return state
+
+
+@pytest.mark.parametrize("interpret", [True, None])
+def test_st_scan_post_wrap_ring(wrapped_ring_state, interpret):
+    """Both engines must scan the whole wrapped ring and agree bitwise on
+    counts."""
+    state = wrapped_ring_state
+    e = state.tup_f.shape[0]
+    pred = make_pred(q=2, t0=[0.0, 200.0], t1=[1e9, 400.0], has_temporal=True,
+                     is_and=True)
+    slen = jnp.full((2, e), -1, jnp.int32)             # scan-all sentinel
+    sublists = jnp.zeros((2, e, 1, 2), jnp.int32)
+    _assert_kernel_matches_ref(
+        (state.tup_f, state.tup_sid, state.tup_count, pred, sublists, slen),
+        128, interpret)
+
+
 # ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------

@@ -1,0 +1,88 @@
+"""Property tests for the query planners (paper §3.5.2, Alg. 1).
+
+For random MatchedShards lookup results and random alive-masks, every planner
+must satisfy the assignment contract the scan path relies on:
+
+  1. soundness  — every non-(-1) assignment names an *alive* edge that really
+                  is a replica of that (valid) shard;
+  2. completeness — every valid shard with >= 1 alive replica is assigned
+                  somewhere (no reachable shard is silently dropped);
+  3. liveness   — no assignment ever targets a dead edge (explicitly asserted
+                  for ``min_shards``, the paper's Alg. 1, but it holds for
+                  all three and soundness implies it).
+
+Runs under the real `hypothesis` package when installed, or the deterministic
+fallback shim in tests/_hypothesis_fallback.py (same API) otherwise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.index import MatchedShards
+from repro.core.planner import plan
+
+# Small fixed shape pool: properties are shape-generic, and reusing a few
+# (S, E) combinations keeps the jitted while-loop planners' compile cache hot
+# across examples. ``plan`` is jitted here because the bare function would
+# re-trace its lax.while_loop on every drawn example.
+SHAPES = [(4, 4), (8, 6), (12, 5)]
+plan_jit = jax.jit(plan, static_argnums=(0,))
+
+
+def build_case(data, planner_unused=None):
+    s, e = SHAPES[data.draw(st.integers(0, len(SHAPES) - 1), label="shape")]
+    draw_i = lambda lo, hi, n, label: np.asarray(
+        [data.draw(st.integers(lo, hi), label=label) for _ in range(n)],
+        np.int32)
+    # Replica slots: mostly real edges, some -1 padding (unfilled slots).
+    reps = draw_i(-1, e - 1, s * 3, "replica").reshape(s, 3)
+    valid = draw_i(0, 1, s, "valid").astype(bool)
+    alive = draw_i(0, 1, e, "alive").astype(bool)
+    sid = np.arange(s, dtype=np.int32)
+    matched = MatchedShards(
+        sid_hi=jnp.asarray(sid[None]), sid_lo=jnp.asarray(sid[None]),
+        replicas=jnp.asarray(reps[None]), valid=jnp.asarray(valid[None]),
+        overflow=jnp.zeros((1,), jnp.bool_))
+    return matched, reps, valid, jnp.asarray(alive), np.asarray(alive)
+
+
+def check_contract(planner, matched, reps, valid, alive_np, assignment):
+    s = reps.shape[0]
+    alive_reps = (reps >= 0) & alive_np[np.clip(reps, 0, None)] & valid[:, None]
+    reachable = alive_reps.any(axis=1)
+    for i in range(s):
+        a = int(assignment[0, i])
+        if a != -1:
+            # 1. soundness: assigned edge is an alive replica of a valid shard
+            assert valid[i], (planner, i, a)
+            assert a in reps[i], (planner, i, a, reps[i])
+            assert alive_np[a], (planner, i, a)
+        # 2. completeness: reachable shards are always assigned
+        if reachable[i]:
+            assert a != -1, (planner, i, reps[i], alive_np)
+
+
+@given(st.data())
+@settings(deadline=None, max_examples=25)
+def test_planner_assignment_contract(data):
+    """All three planners on the same drawn case (the hypothesis fallback
+    shim can't combine @given with @pytest.mark.parametrize)."""
+    matched, reps, valid, alive, alive_np = build_case(data)
+    key = jax.random.key(data.draw(st.integers(0, 1 << 20), label="key"))
+    for planner in ["random", "min_edges", "min_shards"]:
+        assignment = np.asarray(plan_jit(planner, matched, alive, key))
+        check_contract(planner, matched, reps, valid, alive_np, assignment)
+
+
+@given(st.data())
+@settings(deadline=None, max_examples=25)
+def test_min_shards_never_assigns_dead_edge(data):
+    """Paper Alg. 1 under random alive-masks: no sub-query may ever target a
+    dead edge (the §3.5.3 failure-handling invariant)."""
+    matched, reps, valid, alive, alive_np = build_case(data)
+    assignment = np.asarray(plan_jit("min_shards", matched, alive, None))
+    assigned = assignment[assignment >= 0]
+    assert alive_np[assigned].all(), (assignment, alive_np)

@@ -14,6 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.datastore import (StoreConfig, init_store, insert_step,
                                   make_pred, query_step)
@@ -25,6 +26,10 @@ E = 8
 CAP = 512
 ROUNDS = 48
 RETENTION_EVERY = 4
+
+# 48-round sustained-ingest load: heavyweight end-to-end (built once, shared
+# by every test here via the lru_cache below).
+pytestmark = pytest.mark.slow
 
 
 @functools.lru_cache(maxsize=1)   # built lazily on first test, shared after

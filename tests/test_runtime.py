@@ -42,6 +42,7 @@ def fixed_batch(cfg=TINY, b=4, s=32, seed=7):
     return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     model, params, opt_state, step = make_trainer()
     batch = fixed_batch()
@@ -104,17 +105,20 @@ def test_int8_error_feedback_converges():
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    def body(gi, err):
+        return comp.ef_allreduce_int8(gi, err, "dp")
+
+    # Wrap + jit ONCE: re-wrapping shard_map inside the loop would retrace
+    # and recompile on every iteration (20x the test's runtime).
+    step = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                             out_specs=(P(), P())))
+
     err = jnp.zeros_like(g)
     total_true = jnp.zeros_like(g)
     total_comp = jnp.zeros_like(g)
     for i in range(20):
         gi = g * (1.0 + 0.1 * i)
-
-        def body(gi, err):
-            return comp.ef_allreduce_int8(gi, err, "dp")
-
-        mg, err = shard_map(body, mesh=mesh, in_specs=(P(), P()),
-                            out_specs=(P(), P()))(gi, err)
+        mg, err = step(gi, err)
         total_true += gi
         total_comp += mg
     rel = float(jnp.linalg.norm(total_comp - total_true) /
