@@ -1,0 +1,77 @@
+"""Fig 11-style mixed query workload, driven through the unified API.
+
+The paper's analyst traffic (§4.5, Fig 9-13) is a MIX of spatial, temporal,
+and id range-aggregation queries, not a single shape. This row family runs a
+representative mix — spatial-only, temporal-only, spatio-temporal AND, the OR
+combinator, and shard-id point lookups, batched into one compiled scan via
+``Query.batch`` — and sweeps the ``AggSpec`` axis (channels, requested ops)
+so any regression in the generalized aggregation pipeline (channel selection
+/ mean derivation / per-spec recompiles) shows up in the perf trajectory.
+
+All rows go through ``repro.api`` (the facade + builder), which is the
+surface future workloads will use.
+"""
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.api import AerialDB, AggSpec, Query
+from repro.data.synthetic import CityConfig, DroneFleet, make_sites
+
+
+def _mixed_batch(anchors, t_max, rng):
+    """One mixed workload batch: 8 queries over really-visited anchors."""
+    deg = 1.0 / 111.0
+    qs = []
+    for _ in range(2):                      # spatial-only (1 km boxes)
+        t, la, lo = anchors[rng.integers(0, len(anchors))]
+        qs.append(Query().bbox(la - deg / 2, la + deg / 2,
+                               lo - deg / 2, lo + deg / 2))
+    for _ in range(2):                      # temporal-only (5 min windows)
+        t, la, lo = anchors[rng.integers(0, len(anchors))]
+        qs.append(Query().time(max(t - 150.0, 0.0), t + 150.0))
+    for _ in range(2):                      # spatio-temporal AND (30 min/5 km)
+        t, la, lo = anchors[rng.integers(0, len(anchors))]
+        qs.append(Query().bbox(la - 2.5 * deg, la + 2.5 * deg,
+                               lo - 2.5 * deg, lo + 2.5 * deg)
+                  & Query().time(max(t - 900.0, 0.0), t + 900.0))
+    t, la, lo = anchors[rng.integers(0, len(anchors))]     # OR combinator
+    qs.append(Query().bbox(la - deg, la + deg, lo - deg, lo + deg)
+              | Query().time(max(t_max - 300.0, 0.0), t_max))
+    qs.append(Query().shard(3, 2).time(0.0, t_max))        # id range
+    return qs
+
+
+def run():
+    n_edges, n_drones, rounds, records = 20, 40, 6, 30
+    sites = make_sites(n_edges, CityConfig(), seed=3)
+    db = AerialDB.open(n_edges=n_edges,
+                       sites=tuple(map(tuple, sites.tolist())),
+                       tuple_capacity=1 << 14, index_capacity=4096,
+                       max_shards_per_query=512, records_per_shard=records)
+    fleet = DroneFleet(n_drones, records_per_shard=records, seed=1)
+    payloads, metas = fleet.next_rounds(rounds)
+    db.ingest_rounds(payloads, metas)
+    flat = payloads.reshape(-1, payloads.shape[-1])
+    anchors, t_max = flat[:, :3], float(flat[:, 0].max())
+
+    rng = np.random.default_rng(17)
+    qs = _mixed_batch(anchors, t_max, rng)
+    key = jax.random.key(2)
+
+    specs = [
+        ("count_sum_ch0", AggSpec(channel=0, ops=("count", "sum"))),
+        ("mean_ch2", AggSpec(channel=2, ops=("mean",))),
+        ("minmax_ch3", AggSpec(channel=3, ops=("min", "max"))),
+        ("all_ops_ch1", AggSpec(channel=1)),
+    ]
+    for name, spec in specs:
+        pred, _ = Query.batch(*[q.agg(*spec.ops, channel=spec.channel)
+                                for q in qs])
+        us, (res, info) = timeit(
+            lambda p=pred, s=spec: db.query((p, s), key=key))
+        emit(f"fig11/mixed/{name}", us / len(qs),
+             f"rows={np.asarray(res.count).mean():.0f};"
+             f"edges={np.asarray(info.subquery_edges).mean():.1f};"
+             f"broadcast={int(np.asarray(info.broadcast).sum())}")

@@ -8,8 +8,9 @@ import sys
 import time
 
 FIGS = ["fig5_membership", "fig7_insertion_scaling", "fig8_insertion_baselines",
-        "fig9_planners", "fig10_concurrency", "fig12_query_baselines",
-        "fig13_locality", "fig14_resilience", "fig15_sustained_ingest"]
+        "fig9_planners", "fig10_concurrency", "fig11_mixed_queries",
+        "fig12_query_baselines", "fig13_locality", "fig14_resilience",
+        "fig15_sustained_ingest"]
 
 
 def main() -> None:

@@ -1,10 +1,10 @@
 """Federated quickstart: the same AerialDB deployment on a 4-device edge mesh.
 
 Each device of the ``("edge",)`` mesh plays two of the eight ground edge
-servers: StoreState arrays are sharded on their leading E dim, inserts and
-queries run through shard_map (device-local scans, metadata-scale
-collectives), and — the point of the exercise — results are identical to the
-single-device jit path.
+servers. Both deployments are driven through the unified ``repro.api``
+facade — ``AerialDB.open`` with a mesh shards the state and routes every
+operation through shard_map; without one it runs the single-device jit path —
+and, the point of the exercise, the results are identical.
 
     PYTHONPATH=src python examples/federated_quickstart.py
 
@@ -20,15 +20,10 @@ if _FORCE not in os.environ.get("XLA_FLAGS", ""):
         os.environ.get("XLA_FLAGS", "") + f" {_FORCE}=4").strip()
 
 import jax                    # noqa: E402
-import jax.numpy as jnp       # noqa: E402
 import numpy as np            # noqa: E402
 
-from repro.core.datastore import (StoreConfig, init_store, insert_step,  # noqa: E402
-                                  make_pred, query_step)
-from repro.core.placement import ShardMeta                               # noqa: E402
+from repro.api import AerialDB, Query, StoreConfig                       # noqa: E402
 from repro.data.synthetic import CityConfig, DroneFleet, make_sites      # noqa: E402
-from repro.distributed.federation import (federated_query_step,          # noqa: E402
-                                          ingest_rounds, shard_store)
 from repro.launch.mesh import make_edge_mesh                             # noqa: E402
 
 
@@ -42,44 +37,39 @@ def main():
     cfg = StoreConfig(n_edges=n_edges, sites=tuple(map(tuple, sites.tolist())),
                       tuple_capacity=1 << 13, index_capacity=1024,
                       max_shards_per_query=64, records_per_shard=30)
-    alive = jnp.ones(n_edges, bool)
+
+    # --- one facade per runtime: the dispatch is the ONLY difference ---
+    fed = AerialDB.open(cfg, mesh=mesh)
+    ref = AerialDB.open(cfg)
 
     # --- ingest: 16 drones x 4 rounds, one fused lax.scan dispatch ---
-    fleet = DroneFleet(16, records_per_shard=30)
-    payloads, metas = fleet.next_rounds(4)
-    fed_state, _ = ingest_rounds(cfg, shard_store(init_store(cfg), mesh),
-                                 payloads, metas, alive, mesh=mesh)
-    per_edge = np.asarray(fed_state.tup_count)
+    payloads, metas = DroneFleet(16, records_per_shard=30).next_rounds(4)
+    fed.ingest_rounds(payloads, metas)
+    ref.ingest_rounds(payloads, metas)
+    per_edge = np.asarray(fed.state.tup_count)
     print(f"ingested {per_edge.sum()} tuple replicas across the mesh "
           f"(per-edge min={per_edge.min()} max={per_edge.max()})")
 
-    # --- the same rounds through the single-device jit path ---
-    ref_state = init_store(cfg)
-    for i in range(payloads.shape[0]):
-        meta = ShardMeta(*[jnp.asarray(np.asarray(f)[i]) for f in metas])
-        ref_state, _ = insert_step(cfg, ref_state, jnp.asarray(payloads[i]),
-                                   meta, alive)
-
-    # --- differential check: same query, both runtimes ---
-    pred = make_pred(q=2,
-                     lat0=[12.90, 12.85], lat1=[13.00, 13.10],
-                     lon0=[77.50, 77.45], lon1=[77.60, 77.75],
-                     t0=[0.0, 0.0], t1=[300.0, 1e9],
-                     has_spatial=True, has_temporal=True, is_and=True)
+    # --- differential check: the same built queries, both runtimes ---
+    queries = Query.batch(
+        Query().bbox(12.90, 13.00, 77.50, 77.60).time(0.0, 300.0)
+               .agg("count", "mean"),
+        Query().bbox(12.85, 13.10, 77.45, 77.75).time(0.0, 1e9)
+               .agg("count", "mean"))
     key = jax.random.key(0)
-    fed_res, fed_info = federated_query_step(cfg, fed_state, pred, alive,
-                                             key, mesh)
-    ref_res, _ = query_step(cfg, ref_state, pred, alive, key)
+    fed_res, fed_info = fed.query(queries, key=key)
+    ref_res, _ = ref.query(queries, key=key)
 
     for i in range(2):
         print(f"query {i}: sharded count={int(fed_res.count[i])} "
+              f"mean={float(fed_res.vmean[i]):.2f} "
               f"(single-device {int(ref_res.count[i])}), "
               f"edges_queried={int(fed_info.subquery_edges[i])}")
     np.testing.assert_array_equal(np.asarray(fed_res.count),
                                   np.asarray(ref_res.count))
     state_equal = all(
         np.array_equal(np.asarray(a), np.asarray(b))
-        for a, b in zip(jax.tree.leaves(ref_state), jax.tree.leaves(fed_state)))
+        for a, b in zip(jax.tree.leaves(ref.state), jax.tree.leaves(fed.state)))
     print(f"sharded == single-device: results exact, state identical="
           f"{state_equal}")
 

@@ -1,0 +1,37 @@
+"""Public AerialDB API: the ``AerialDB`` session facade + ``Query`` builder.
+
+This package is the **stable surface** of the reproduction — what examples,
+benchmarks, and downstream workloads program against:
+
+    from repro.api import AerialDB, Query, AggSpec
+
+    db = AerialDB.open(n_edges=8)                # or .open(cfg, mesh=...)
+    db.ingest_rounds(payloads, metas)
+    res, info = db.query(
+        Query().bbox(12.9, 13.0, 77.5, 77.6).time(0, 600).agg("mean",
+                                                              channel=2))
+
+Layering contract (facade vs local bodies)
+------------------------------------------
+``repro.api`` sits strictly ABOVE the runtimes and owns only *session*
+concerns: config + state + alive-mask + PRNG-key custody, query compilation
+(``Query`` -> ``QueryPred`` + static ``AggSpec``), and the dispatch choice
+between the single-device jit path and the shard_map federated path. All
+datastore *semantics* live below, in the shard-local bodies
+(``core.datastore.insert_local`` / ``query_local``) that both runtimes share
+— the facade never reimplements placement, indexing, planning, or scanning,
+so the differential harness (``tests/test_federation.py``) proving the two
+runtimes bit-identical covers every facade operation too. Nothing in
+``core``/``distributed``/``kernels`` imports this package; the deprecated
+free functions (``insert_step``/``query_step``) remain as thin shims over
+the same bodies.
+"""
+
+from repro.api.query import Query
+from repro.api.session import AerialDB
+from repro.core.datastore import (AGG_OPS, AggSpec, QueryInfo, QueryResult,
+                                  StoreConfig, make_pred)
+from repro.core.index import QueryPred
+
+__all__ = ["AerialDB", "Query", "AggSpec", "AGG_OPS", "QueryPred",
+           "QueryResult", "QueryInfo", "StoreConfig", "make_pred"]

@@ -1,0 +1,200 @@
+"""``AerialDB``: the session facade over both runtimes.
+
+One object owns everything callers used to hand-thread — ``StoreConfig``,
+``StoreState``, the edge ``alive`` mask, the planner PRNG key, the scan-engine
+flags — and transparently dispatches every operation to the single-device jit
+path (``core.datastore``) or the shard_map federated path
+(``distributed.federation``) depending on whether the session was opened on
+an edge mesh. The two paths are differentially tested bit-identical
+(``tests/test_federation.py``), so the dispatch is a pure deployment choice.
+
+    db = AerialDB.open(cfg)                      # single device
+    db = AerialDB.open(cfg, mesh=make_edge_mesh(4))   # 4-device federation
+    db.ingest_rounds(payloads, metas)
+    res, info = db.query(Query().bbox(...).time(...).agg("mean", channel=2))
+    db.fail_edges(1, 5); ...; db.recover_edges(1, 5)
+
+See the package docstring (``repro.api``) for the facade-vs-local-bodies
+layering contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.query import Query
+from repro.core import datastore as _ds
+from repro.core.datastore import (AggSpec, QueryInfo, QueryResult, StoreConfig,
+                                  StoreState, init_store)
+from repro.core.index import QueryPred
+from repro.core.placement import ShardMeta
+from repro.distributed import federation as _fed
+from repro.distributed.sharding import shard_store
+
+__all__ = ["AerialDB"]
+
+Queryish = Union[Query, QueryPred, Tuple[QueryPred, AggSpec]]
+
+
+class AerialDB:
+    """An open AerialDB deployment: state + alive mask + key, one dispatch."""
+
+    def __init__(self, cfg: StoreConfig, state: StoreState, alive, key,
+                 mesh=None, use_kernel: bool = False,
+                 interpret: Optional[bool] = None):
+        """Wrap existing parts (the differential tests use this to adopt
+        pre-loaded states); most callers want :meth:`open`."""
+        if mesh is not None:
+            _fed.check_edge_mesh(cfg, mesh)
+        self._cfg = cfg
+        self._state = state
+        self._alive = jnp.asarray(alive, bool)
+        self._key = key
+        self._mesh = mesh
+        self._use_kernel = use_kernel
+        self._interpret = interpret
+
+    @classmethod
+    def open(cls, cfg: Optional[StoreConfig] = None, mesh=None, *,
+             seed: int = 0, use_kernel: bool = False,
+             interpret: Optional[bool] = None,
+             **cfg_overrides) -> "AerialDB":
+        """Open a fresh deployment.
+
+        Args:
+          cfg:   deployment config; None builds ``StoreConfig(**overrides)``.
+          mesh:  optional ``("edge",)`` device mesh
+                 (``launch.mesh.make_edge_mesh``): state is sharded per the
+                 layout contract and every operation runs the federated
+                 shard_map path. None = single-device jit path.
+          seed:  planner PRNG seed (the facade owns and splits the key).
+          use_kernel / interpret: scan-engine selection, as in
+                 ``scan_engine`` (Pallas TPU kernel vs jnp reference).
+          **cfg_overrides: with ``cfg=None``, StoreConfig fields; with a
+                 config given, ``dataclasses.replace`` overrides.
+        """
+        if cfg is None:
+            cfg = StoreConfig(**cfg_overrides)
+        elif cfg_overrides:
+            cfg = dataclasses.replace(cfg, **cfg_overrides)
+        state = init_store(cfg)
+        if mesh is not None:
+            _fed.check_edge_mesh(cfg, mesh)
+            state = shard_store(state, mesh)
+        return cls(cfg, state, jnp.ones(cfg.n_edges, bool),
+                   jax.random.key(seed), mesh=mesh, use_kernel=use_kernel,
+                   interpret=interpret)
+
+    # -- owned pieces (read-only views) -------------------------------------
+
+    @property
+    def cfg(self) -> StoreConfig:
+        return self._cfg
+
+    @property
+    def state(self) -> StoreState:
+        return self._state
+
+    @property
+    def alive(self) -> jnp.ndarray:
+        return self._alive
+
+    @property
+    def mesh(self):
+        return self._mesh
+
+    # -- ingest -------------------------------------------------------------
+
+    def insert(self, payload, meta: ShardMeta) -> dict:
+        """Insert one batch of B shards (R tuples each); returns the info
+        dict (replicas, per-edge intake/index telemetry)."""
+        payload = jnp.asarray(payload)
+        meta = ShardMeta(*[jnp.asarray(f) for f in meta])
+        if self._mesh is None:
+            self._state, info = _ds._insert(self._cfg, self._state, payload,
+                                            meta, self._alive)
+        else:
+            self._state, info = _fed.federated_insert_step(
+                self._cfg, self._state, payload, meta, self._alive,
+                self._mesh)
+        return info
+
+    def ingest_rounds(self, payloads, metas) -> dict:
+        """Fused multi-round ingest (one ``lax.scan`` dispatch, donated
+        state); returns the info dict stacked over rounds."""
+        self._state, info = _fed.ingest_rounds(
+            self._cfg, self._state, payloads, metas, self._alive,
+            mesh=self._mesh)
+        return info
+
+    # -- query --------------------------------------------------------------
+
+    def _compile(self, q: Queryish,
+                 agg: Optional[AggSpec]) -> Tuple[QueryPred, AggSpec]:
+        if isinstance(q, Query):
+            if agg is not None:
+                raise ValueError(
+                    "pass the AggSpec on the builder (.agg(...)) OR as the "
+                    "agg= override for a raw QueryPred, not both.")
+            return q.build()
+        if isinstance(q, QueryPred):
+            return q, agg if agg is not None else AggSpec()
+        if isinstance(q, tuple) and len(q) == 2 \
+                and isinstance(q[0], QueryPred) and isinstance(q[1], AggSpec):
+            if agg is not None:
+                raise ValueError("q already carries an AggSpec; drop agg=.")
+            return q
+        raise TypeError(
+            f"cannot query with {type(q).__name__}: pass a Query builder, a "
+            "QueryPred (e.g. make_pred(...) or Query.batch(...)), or a "
+            "(QueryPred, AggSpec) pair.")
+
+    def query(self, q: Queryish, *, agg: Optional[AggSpec] = None,
+              key: Optional[jax.Array] = None
+              ) -> Tuple[QueryResult, QueryInfo]:
+        """Run a query batch against the deployment.
+
+        Args:
+          q:    a ``Query`` builder, a batched ``QueryPred``
+                (``Query.batch`` / ``make_pred``), or a
+                ``(QueryPred, AggSpec)`` pair.
+          agg:  AggSpec override for a raw QueryPred (channel + ops).
+          key:  explicit planner PRNG key; None draws from the session key
+                (each query consumes a fresh split).
+
+        Returns ``(QueryResult, QueryInfo)``; project the requested
+        aggregates with ``result.view(agg_spec)``.
+        """
+        pred, spec = self._compile(q, agg)
+        spec.validate_for(self._cfg)
+        if key is None:
+            self._key, key = jax.random.split(self._key)
+        if self._mesh is None:
+            return _ds._query(self._cfg, self._state, pred, self._alive, key,
+                              self._use_kernel, self._interpret, spec)
+        return _fed.federated_query_step(
+            self._cfg, self._state, pred, self._alive, key, self._mesh,
+            use_kernel=self._use_kernel, interpret=self._interpret, agg=spec)
+
+    # -- membership ---------------------------------------------------------
+
+    def _edge_ids(self, edges) -> jnp.ndarray:
+        ids = jnp.asarray(
+            edges[0] if len(edges) == 1 and not isinstance(edges[0], int)
+            else edges, jnp.int32).reshape(-1)
+        return ids
+
+    def fail_edges(self, *edges) -> "AerialDB":
+        """Mark edges dead (paper §4.5.3 resilience shape): subsequent
+        inserts skip them, queries re-plan around them."""
+        self._alive = self._alive.at[self._edge_ids(edges)].set(False)
+        return self
+
+    def recover_edges(self, *edges) -> "AerialDB":
+        """Bring failed edges back (their state was retained while dead)."""
+        self._alive = self._alive.at[self._edge_ids(edges)].set(True)
+        return self

@@ -56,7 +56,8 @@ dispatches to it or to the jnp reference.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
+from functools import lru_cache, partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -159,13 +160,69 @@ class StoreState(NamedTuple):
 _COUNT_SAT = (1 << 31) - (1 << 26)
 
 
+AGG_OPS = ("count", "sum", "min", "max", "mean")
+
+
+@dataclasses.dataclass(frozen=True)
+class AggSpec:
+    """Static aggregation spec: which sensor channel to aggregate and which
+    aggregates the caller asked for (paper §4.5's range-*aggregation*
+    workloads over arbitrary channels).
+
+    The spec is static (hashable — a jit static argument / shard_map cache
+    key): the channel selects the value column ``3 + channel`` all the way
+    down into both scan engines, so only the requested channel is ever
+    streamed through the aggregation registers. The per-edge scan always
+    produces the full fused (count, sum, min, max) set for that channel — the
+    marginal cost of the extra accumulators is nil next to the predicate
+    evaluation — and ``mean`` is derived after the final (Q, E) combine
+    (``finalize_query``), which keeps sum/count the only cross-device
+    reductions. ``ops`` records the caller's projection; apply it with
+    ``QueryResult.view``. Only ``channel`` is a compile-time cache key —
+    specs differing in ``ops`` alone share one compiled scan.
+    """
+    channel: int = 0
+    ops: Tuple[str, ...] = AGG_OPS
+
+    def __post_init__(self):
+        if isinstance(self.ops, str):
+            object.__setattr__(self, "ops", (self.ops,))
+        else:
+            object.__setattr__(self, "ops", tuple(self.ops))
+        unknown = [op for op in self.ops if op not in AGG_OPS]
+        if unknown:
+            raise ValueError(
+                f"unknown aggregate op(s) {unknown}: pick from {AGG_OPS}.")
+        if not self.ops:
+            raise ValueError("AggSpec.ops is empty: request at least one of "
+                             f"{AGG_OPS}.")
+        if self.channel < 0:
+            raise ValueError(f"channel={self.channel} must be >= 0.")
+
+    def validate_for(self, cfg: "StoreConfig") -> "AggSpec":
+        if self.channel >= cfg.n_values:
+            raise ValueError(
+                f"channel={self.channel} out of range: this deployment "
+                f"stores n_values={cfg.n_values} sensor channels per tuple "
+                f"(valid channels 0..{cfg.n_values - 1}).")
+        return self
+
+
 class QueryResult(NamedTuple):
-    """Fixed-shape query answer: aggregates over matching tuples."""
+    """Fixed-shape query answer: aggregates over matching tuples of the
+    ``AggSpec``-selected sensor channel (default: channel 0)."""
     count: jnp.ndarray    # (Q,) int32
-    vsum: jnp.ndarray     # (Q,) float32 — sum of v0
+    vsum: jnp.ndarray     # (Q,) float32 — sum of the selected channel
     vmin: jnp.ndarray     # (Q,) float32 (+inf when count==0)
     vmax: jnp.ndarray     # (Q,) float32 (-inf when count==0)
     overflow: jnp.ndarray # (Q,) bool — matched shards exceeded the static budget
+    vmean: jnp.ndarray = None  # (Q,) float32 — vsum/count (NaN when count==0)
+
+    def view(self, agg: AggSpec) -> dict:
+        """Project the aggregates the spec asked for: op name -> (Q,) array."""
+        full = {"count": self.count, "sum": self.vsum, "min": self.vmin,
+                "max": self.vmax, "mean": self.vmean}
+        return {op: full[op] for op in agg.ops}
 
 
 class QueryInfo(NamedTuple):
@@ -177,10 +234,55 @@ class QueryInfo(NamedTuple):
     broadcast: jnp.ndarray         # (Q,) bool — index lookup degenerated
 
 
+def _concrete(x, q):
+    if isinstance(x, jax.core.Tracer):
+        return None
+    try:
+        return np.broadcast_to(np.asarray(x), (q,))
+    except Exception:
+        return None
+
+
+def _check_ranges(q, pairs, enabled, is_and):
+    """Reject inverted ranges on concrete (non-traced) inputs: under an AND
+    predicate an inverted bound makes the whole query match nothing, which
+    historically returned silently-empty results. OR predicates are exempt —
+    there an inverted clause merely contributes nothing while the other
+    clauses still match. Tracers skip the check."""
+    en, am = _concrete(enabled, q), _concrete(is_and, q)
+    if en is None or am is None:
+        return
+    en = en & am
+    if not en.any():
+        return
+    for name, lo, hi in pairs:
+        lo, hi = _concrete(lo, q), _concrete(hi, q)
+        if lo is None or hi is None:
+            continue
+        bad = en & (np.asarray(lo) > np.asarray(hi))
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"inverted {name} range for query {i}: "
+                f"{name}0={float(lo[i])} > {name}1={float(hi[i])}. Inverted "
+                "ranges match nothing under an AND predicate; swap the "
+                "bounds (ranges are inclusive [lo, hi]).")
+
+
 def make_pred(q: int = 1, lat0=0.0, lat1=0.0, lon0=0.0, lon1=0.0, t0=0.0,
               t1=0.0, sid_hi=-1, sid_lo=-1, has_spatial=False,
               has_temporal=False, has_sid=False, is_and=True) -> QueryPred:
-    """Build a batched QueryPred, broadcasting scalars to (q,)."""
+    """Build a batched QueryPred, broadcasting scalars to (q,).
+
+    Inverted ranges (``lat1 < lat0``, ``lon1 < lon0``, ``t1 < t0``) on
+    concrete inputs under an AND predicate raise — they would silently match
+    nothing. The ``repro.api.Query`` builder performs the same validation
+    eagerly (for every clause, since the builder composes clause-wise).
+    """
+    _check_ranges(q, [("lat", lat0, lat1), ("lon", lon0, lon1)],
+                  has_spatial, is_and)
+    _check_ranges(q, [("t", t0, t1)], has_temporal, is_and)
+
     def arr(x, dt):
         a = jnp.asarray(x, dt)
         return jnp.broadcast_to(a, (q,) if a.ndim == 0 else a.shape)
@@ -351,12 +453,35 @@ def _insert_step_jit(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     return insert_local(cfg, state, payload, meta, alive, edge_ids)
 
 
+def _insert(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
+            meta: ShardMeta, alive: jnp.ndarray):
+    """1-device insert body shared by the ``AerialDB`` facade and the
+    deprecated ``insert_step`` shim: batch-fit check + jitted insert_local."""
+    check_batch_fits(cfg, payload.shape)
+    return _insert_step_jit(cfg, state, payload, meta, alive)
+
+
+@lru_cache(maxsize=None)
+def _warn_deprecated(old: str, new: str):
+    """One DeprecationWarning per (old, new) pair per process — the step
+    shims sit on hot loops in older callers."""
+    warnings.warn(
+        f"{old} is deprecated: drive the store through {new} (the unified "
+        "repro.api facade owns state/alive/key plumbing and dispatches to "
+        "the single-device or federated runtime from one entry point). The "
+        "shim remains supported and bit-identical.",
+        DeprecationWarning, stacklevel=3)
+
+
 def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
                 meta: ShardMeta, alive: jnp.ndarray):
     """Insert B shards (R tuples each) — the 1-device special case of
     ``insert_local`` (see the sharded-state layout contract in the module
     docstring; ``repro.distributed.federation`` runs the same body over a
     device mesh).
+
+    .. deprecated:: kept as a thin shim over the same body the
+       ``repro.api.AerialDB`` facade drives; prefer ``AerialDB.insert``.
 
     The tuple log is a ring buffer: writes land at ``position % capacity``
     (oldest-first overwrite), so inserts never saturate; every
@@ -370,8 +495,8 @@ def insert_step(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
 
     Returns (new_state, info dict).
     """
-    check_batch_fits(cfg, payload.shape)
-    return _insert_step_jit(cfg, state, payload, meta, alive)
+    _warn_deprecated("insert_step", "repro.api.AerialDB.insert")
+    return _insert(cfg, state, payload, meta, alive)
 
 
 # ---------------------------------------------------------------------------
@@ -421,7 +546,7 @@ def _lookup_sets(cfg: StoreConfig, pred: QueryPred, sites: jnp.ndarray,
 
 def scan_engine(tup_f, tup_sid, tup_count, pred: QueryPred, sublists,
                 sublist_len, use_kernel: bool = False,
-                interpret: Optional[bool] = None):
+                interpret: Optional[bool] = None, channel: int = 0):
     """Per-edge predicate scan (the InfluxDB role). Evaluates each query's
     predicate + shard OR-list against the edge-local retained window
     (``slot < min(tup_count, capacity)`` — ring-buffer validity).
@@ -432,21 +557,26 @@ def scan_engine(tup_f, tup_sid, tup_count, pred: QueryPred, sublists,
       use_kernel:  dispatch to the Pallas TPU kernel instead of the jnp ref.
       interpret:   force Pallas interpret mode; None = auto (compiled on TPU,
                    interpreted elsewhere).
+      channel:     static sensor channel to aggregate (``AggSpec.channel``);
+                   value column ``3 + channel`` in both engines.
 
     Returns (count, vsum, vmin, vmax): each (Q, E).
     """
     if use_kernel:
         from repro.kernels.st_scan import ops as st_ops
         return st_ops.st_scan(tup_f, tup_sid, tup_count, pred, sublists,
-                              sublist_len, interpret=interpret)
+                              sublist_len, interpret=interpret,
+                              channel=channel)
     from repro.kernels.st_scan import ref as st_ref
-    return st_ref.st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len)
+    return st_ref.st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists,
+                              sublist_len, channel=channel)
 
 
 def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
                 alive: jnp.ndarray, key: jax.Array, edge_ids: jnp.ndarray,
                 combine_matched=lambda local: local,
-                use_kernel: bool = False, interpret: Optional[bool] = None):
+                use_kernel: bool = False, interpret: Optional[bool] = None,
+                agg: AggSpec = AggSpec()):
     """Shard-local query body: index lookup -> planning -> per-edge sub-query
     scan, over the slice of the edge axis named by ``edge_ids``.
 
@@ -503,7 +633,8 @@ def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
         shards_matched = jnp.full((q,), -1, jnp.int32)
 
     partials = scan_engine(state.tup_f, state.tup_sid, state.tup_count, pred,
-                           sublists, sublist_len, use_kernel, interpret)
+                           sublists, sublist_len, use_kernel, interpret,
+                           channel=agg.channel)
     return partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched)
 
 
@@ -511,14 +642,20 @@ def finalize_query(partials, sublist_len, lookup_mask, broadcast, overflow,
                    shards_matched):
     """Final (Q, E) -> (Q,) combine shared by the 1-device and sharded paths
     (under the federated runtime, this is the only tuple-volume-independent
-    reduction crossing devices). ``partials`` are full-E per-edge aggregates."""
+    reduction crossing devices). ``partials`` are full-E per-edge aggregates.
+    ``mean`` is derived here from the combined sum/count, so it adds no
+    cross-device reduction of its own."""
     count, vsum, vmin, vmax = partials
+    total = jnp.sum(count, axis=-1).astype(jnp.int32)
+    vsum_total = jnp.sum(vsum, axis=-1)
     result = QueryResult(
-        count=jnp.sum(count, axis=-1).astype(jnp.int32),
-        vsum=jnp.sum(vsum, axis=-1),
+        count=total,
+        vsum=vsum_total,
         vmin=jnp.min(vmin, axis=-1),
         vmax=jnp.max(vmax, axis=-1),
         overflow=overflow,
+        vmean=jnp.where(total > 0,
+                        vsum_total / jnp.maximum(total, 1), jnp.nan),
     )
     info = QueryInfo(
         lookup_edges=jnp.sum(lookup_mask, axis=-1),
@@ -530,16 +667,41 @@ def finalize_query(partials, sublist_len, lookup_mask, broadcast, overflow,
     return result, info
 
 
-@partial(jax.jit, static_argnums=(0, 5, 6))
-def query_step(cfg: StoreConfig, state: StoreState, pred: QueryPred,
-               alive: jnp.ndarray, key: jax.Array, use_kernel: bool = False,
-               interpret: Optional[bool] = None):
-    """Decentralized query execution (paper Fig 4): index lookup -> planning
-    -> per-edge sub-queries -> combine. The 1-device special case of
-    ``query_local``. Returns (QueryResult, QueryInfo)."""
+@partial(jax.jit, static_argnums=(0, 5, 6, 7))
+def _query_step_jit(cfg: StoreConfig, state: StoreState, pred: QueryPred,
+                    alive: jnp.ndarray, key: jax.Array,
+                    use_kernel: bool = False,
+                    interpret: Optional[bool] = None,
+                    channel: int = 0):
     edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
     partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched) = \
         query_local(cfg, state, pred, alive, key, edge_ids,
-                    use_kernel=use_kernel, interpret=interpret)
+                    use_kernel=use_kernel, interpret=interpret,
+                    agg=AggSpec(channel=channel))
     return finalize_query(partials, sublist_len, lookup_mask, broadcast, ovf,
                           shards_matched)
+
+
+def _query(cfg: StoreConfig, state: StoreState, pred: QueryPred,
+           alive: jnp.ndarray, key: jax.Array, use_kernel: bool = False,
+           interpret: Optional[bool] = None, agg: AggSpec = AggSpec()):
+    """1-device query body shared by the ``AerialDB`` facade and the
+    deprecated ``query_step`` shim. Only ``agg.channel`` reaches the jit
+    cache key — varying the requested ops never recompiles."""
+    agg.validate_for(cfg)
+    return _query_step_jit(cfg, state, pred, alive, key, use_kernel,
+                           interpret, agg.channel)
+
+
+def query_step(cfg: StoreConfig, state: StoreState, pred: QueryPred,
+               alive: jnp.ndarray, key: jax.Array, use_kernel: bool = False,
+               interpret: Optional[bool] = None, agg: AggSpec = AggSpec()):
+    """Decentralized query execution (paper Fig 4): index lookup -> planning
+    -> per-edge sub-queries -> combine. The 1-device special case of
+    ``query_local``. Returns (QueryResult, QueryInfo).
+
+    .. deprecated:: kept as a thin shim over the same body the
+       ``repro.api.AerialDB`` facade drives; prefer ``AerialDB.query``.
+    """
+    _warn_deprecated("query_step", "repro.api.AerialDB.query")
+    return _query(cfg, state, pred, alive, key, use_kernel, interpret, agg)

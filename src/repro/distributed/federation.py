@@ -41,8 +41,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.core.datastore import (StoreConfig, StoreState, check_batch_fits,
-                                  finalize_query, insert_local, query_local)
+from repro.core.datastore import (AggSpec, StoreConfig, StoreState,
+                                  check_batch_fits, finalize_query,
+                                  insert_local, query_local)
 from repro.core.index import MatchedShards, dedup_matched
 from repro.core.placement import ShardMeta
 from repro.distributed.sharding import (EDGE_AXIS, shard_store,
@@ -204,7 +205,7 @@ def ingest_rounds(cfg: StoreConfig, state: StoreState, payloads, metas,
 
 @lru_cache(maxsize=None)
 def _query_fn(cfg: StoreConfig, mesh: Mesh, use_kernel: bool,
-              interpret: Optional[bool]):
+              interpret: Optional[bool], channel: int):
     state_specs = store_partition_specs()
     s = cfg.max_shards_per_query
 
@@ -213,7 +214,8 @@ def _query_fn(cfg: StoreConfig, mesh: Mesh, use_kernel: bool,
         partials, sublist_len, meta_info = query_local(
             cfg, state, pred, alive, key, edge_ids,
             combine_matched=partial(_merge_matched, max_shards=s),
-            use_kernel=use_kernel, interpret=interpret)
+            use_kernel=use_kernel, interpret=interpret,
+            agg=AggSpec(channel=channel))
         return partials, sublist_len, meta_info
 
     def outer(state, pred, alive, key_data):
@@ -238,10 +240,17 @@ def _query_fn(cfg: StoreConfig, mesh: Mesh, use_kernel: bool,
 def federated_query_step(cfg: StoreConfig, state: StoreState, pred,
                          alive: jnp.ndarray, key: jax.Array, mesh: Mesh,
                          use_kernel: bool = False,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None,
+                         agg: AggSpec = AggSpec()):
     """``query_step`` over an edge mesh: device-local index match + tuple
     scan, metadata-scale candidate merge, replicated planning, and a final
-    cross-device (Q, E) combine. Returns (QueryResult, QueryInfo)."""
+    cross-device (Q, E) combine. ``agg`` (static) selects the sensor channel
+    and aggregate set; the device-local scan produces per-edge partials for
+    that channel and ``finalize_query``'s combine (including the derived
+    mean) stays the only cross-device reduction. Only ``agg.channel`` keys
+    the compiled-function cache — varying the ops projection is free.
+    Returns (QueryResult, QueryInfo)."""
     check_edge_mesh(cfg, mesh)
-    return _query_fn(cfg, mesh, use_kernel, interpret)(
+    agg.validate_for(cfg)
+    return _query_fn(cfg, mesh, use_kernel, interpret, agg.channel)(
         state, pred, alive, jax.random.key_data(key))

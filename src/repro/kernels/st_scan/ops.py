@@ -31,19 +31,26 @@ def pack_pred(pred):
     return pred_f, pred_i.astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("block_c", "interpret"))
+@partial(jax.jit, static_argnames=("block_c", "interpret", "channel"))
 def st_scan(tup_f, tup_sid, tup_count, pred, sublists, sublist_len,
-            block_c: int = 512, interpret: Optional[bool] = None):
+            block_c: int = 512, interpret: Optional[bool] = None,
+            channel: int = 0):
     """Drop-in replacement for ref.st_scan_ref backed by the Pallas kernel.
 
     ``tup_count`` is the monotonic total-written counter; the valid window is
     ``min(count, C)`` (ring-buffer retention). The unpadded C is forwarded to
     the kernel as ``valid_c`` so its per-lane bound never admits the lanes
-    this wrapper pads on.
+    this wrapper pads on. ``channel`` (static) selects the sensor channel to
+    aggregate — value column ``3 + channel`` of the row-major log.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     e, c, w = tup_f.shape
+    if not 0 <= channel < w - 3:
+        raise ValueError(
+            f"channel={channel} is not a valid sensor channel: the tuple log "
+            f"holds {w - 3} channels (value columns 3..{w - 1}; negative "
+            "channels would alias the t/lat/lon metadata columns).")
     pad_c = (-c) % block_c
     tupf_t = jnp.swapaxes(tup_f, 1, 2)           # (E, W, C): tuples on lanes
     sid_t = jnp.swapaxes(tup_sid, 1, 2)          # (E, 2, C)
@@ -59,4 +66,5 @@ def st_scan(tup_f, tup_sid, tup_count, pred, sublists, sublist_len,
     pred_f, pred_i = pack_pred(pred)
     return st_scan_kernel(tupf_t, sid_t, tup_count[:, None], pred_f, pred_i,
                           sublists, sublist_len, block_c=block_c,
-                          interpret=interpret, valid_c=c)
+                          interpret=interpret, valid_c=c,
+                          value_col=3 + channel)

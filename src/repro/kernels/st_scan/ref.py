@@ -33,7 +33,8 @@ def tuple_pred_match(tup_f, tup_sid, pred):
     return jnp.where(bc(pred.is_and), m_and, m_or)
 
 
-def st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len):
+def st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len,
+                channel: int = 0):
     """Oracle scan.
 
     Args:
@@ -44,14 +45,21 @@ def st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len):
       pred:        QueryPred with (Q,) fields.
       sublists:    (Q, E, L, 2) int32 shard OR-lists.
       sublist_len: (Q, E) int32 (see module docstring).
+      channel:     sensor channel to aggregate — value column
+                   ``tup_f[..., 3 + channel]`` (static).
 
     Returns:
       (count, vsum, vmin, vmax) each (Q, E) — per-edge partial aggregates
-      of value column v0 (tup_f[..., 3]).
+      of the selected value column.
     """
-    e, c, _ = tup_f.shape
+    e, c, w = tup_f.shape
     q = sublists.shape[0]
     l = sublists.shape[2]
+    if not 0 <= channel < w - 3:
+        raise ValueError(
+            f"channel={channel} is not a valid sensor channel: the tuple log "
+            f"holds {w - 3} channels (value columns 3..{w - 1}; negative "
+            "channels would alias the t/lat/lon metadata columns).")
 
     # Ring-buffer validity: every slot below min(count, capacity) is live
     # (once the ring wraps, all slots are — count keeps growing past C).
@@ -71,7 +79,7 @@ def st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len):
     shard_ok = jnp.where(scan_all, True, in_list) & selected
 
     m = pm & shard_ok & alive_t[None]
-    v0 = tup_f[None, ..., 3]
+    v0 = tup_f[None, ..., 3 + channel]
     count = jnp.sum(m, axis=-1).astype(jnp.int32)
     vsum = jnp.sum(jnp.where(m, v0, 0.0), axis=-1)
     vmin = jnp.min(jnp.where(m, v0, jnp.inf), axis=-1)

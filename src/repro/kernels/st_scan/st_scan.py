@@ -30,7 +30,7 @@ from jax.experimental import pallas as pl
 
 def _kernel(tupf_ref, sidl_ref, cnt_ref, predf_ref, predi_ref, subl_ref,
             slen_ref, count_ref, vsum_ref, vmin_ref, vmax_ref, *, block_c: int,
-            valid_c: int):
+            valid_c: int, value_col: int):
     pc = pl.program_id(2)
 
     @pl.when(pc == 0)
@@ -43,7 +43,7 @@ def _kernel(tupf_ref, sidl_ref, cnt_ref, predf_ref, predi_ref, subl_ref,
     t = tupf_ref[0, 0:1, :]      # (1, BC)
     lat = tupf_ref[0, 1:2, :]
     lon = tupf_ref[0, 2:3, :]
-    v0 = tupf_ref[0, 3:4, :]
+    v0 = tupf_ref[0, value_col:value_col + 1, :]   # static channel selection
     sid_hi = sidl_ref[0, 0:1, :]
     sid_lo = sidl_ref[0, 1:2, :]
 
@@ -86,7 +86,7 @@ def _kernel(tupf_ref, sidl_ref, cnt_ref, predf_ref, predi_ref, subl_ref,
 def st_scan_kernel(tupf_t, sid_t, tup_count, pred_f, pred_i, sublists_t,
                    sublist_len, *, block_c: int = 512,
                    interpret: "bool | None" = None,
-                   valid_c: "int | None" = None):
+                   valid_c: "int | None" = None, value_col: int = 3):
     """Invoke the Pallas scan.
 
     Args:
@@ -102,6 +102,8 @@ def st_scan_kernel(tupf_t, sid_t, tup_count, pred_f, pred_i, sublists_t,
       valid_c:     unpadded log length (ops.py pads C to a block multiple and
                    passes the original here so padding lanes are never
                    admitted); None = C.
+      value_col:   static row of the column-major log to aggregate (the
+                   selected sensor channel; 3 = v0).
 
     Returns (count, vsum, vmin, vmax), each (Q, E).
     """
@@ -110,13 +112,18 @@ def st_scan_kernel(tupf_t, sid_t, tup_count, pred_f, pred_i, sublists_t,
     e, w, c = tupf_t.shape
     if valid_c is None:
         valid_c = c
+    if not 3 <= value_col < w:
+        raise ValueError(
+            f"value_col={value_col} out of range: the column-major log has "
+            f"rows 0..2 = (t, lat, lon) and value rows 3..{w - 1}.")
     q = pred_f.shape[0]
     l = sublists_t.shape[2]
     if c % block_c:
         raise ValueError(f"C={c} must be a multiple of block_c={block_c}")
     grid = (e, q, c // block_c)
 
-    kernel = functools.partial(_kernel, block_c=block_c, valid_c=valid_c)
+    kernel = functools.partial(_kernel, block_c=block_c, valid_c=valid_c,
+                               value_col=value_col)
     out = pl.pallas_call(
         kernel,
         grid=grid,

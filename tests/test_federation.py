@@ -5,10 +5,13 @@ single-device jit path (``insert_step``/``query_step``) and through the
 shard_map path (``distributed.federation``) on a forced 4-host-device
 ``("edge",)`` mesh must produce identical ``StoreState`` (bitwise — the
 sharded path scatters the same values into the same slots) and identical
-``QueryResult``/``QueryInfo``. The only tolerated difference is ``vsum``,
-where the final (Q, E) combine crosses devices and float accumulation order
-may differ; counts/min/max/telemetry are order-independent and compared
-exactly.
+``QueryResult``/``QueryInfo``. The only tolerated difference is ``vsum`` (and
+the derived ``vmean``), where the final (Q, E) combine crosses devices and
+float accumulation order may differ; counts/min/max/telemetry are
+order-independent and compared exactly. The same oracle is driven through the
+unified ``repro.api`` facade (``AerialDB`` adopting each runtime) with
+non-default ``AggSpec``s, pinning the whole generalized aggregation pipeline
+— and the deprecated ``insert_step``/``query_step`` shims against it.
 
 ``tests/conftest.py`` forces ``--xla_force_host_platform_device_count=4``
 before jax initializes, so the mesh is real multi-device even on CPU.
@@ -21,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import AerialDB, AggSpec, Query
 from repro.core.datastore import (StoreConfig, init_store, insert_step,
                                   make_pred, query_step)
 from repro.core.placement import ShardMeta
@@ -75,7 +79,7 @@ def assert_states_identical(ref, fed):
 def assert_queries_identical(r1, i1, r2, i2):
     for f in r1._fields:
         a, b = np.asarray(getattr(r1, f)), np.asarray(getattr(r2, f))
-        if f == "vsum":  # cross-device accumulation order
+        if f in ("vsum", "vmean"):  # cross-device accumulation order
             np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6, err_msg=f)
         else:
             np.testing.assert_array_equal(a, b, err_msg=f)
@@ -223,6 +227,107 @@ def test_query_kernel_path_identical(loaded, mesh):
     r2, i2 = federated_query_step(cfg, fed, pred, alive, key, mesh,
                                   use_kernel=True, interpret=True)
     assert_queries_identical(r1, i1, r2, i2)
+
+
+# ---------------------------------------------------------------------------
+# Unified API facade: the same differential oracle, driven through AerialDB
+# ---------------------------------------------------------------------------
+
+AGG_SPECS = {
+    "default": AggSpec(),
+    "ch2_all": AggSpec(channel=2),
+    "ch1_mean": AggSpec(channel=1, ops=("mean",)),
+    "ch3_minmax": AggSpec(channel=3, ops=("min", "max")),
+}
+
+
+@pytest.fixture(scope="module")
+def loaded_facades(loaded, mesh):
+    """AerialDB sessions adopting the PR-2-loaded states: one per runtime.
+    The facade owns alive/key custody; explicit keys below keep the planner
+    draws identical across paths."""
+    cfg, ref, fed, alive = loaded
+    return (AerialDB(cfg, ref, alive, jax.random.key(0)),
+            AerialDB(cfg, fed, alive, jax.random.key(0), mesh=mesh))
+
+
+@pytest.mark.parametrize("spec_name", sorted(AGG_SPECS))
+@pytest.mark.parametrize("pred_name", sorted(QUERY_PREDS))
+def test_facade_query_identical_per_aggspec(loaded_facades, spec_name,
+                                            pred_name):
+    """AerialDB.query with non-default AggSpecs: sharded and single-device
+    results bit-identical (vsum/vmean up to cross-device accumulation
+    order), for every predicate shape x channel/ops combination."""
+    db_ref, db_fed = loaded_facades
+    spec = AGG_SPECS[spec_name]
+    key = jax.random.key(13)
+    r1, i1 = db_ref.query(QUERY_PREDS[pred_name], agg=spec, key=key)
+    r2, i2 = db_fed.query(QUERY_PREDS[pred_name], agg=spec, key=key)
+    assert_queries_identical(r1, i1, r2, i2)
+
+
+def test_facade_builder_query_identical(loaded_facades):
+    """Builder-composed queries (AND/OR combinators, agg channels) through
+    both runtimes — one compiled batch, identical answers."""
+    db_ref, db_fed = loaded_facades
+    q = Query.batch(
+        Query().bbox(12.85, 13.10, 77.45, 77.75) & Query().time(0.0, 1e9),
+        Query().bbox(12.9, 12.95, 77.5, 77.6) | Query().time(0.0, 60.0),
+        Query().shard(3, 1).time(0.0, 1e9))
+    pred, _ = q
+    spec = AggSpec(channel=2, ops=("count", "mean"))
+    key = jax.random.key(29)
+    r1, i1 = db_ref.query((pred, spec), key=key)
+    r2, i2 = db_fed.query((pred, spec), key=key)
+    assert_queries_identical(r1, i1, r2, i2)
+    assert set(r1.view(spec)) == {"count", "mean"}
+
+
+def test_facade_ingest_and_failures_identical(mesh):
+    """Full session lifecycle through the facade on both runtimes: fused
+    ingest, edge failures, queries mid-failure, recovery — states bitwise
+    identical and every answer equal."""
+    cfg = make_cfg()
+    db_ref = AerialDB.open(cfg)
+    db_fed = AerialDB.open(cfg, mesh=mesh)
+    payloads, metas = fleet_rounds(seed=31, rounds=4)
+    db_ref.ingest_rounds(payloads, metas)
+    db_fed.ingest_rounds(payloads, metas)
+    assert_states_identical(db_ref.state, db_fed.state)
+
+    db_ref.fail_edges(1, 5)
+    db_fed.fail_edges(1, 5)
+    q = Query().time(0.0, 1e9).agg("count", "mean", channel=1)
+    key = jax.random.key(7)
+    r1, i1 = db_ref.query(q, key=key)
+    r2, i2 = db_fed.query(q, key=key)
+    assert_queries_identical(r1, i1, r2, i2)
+
+    # Insert while edges are down, then recover: still identical.
+    p, m = DroneFleet(6, records_per_shard=12, seed=8).next_shards()
+    db_ref.insert(p, m)
+    db_fed.insert(p, m)
+    db_ref.recover_edges(1, 5)
+    db_fed.recover_edges(1, 5)
+    assert_states_identical(db_ref.state, db_fed.state)
+    r1, i1 = db_ref.query(q, key=key)
+    r2, i2 = db_fed.query(q, key=key)
+    assert_queries_identical(r1, i1, r2, i2)
+
+
+def test_shim_return_values_unchanged(loaded, mesh):
+    """The deprecated insert_step/query_step shims still return exactly what
+    the PR-2 harness pinned: default-AggSpec facade answers equal shim
+    answers on the same loaded state, on both runtimes."""
+    cfg, ref, fed, alive = loaded
+    pred = QUERY_PREDS["and_spatiotemporal"]
+    key = jax.random.key(0)
+    r_shim, i_shim = query_step(cfg, ref, pred, alive, key)
+    r_fed, i_fed = federated_query_step(cfg, fed, pred, alive, key, mesh)
+    db_ref = AerialDB(cfg, ref, alive, jax.random.key(0))
+    r_api, i_api = db_ref.query(pred, key=key)
+    assert_queries_identical(r_shim, i_shim, r_api, i_api)
+    assert_queries_identical(r_shim, i_shim, r_fed, i_fed)
 
 
 def test_fused_ingest_matches_python_loop():
