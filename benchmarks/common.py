@@ -15,19 +15,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.datastore import (StoreConfig, init_store, insert_step,
-                                  make_pred, query_step)
+from repro.api import AerialDB
+from repro.core.datastore import StoreConfig, init_store, make_pred
 from repro.core.placement import ShardMeta
 from repro.data.synthetic import CityConfig, DroneFleet, make_sites, make_query_workload
 from repro.distributed.federation import ingest_rounds, shard_store
 
-ROWS = []
+ROWS = []   # structured rows, cleared per figure by run.py's --json machinery
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
-    row = f"{name},{us_per_call:.1f},{derived}"
-    ROWS.append(row)
-    print(row, flush=True)
+    ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                 "derived": derived})
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
 def timeit(fn, *args, warmup=1, iters=3):
@@ -65,6 +65,20 @@ def build_store(n_edges=20, n_drones=20, rounds=4, records=30, planner="min_shar
     t_max = float(flat[:, 0].max())
     anchors = flat[:, :3]          # (t, lat, lon) of every inserted tuple
     return cfg, state, alive, fleet, t_max, anchors
+
+
+def open_session(cfg, state, alive, seed=0, **kw) -> AerialDB:
+    """Adopt a ``build_store`` state into an ``AerialDB`` session (the
+    benchmarks' query/insert surface — no deprecated step shims)."""
+    return AerialDB(cfg, state, alive, jax.random.key(seed), **kw)
+
+
+def timed_insert(cfg, state, alive, payload, meta):
+    """One facade insert from a FIXED pre-state (pure per call, so timeit
+    re-runs measure the same work): returns the post-insert StoreState."""
+    db = open_session(cfg, state, alive)
+    db.insert(payload, meta)
+    return db.state
 
 
 def paper_workloads(t_max, n_queries=8, seed=11, anchors=None):

@@ -34,7 +34,7 @@ def main() -> None:
             f"{args.devices}")
 
     from benchmarks.common import build_store, timeit
-    from repro.core.datastore import make_pred, query_step
+    from repro.core.datastore import make_pred
     from repro.core.placement import ShardMeta
     from repro.distributed.federation import (federated_insert_step,
                                               federated_query_step)

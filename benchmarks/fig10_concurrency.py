@@ -3,15 +3,15 @@ concurrency on TPU is batch width, not threads)."""
 import jax
 import numpy as np
 
-from benchmarks.common import build_store, emit, paper_workloads, timeit
-from repro.core.datastore import query_step
+from benchmarks.common import (build_store, emit, open_session,
+                               paper_workloads, timeit)
 
 
 def run():
     cfg, state, alive, _, t_max, anchors = build_store(n_drones=40, rounds=6)
+    db = open_session(cfg, state, alive)
     for q in (1, 4, 8, 16):
         wl = paper_workloads(t_max, n_queries=q, anchors=anchors, seed=5)
         pred = wl["30min/1km"]
-        us, _ = timeit(lambda p=pred: query_step(cfg, state, p, alive,
-                                                 jax.random.key(1)))
+        us, _ = timeit(lambda p=pred: db.query(p, key=jax.random.key(1)))
         emit(f"fig10/clients={q}", us, f"us_per_query={us/q:.1f}")

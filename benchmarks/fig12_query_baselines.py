@@ -9,8 +9,8 @@ and centralized scan their full logs."""
 import jax
 import numpy as np
 
-from benchmarks.common import build_store, emit, paper_workloads, timeit
-from repro.core.datastore import query_step
+from benchmarks.common import (build_store, emit, open_session,
+                               paper_workloads, timeit)
 
 
 def run():
@@ -25,12 +25,12 @@ def run():
     proxy_base = {}
     for name in ("aerialdb", "feather_bcast", "cloud_central"):
         cfg, state, alive, _, t_max, anchors = stores[name]
+        db = open_session(cfg, state, alive)
         wl = paper_workloads(t_max, n_queries=8, anchors=anchors)
         for wname in ("5min/200m", "30min/1km", "2h/5km"):
             pred = wl[wname]
             us, (res, info) = timeit(
-                lambda c=cfg, s=state, p=pred, a=alive: query_step(
-                    c, s, p, a, jax.random.key(2)))
+                lambda d=db, p=pred: d.query(p, key=jax.random.key(2)))
             if name == "aerialdb":
                 per_node = (np.asarray(info.max_shards_per_edge).mean()
                             * cfg.records_per_shard)

@@ -5,17 +5,18 @@ the spatial predicate hashes to the coordinator and <= n shards match."""
 import jax
 import numpy as np
 
-from benchmarks.common import build_store, emit, paper_workloads, timeit
-from repro.core.datastore import query_step
+from benchmarks.common import (build_store, emit, open_session,
+                               paper_workloads, timeit)
 
 
 def run():
     cfg, state, alive, _, t_max, anchors = build_store(n_drones=40, rounds=6)
+    db = open_session(cfg, state, alive)
     wl = paper_workloads(t_max, n_queries=8, anchors=anchors)
     for wname in ("5min/1km", "30min/1km", "2h/5km"):
         pred = wl[wname]
         us, (res, info) = timeit(
-            lambda p=pred: query_step(cfg, state, p, alive, jax.random.key(3)))
+            lambda p=pred: db.query(p, key=jax.random.key(3)))
         lookup = np.asarray(info.lookup_edges).mean()
         sub = np.asarray(info.subquery_edges).mean()
         emit(f"fig13/RC/{wname}", us / 8,

@@ -5,24 +5,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import build_store, emit, timeit
-from repro.core.datastore import make_pred, query_step
+from benchmarks.common import build_store, emit, open_session, timeit
+from repro.core.datastore import make_pred
 
 
 def run():
     cfg, state, alive_full, _, t_max, _ = build_store(n_drones=40, rounds=6)
     cfg = dataclasses.replace(cfg, planner="random")  # catch-all audit query
     pred = make_pred(q=8, t0=0.0, t1=1e9, has_temporal=True, is_and=True)
+    db_full = open_session(cfg, state, alive_full)
     _, (res_full, _) = timeit(
-        lambda: query_step(cfg, state, pred, alive_full, jax.random.key(4)))
+        lambda: db_full.query(pred, key=jax.random.key(4)))
     total = int(np.asarray(res_full.count)[0])
     rng = np.random.default_rng(9)
     for k in (0, 1, 2, 3, 4):
         alive = np.ones(cfg.n_edges, bool)
         alive[rng.choice(cfg.n_edges, k, replace=False)] = False
-        aj = jnp.asarray(alive)
+        db = open_session(cfg, state, jnp.asarray(alive))
         us, (res, info) = timeit(
-            lambda a=aj: query_step(cfg, state, pred, a, jax.random.key(4)))
+            lambda d=db: d.query(pred, key=jax.random.key(4)))
         got = int(np.asarray(res.count)[0])
         emit(f"fig14/failures={k}", us / 8,
              f"completeness={got/total:.4f};broadcast_frac="

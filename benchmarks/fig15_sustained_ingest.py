@@ -22,9 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import build_store, emit, timeit
-from repro.core.datastore import insert_step, make_pred, query_step
-from repro.core.placement import ShardMeta
+from benchmarks.common import build_store, emit, open_session, timeit
+from repro.api import AerialDB
+from repro.core.datastore import make_pred
 
 CAP = 2048
 TARGET_FILL = 4          # stop once min(tup_count) >= TARGET_FILL * CAP
@@ -35,31 +35,33 @@ def run():
     cfg, state, alive, fleet, t_max, _ = build_store(
         n_edges=8, n_drones=16, rounds=1, records=30, tuple_capacity=CAP,
         index_capacity=1024, retention_every=4)
+    db = open_session(cfg, state, alive)     # sustained-ingest session
 
-    def one_round(state):
+    def one_round():
         payload, meta = fleet.next_shards()
-        meta = ShardMeta(*[jnp.asarray(x) for x in meta])
-        state, info = insert_step(cfg, state, jnp.asarray(payload), meta, alive)
-        return state, payload, np.asarray(info["intake_per_edge"])
+        info = db.insert(payload, meta)
+        return payload, np.asarray(info["intake_per_edge"])
 
     payloads, intakes, occ_hwm, cur_hwm = [], [], 0, 0
     cold_us, steady_us = [], []
     rounds = 0
     while rounds < MAX_ROUNDS:
-        count_min = int(np.asarray(state.tup_count).min())
+        count_min = int(np.asarray(db.state.tup_count).min())
         if count_min >= TARGET_FILL * CAP:
             break
         t0 = time.perf_counter()
-        state, payload, intake = one_round(state)
-        jax.block_until_ready(state.tup_count)
+        payload, intake = one_round()
+        jax.block_until_ready(db.state.tup_count)
         dt_us = (time.perf_counter() - t0) * 1e6
         (steady_us if count_min >= CAP else cold_us).append(dt_us)
         payloads.append(payload)
         intakes.append(intake)
-        occ_hwm = max(occ_hwm, int(np.asarray(state.index.valid.sum(axis=1)).max()))
-        cur_hwm = max(cur_hwm, int(np.asarray(state.index.cursor).max()))
+        occ_hwm = max(occ_hwm,
+                      int(np.asarray(db.state.index.valid.sum(axis=1)).max()))
+        cur_hwm = max(cur_hwm, int(np.asarray(db.state.index.cursor).max()))
         rounds += 1
 
+    state = db.state
     count = np.asarray(state.tup_count)
     # Skip the first timed call of each regime (compile / cache effects).
     emit("fig15/insert_cold", float(np.mean(cold_us[1:])),
@@ -76,17 +78,17 @@ def run():
          f"idx_dropped={int(np.asarray(state.index.dropped).sum())}")
 
     # Fused ingest driver: the same steady-state ingest as ONE lax.scan
-    # dispatch over stacked rounds with donated state (federation.ingest_rounds)
-    # — amortizes per-round dispatch + host sync vs the per-step loop above.
-    from repro.distributed.federation import ingest_rounds
+    # dispatch over stacked rounds with donated state (the facade's
+    # ingest_rounds) — amortizes per-round dispatch + host sync vs the
+    # per-step loop above.
     n_fused = 16
     payloads_f, metas_f = fleet.next_rounds(n_fused)
-    warm, _ = ingest_rounds(cfg, jax.tree.map(jnp.copy, state), payloads_f,
-                            metas_f, alive)     # compile; donates the copy
-    jax.block_until_ready(warm.tup_count)
+    db_f = open_session(cfg, jax.tree.map(jnp.copy, state), alive)
+    db_f.ingest_rounds(payloads_f, metas_f)     # compile; donates the copy
+    jax.block_until_ready(db_f.state.tup_count)
     t0 = time.perf_counter()
-    warm, _ = ingest_rounds(cfg, warm, payloads_f, metas_f, alive)
-    jax.block_until_ready(warm.tup_count)
+    db_f.ingest_rounds(payloads_f, metas_f)
+    jax.block_until_ready(db_f.state.tup_count)
     us_fused = (time.perf_counter() - t0) * 1e6 / n_fused
     emit("fig15/insert_steady_fused", us_fused,
          f"rounds_per_dispatch={n_fused};"
@@ -105,10 +107,9 @@ def run():
 
     pred = make_pred(q=1, t0=t_lo, t1=t_hi, has_temporal=True, is_and=True)
     key = jax.random.key(0)
-    us_ref, (res_ref, _) = timeit(
-        lambda: query_step(cfg, state, pred, alive, key, use_kernel=False))
-    us_ker, (res_ker, _) = timeit(
-        lambda: query_step(cfg, state, pred, alive, key, use_kernel=True))
+    db_ker = AerialDB(cfg, state, alive, key, use_kernel=True)
+    us_ref, (res_ref, _) = timeit(lambda: db.query(pred, key=key))
+    us_ker, (res_ker, _) = timeit(lambda: db_ker.query(pred, key=key))
     exact = int(res_ref.count[0]) == exp_count
     match = (int(res_ker.count[0]) == int(res_ref.count[0])
              and np.allclose(np.asarray(res_ker.vsum), np.asarray(res_ref.vsum),

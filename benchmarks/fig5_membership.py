@@ -17,8 +17,8 @@ from repro.core.datastore import make_pred
 def run():
     rng = np.random.default_rng(0)
     e, c, q = 8, 4096, 4
-    tup_f = jnp.asarray(rng.uniform(0, 100, (e, c, 7)).astype(np.float32))
-    tup_sid = jnp.asarray(rng.integers(0, 500, (e, c, 2)).astype(np.int32))
+    tup_f = jnp.asarray(rng.uniform(0, 100, (e, 7, c)).astype(np.float32))
+    tup_sid = jnp.asarray(rng.integers(0, 500, (e, 2, c)).astype(np.int32))
     cnt = jnp.full((e,), c, jnp.int32)
     pred = make_pred(q=q, t0=0.0, t1=100.0, has_temporal=True, is_and=True)
     for l in (16, 64, 150, 300, 600):

@@ -1,0 +1,84 @@
+"""Fig 5 companion: batched-query scan cost in the per-edge engine.
+
+The paper's 100x query-speedup claim (§3.5.2, Fig 5) rests on the per-edge
+scan staying cheap under mixed analyst traffic — which arrives BATCHED. The
+query-tiled st_scan kernel answers a whole ``block_q``-query tile per
+resident VMEM tuple tile, so HBM tuple traffic (and, in interpret mode, the
+grid-step count) grows as ceil(Q / block_q) instead of Q. This row family
+sweeps Q in {1, 8, 64} for both engines over the same column-major log and
+reports per-query scan time plus the batching speedup vs Q independent
+single-query scans — the acceptance series tracked across PRs via
+``--json`` (BENCH_fig5_scan_batch.json).
+
+The kernel/ref COUNT cross-check is a hard gate: any bitwise mismatch
+raises, which fails the CI benchmark-smoke job.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.datastore import make_pred
+from repro.kernels.st_scan import ops as st_ops
+from repro.kernels.st_scan import ref as st_ref
+
+E, C, W = 8, 2048, 7
+Q_SWEEP = (1, 8, 64)
+BLOCK_C, BLOCK_Q = 512, 16
+
+
+def _problem(rng, q):
+    """One batched scan problem over a shared log: scan-all sentinel (the
+    federated broadcast path — every edge scans everything), ~50%-selective
+    temporal windows."""
+    t0 = rng.uniform(0, 50, q).astype(np.float32)
+    pred = make_pred(q=q, t0=t0, t1=t0 + 50.0, has_temporal=True, is_and=True)
+    sublists = jnp.zeros((q, E, 1, 2), jnp.int32)
+    slen = jnp.full((q, E), -1, jnp.int32)
+    return pred, sublists, slen
+
+
+def run():
+    rng = np.random.default_rng(0)
+    tup_f = jnp.asarray(rng.uniform(0, 100, (E, W, C)).astype(np.float32))
+    tup_sid = jnp.asarray(rng.integers(0, 500, (E, 2, C)).astype(np.int32))
+    cnt = jnp.full((E,), C, jnp.int32)
+
+    per_query = {}
+    counts = {}
+    for q in Q_SWEEP:
+        pred, sublists, slen = _problem(rng, q)
+        us_ref, out_ref = timeit(
+            lambda p=pred, s=sublists, sl=slen: st_ref.st_scan_ref(
+                tup_f, tup_sid, cnt, p, s, sl))
+        us_ker, out_ker = timeit(
+            lambda p=pred, s=sublists, sl=slen: st_ops.st_scan(
+                tup_f, tup_sid, cnt, p, s, sl,
+                block_c=BLOCK_C, block_q=BLOCK_Q))
+        counts[q] = (np.asarray(out_ref[0]), np.asarray(out_ker[0]))
+        for engine, us in (("ref", us_ref), ("kernel", us_ker)):
+            per_query[(engine, q)] = us / q
+            emit(f"fig5_scan_batch/{engine}/Q={q}", us,
+                 f"us_per_query={us / q:.1f};"
+                 f"rows={int(counts[q][0].sum())}")
+
+    # The tentpole acceptance series: batching Q queries into one tiled scan
+    # vs Q independent single-query scans.
+    for engine in ("ref", "kernel"):
+        for q in Q_SWEEP[1:]:
+            speedup = per_query[(engine, 1)] / per_query[(engine, q)]
+            emit(f"fig5_scan_batch/{engine}/batch_speedup/Q={q}", 0.0,
+                 f"speedup_vs_qx1={speedup:.2f}x;block_q={BLOCK_Q}")
+
+    # Hard gate: the kernel must agree with the reference bitwise on counts.
+    mismatch = [q for q, (cr, ck) in counts.items() if not (cr == ck).all()]
+    emit("fig5_scan_batch/count_match", 0.0,
+         f"ok={int(not mismatch)};qs={list(counts)}")
+    if mismatch:
+        raise RuntimeError(
+            f"st_scan kernel/ref count mismatch at Q={mismatch}: the "
+            "query-tiled kernel diverged from the oracle.")
+
+
+if __name__ == "__main__":
+    run()

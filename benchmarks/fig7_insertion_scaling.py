@@ -20,8 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import build_store, emit, timeit
-from repro.core.datastore import insert_step
+from benchmarks.common import build_store, emit, timed_insert, timeit
 from repro.core.placement import ShardMeta
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
@@ -57,8 +56,8 @@ def run():
         payload, meta = fleet.next_shards()
         meta = ShardMeta(*[jnp.asarray(x) for x in meta])
         pj = jnp.asarray(payload)
-        us, (state2, _) = timeit(
-            lambda: insert_step(cfg, state, pj, meta, alive))
+        us, state2 = timeit(
+            lambda: timed_insert(cfg, state, alive, pj, meta))
         emit(f"fig7/insert/{name}", us,
              f"us_per_shard={us/n_drones:.1f};drones={n_drones};edges={n_edges}")
         per_edge = np.asarray(state2.tup_count) // cfg.records_per_shard

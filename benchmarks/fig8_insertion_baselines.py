@@ -13,8 +13,7 @@ shard's temporal replica to ONE edge (see fig7/hotspot_single_round)."""
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import build_store, emit, timeit
-from repro.core.datastore import insert_step
+from benchmarks.common import build_store, emit, timed_insert, timeit
 from repro.core.placement import ShardMeta
 
 
@@ -31,7 +30,7 @@ def run():
         payload, meta = fleet.next_shards()
         meta = ShardMeta(*[jnp.asarray(x) for x in meta])
         pj = jnp.asarray(payload)
-        us, (st2, _) = timeit(lambda: insert_step(cfg, state, pj, meta, alive))
+        us, st2 = timeit(lambda: timed_insert(cfg, state, alive, pj, meta))
         intake = np.asarray(st2.tup_count) - np.asarray(state.tup_count)
         emit(f"fig8/insert/{name}", us,
              f"us_per_shard={us/100:.1f};max_node_intake={intake.max()};"

@@ -6,19 +6,20 @@ import dataclasses
 import jax
 import numpy as np
 
-from benchmarks.common import build_store, emit, paper_workloads, timeit
-from repro.core.datastore import query_step
+from benchmarks.common import (build_store, emit, open_session,
+                               paper_workloads, timeit)
 
 
 def run():
     cfg, state, alive, _, t_max, anchors = build_store(n_drones=40, rounds=6)
     wl = paper_workloads(t_max, n_queries=8, anchors=anchors)
     for planner in ("random", "min_shards", "min_edges"):
-        pcfg = dataclasses.replace(cfg, planner=planner)
+        db = open_session(dataclasses.replace(cfg, planner=planner), state,
+                          alive)
         for wname, pred in wl.items():
             key = jax.random.key(0)
             us, (res, info) = timeit(
-                lambda p=pcfg, pr=pred: query_step(p, state, pr, alive, key))
+                lambda d=db, pr=pred: d.query(pr, key=key))
             spe = np.asarray(info.max_shards_per_edge).mean()
             edges = np.asarray(info.subquery_edges).mean()
             emit(f"fig9/{planner}/{wname}", us / 8,

@@ -13,12 +13,10 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.datastore import (StoreConfig, init_store, insert_step,
-                                  make_pred, query_step)
-from repro.core.placement import ShardMeta
+from repro.api import AerialDB
+from repro.core.datastore import StoreConfig, make_pred
 from repro.data.synthetic import CityConfig, DroneFleet, make_sites
 
 # sized for this repo's 1-core CPU host; scale freely on real metal
@@ -42,42 +40,38 @@ def main():
                       tuple_capacity=1 << 15, index_capacity=4096,
                       max_shards_per_query=256, records_per_shard=30,
                       planner="min_shards")
-    state = init_store(cfg)
-    alive = np.ones(N_EDGES, bool)
+    db = AerialDB.open(cfg)
     fleet = DroneFleet(N_DRONES, records_per_shard=30)
 
     anchors = []
     total_expected = 0
     for r in range(ROUNDS):
         payload, meta = fleet.next_shards()
-        metaj = ShardMeta(*[jnp.asarray(x) for x in meta])
         t0 = time.perf_counter()
-        state, info = insert_step(cfg, state, jnp.asarray(payload), metaj,
-                                  jnp.asarray(alive))
-        jax.block_until_ready(state.tup_count)
+        db.insert(payload, meta)
+        jax.block_until_ready(db.state.tup_count)
         anchors.append(payload.reshape(-1, payload.shape[-1])[:, :3])
         total_expected += payload.shape[0] * payload.shape[1]
 
         # mid-mission failures: one edge dies at rounds 3 and 4 (§3.5.3)
         phase = "all-up"
         if r == 2:
-            alive[int(rng.integers(N_EDGES))] = False
+            db.fail_edges(int(rng.integers(N_EDGES)))
             phase = "1 edge down"
         if r == 3:
-            alive[int(rng.integers(N_EDGES))] = False
+            db.fail_edges(int(rng.integers(N_EDGES)))
             phase = "2 edges down"
 
         pred = analyst_queries(np.concatenate(anchors), rng)
         tq = time.perf_counter()
-        result, qinfo = query_step(cfg, state, pred, jnp.asarray(alive),
-                                   jax.random.key(r))
+        result, qinfo = db.query(pred, key=jax.random.key(r))
         jax.block_until_ready(result.count)
         catch_all = make_pred(q=1, t0=0.0, t1=1e9, has_temporal=True)
         # audit query touches every shard: use the vectorized random planner
         # (MinShards' greedy loop is for normal-sized result sets)
-        audit_cfg = dataclasses.replace(cfg, planner="random")
-        full, _ = query_step(audit_cfg, state, catch_all, jnp.asarray(alive),
-                             jax.random.key(100 + r))
+        audit_db = AerialDB(dataclasses.replace(cfg, planner="random"),
+                            db.state, db.alive, jax.random.key(100 + r))
+        full, _ = audit_db.query(catch_all)
         assert not bool(np.asarray(full.overflow)[0]), \
             "shard budget overflow — raise max_shards_per_query"
         completeness = int(full.count[0]) / total_expected

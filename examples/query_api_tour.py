@@ -46,6 +46,17 @@ def main():
         res, _ = db.query(q)
         show(f'.agg("{op}", channel=2)', res, q.spec)
 
+    # --- fused multi-channel: every channel's aggregates from ONE scan ---
+    print("\nmulti-channel (one scan of the log answers all channels):")
+    q_mc = window.agg("count", "mean", "max",
+                      channels=tuple(range(db.cfg.n_values)))
+    res, _ = db.query(q_mc)
+    view = res.view(q_mc.spec)               # count (Q,), others (Q, K)
+    for ch in range(db.cfg.n_values):
+        print(f"  channel {ch}: count={int(view['count'][0]):6d} "
+              f"mean={float(view['mean'][0, ch]):8.2f} "
+              f"max={float(view['max'][0, ch]):8.2f}")
+
     # --- AND combinator: tuples must satisfy every clause ---
     print("\ncombinators:")
     left = Query().bbox(12.90, 13.00, 77.50, 77.65)

@@ -1,15 +1,12 @@
-"""Quickstart: stand up an AerialDB store, ingest a drone fleet, query it.
+"""Quickstart: stand up an AerialDB deployment, ingest a drone fleet, query
+it — all through the unified ``repro.api`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.datastore import (StoreConfig, init_store, insert_step,
-                                  make_pred, query_step)
-from repro.core.placement import ShardMeta
+from repro.api import AerialDB, Query
 from repro.data.synthetic import CityConfig, DroneFleet, make_sites
 
 
@@ -17,38 +14,36 @@ def main():
     # --- deployment: 12 edge servers over the city (paper §3.3) ---
     n_edges = 12
     sites = make_sites(n_edges, CityConfig(), seed=3)
-    cfg = StoreConfig(n_edges=n_edges, sites=tuple(map(tuple, sites.tolist())),
-                      tuple_capacity=1 << 14, index_capacity=2048,
-                      max_shards_per_query=64, records_per_shard=30)
-    state = init_store(cfg)
-    alive = jnp.ones(n_edges, bool)
+    db = AerialDB.open(n_edges=n_edges,
+                       sites=tuple(map(tuple, sites.tolist())),
+                       tuple_capacity=1 << 14, index_capacity=2048,
+                       max_shards_per_query=64, records_per_shard=30)
 
-    # --- ingest: 16 drones x 4 collection rounds (paper §3.4) ---
+    # --- ingest: 16 drones x 4 collection rounds, one fused dispatch ---
     fleet = DroneFleet(16, records_per_shard=30)
-    for r in range(4):
-        payload, meta = fleet.next_shards()
-        meta = ShardMeta(*[jnp.asarray(x) for x in meta])
-        state, info = insert_step(cfg, state, jnp.asarray(payload), meta, alive)
-    per_edge = np.asarray(state.tup_count)
+    payloads, metas = fleet.next_rounds(4)
+    db.ingest_rounds(payloads, metas)
+    per_edge = np.asarray(db.state.tup_count)
     print(f"ingested {per_edge.sum()} tuple replicas "
           f"(balance: min={per_edge.min()} max={per_edge.max()})")
 
-    # --- query: spatio-temporal AND predicate (paper §3.5, Fig 6) ---
-    pred = make_pred(q=2,
-                     lat0=[12.90, 12.85], lat1=[13.00, 13.10],
-                     lon0=[77.50, 77.45], lon1=[77.60, 77.75],
-                     t0=[0.0, 0.0], t1=[300.0, 1e9],
-                     has_spatial=True, has_temporal=True, is_and=True)
-    result, info = query_step(cfg, state, pred, alive, jax.random.key(0))
+    # --- query: spatio-temporal AND predicates, one compiled batch ---
+    pred, spec = Query.batch(
+        Query().bbox(12.90, 13.00, 77.50, 77.60).time(0.0, 300.0)
+               .agg("count", "mean"),
+        Query().bbox(12.85, 13.10, 77.45, 77.75).time(0.0, 1e9)
+               .agg("count", "mean"))
+    result, info = db.query((pred, spec))
     for i in range(2):
         print(f"query {i}: count={int(result.count[i])} "
-              f"mean_v={float(result.vsum[i]) / max(int(result.count[i]), 1):.2f} "
+              f"mean_v={float(result.vmean[i]):.2f} "
               f"edges_queried={int(info.subquery_edges[i])}")
 
     # --- resilience: kill two edges, same query, exact answer (§3.5.3) ---
-    alive2 = alive.at[jnp.asarray([2, 7])].set(False)
-    result2, _ = query_step(cfg, state, pred, alive2, jax.random.key(1))
+    db.fail_edges(2, 7)
+    result2, _ = db.query((pred, spec))
     assert int(result2.count[1]) == int(result.count[1]), "lost data!"
+    db.recover_edges(2, 7)
     print("2 edges down -> identical results (3-replica guarantee holds)")
 
 

@@ -6,6 +6,7 @@ one temporal range, and one shard-id clause (paper Fig 6, §3.5.1). ``Query``
 is the ergonomic, *validating* front door to that shape:
 
     Query().bbox(12.9, 13.0, 77.5, 77.6).time(0, 600).agg("mean", channel=2)
+    Query().time(0, 600).agg("mean", channels=(0, 2))   # K channels, ONE scan
     Query().bbox(...) | Query().time(...)          # OR combinator
     Query().shard(3, 1) & Query().time(0, 300)     # AND combinator
     Query.batch(q1, q2, q3)                        # one batched QueryPred
@@ -110,19 +111,34 @@ class Query:
 
     # -- aggregation --------------------------------------------------------
 
-    def agg(self, *ops: str, channel: int = 0) -> "Query":
-        """Request aggregates of one sensor channel: any of
-        {"count", "sum", "min", "max", "mean"}; calls accumulate ops but must
-        name a single channel (the channel is compiled into the scan)."""
-        if self.spec is not None and self.spec.channel != channel:
+    def agg(self, *ops: str, channel: Optional[int] = None,
+            channels: Optional[Tuple[int, ...]] = None) -> "Query":
+        """Request aggregates of one or more sensor channels: any of
+        {"count", "sum", "min", "max", "mean"}. Pass ``channel=`` for the
+        single-channel case or ``channels=`` for a static tuple aggregated
+        in the SAME single scan (multi-channel results are (Q, K)-shaped,
+        one column per channel). Calls accumulate ops, but the channel set
+        is fixed once chosen — it is compiled into the scan."""
+        if channel is not None and channels is not None:
             raise ValueError(
-                f"query already aggregates channel {self.spec.channel}; one "
-                f"channel per query (got channel={channel}). Issue a second "
-                "query for the other channel.")
+                "pass channel= (single) OR channels= (batched), not both.")
+        if isinstance(channels, int):     # bare int normalizes like AggSpec
+            channels = (channels,)
+        new_channels = (tuple(channels) if channels is not None
+                        else (channel,) if channel is not None else None)
+        if (self.spec is not None and new_channels is not None
+                and self.spec.channels != new_channels):
+            raise ValueError(
+                f"query already aggregates channels {self.spec.channels}; "
+                f"the channel set is fixed per query (got {new_channels}). "
+                "Request every channel in one .agg(channels=...) call, or "
+                "issue a second query.")
+        if new_channels is None:
+            new_channels = self.spec.channels if self.spec is not None else (0,)
         prev = self.spec.ops if self.spec is not None else ()
         merged = prev + tuple(op for op in ops if op not in prev)
         return dataclasses.replace(
-            self, spec=AggSpec(channel=channel, ops=merged or AGG_OPS))
+            self, spec=AggSpec(channels=new_channels, ops=merged or AGG_OPS))
 
     # -- combinators --------------------------------------------------------
 

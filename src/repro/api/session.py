@@ -162,7 +162,10 @@ class AerialDB:
           q:    a ``Query`` builder, a batched ``QueryPred``
                 (``Query.batch`` / ``make_pred``), or a
                 ``(QueryPred, AggSpec)`` pair.
-          agg:  AggSpec override for a raw QueryPred (channel + ops).
+          agg:  AggSpec override for a raw QueryPred (channel(s) + ops). A
+                multi-channel spec (``AggSpec(channels=(0, 2))``) aggregates
+                every listed channel in the SAME single scan of the log and
+                widens the value aggregates to (Q, K).
           key:  explicit planner PRNG key; None draws from the session key
                 (each query consumes a fresh split).
 

@@ -20,12 +20,27 @@ retention-watermark all-gather and the candidate-shard merge).
 wraps the same bodies in ``shard_map`` so the per-edge tuple scan runs
 device-local and only the final (Q, E) combine crosses devices.
 
-  tup_f:   (E, CAP_T, 3+V) float32   t, lat, lon, v0..  — the per-edge tuple log
-  tup_sid: (E, CAP_T, 2)   int32     owning shard id (hi, lo)
+  tup_f:   (E, 3+V, CAP_L) float32   COLUMN-MAJOR tuple log: row r of edge e
+                                     is field r (t, lat, lon, v0..) over all
+                                     log slots — the tuple axis is LAST
+  tup_sid: (E, 2, CAP_L)   int32     owning shard id rows (hi, lo)
   tup_count: (E,)          int32     total tuples EVER written (monotonic)
   tup_pos: (E,)            int32     ring write cursor in [0, capacity)
   tup_overwritten, tup_dropped: (E,) retention / loss telemetry
   index:   IndexState                sliced distributed index (index.py)
+
+Column-major log layout (the scan-engine contract): the tuple axis is the
+*minor* (lane) dimension, sized ``CAP_L = StoreConfig.padded_capacity`` — the
+logical ``tuple_capacity`` rounded up to a 128-lane multiple at
+``init_store``. Queries therefore stream each field as unit-stride
+128-aligned vector loads with **no relayout and no padding at query time**;
+the cost moved to the insert path, whose scatter writes one *column* (all
+3+V+2 field rows of a slot) per tuple instead of one contiguous row — a
+strided write of a few words per tuple, amortized far below the one-hot
+dispatch that surrounds it. Lane-padding slots in
+``[tuple_capacity, padded_capacity)`` are never written and never admitted:
+ring positions are taken modulo the LOGICAL capacity, and both scan engines
+clamp validity to ``slot < min(tup_count, tuple_capacity)``.
 
 Retention semantics (sustained ingest, paper §3.4: drones offload 60-sample
 shards every 5 minutes *indefinitely*): the tuple log is a **ring buffer** —
@@ -137,6 +152,14 @@ class StoreConfig:
     def tuple_width(self) -> int:
         return 3 + self.n_values
 
+    @property
+    def padded_capacity(self) -> int:
+        """Stored (lane-aligned) size of the tuple axis: ``tuple_capacity``
+        rounded up to a 128 multiple, so the column-major log's minor dim is
+        always vector-lane aligned. Slots >= ``tuple_capacity`` are dead —
+        never written, never scanned."""
+        return -(-self.tuple_capacity // 128) * 128
+
     def sites_array(self) -> jnp.ndarray:
         return jnp.asarray(np.asarray(self.sites, np.float32).reshape(self.n_edges, 2))
 
@@ -163,32 +186,45 @@ _COUNT_SAT = (1 << 31) - (1 << 26)
 AGG_OPS = ("count", "sum", "min", "max", "mean")
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, init=False)
 class AggSpec:
-    """Static aggregation spec: which sensor channel to aggregate and which
-    aggregates the caller asked for (paper §4.5's range-*aggregation*
+    """Static aggregation spec: which sensor channel(s) to aggregate and
+    which aggregates the caller asked for (paper §4.5's range-*aggregation*
     workloads over arbitrary channels).
 
     The spec is static (hashable — a jit static argument / shard_map cache
-    key): the channel selects the value column ``3 + channel`` all the way
-    down into both scan engines, so only the requested channel is ever
-    streamed through the aggregation registers. The per-edge scan always
-    produces the full fused (count, sum, min, max) set for that channel — the
-    marginal cost of the extra accumulators is nil next to the predicate
-    evaluation — and ``mean`` is derived after the final (Q, E) combine
-    (``finalize_query``), which keeps sum/count the only cross-device
-    reductions. ``ops`` records the caller's projection; apply it with
-    ``QueryResult.view``. Only ``channel`` is a compile-time cache key —
-    specs differing in ``ops`` alone share one compiled scan.
+    key): ``channels`` selects the value rows ``3 + channel`` of the
+    column-major log all the way down into both scan engines, which evaluate
+    the predicate mask ONCE and accumulate every requested channel's fused
+    (count, sum, min, max) set in the same single pass over the log — a
+    K-channel spec costs one scan, not K (the marginal accumulators are nil
+    next to the predicate evaluation). ``mean`` is derived after the final
+    (Q, E) combine (``finalize_query``), which keeps sum/count the only
+    cross-device reductions. ``ops`` records the caller's projection; apply
+    it with ``QueryResult.view``. Only ``channels`` is a compile-time cache
+    key — specs differing in ``ops`` alone share one compiled scan.
+
+    Construct with either ``channel=`` (one channel, the common case) or
+    ``channels=`` (a static tuple batched into one scan); a single-channel
+    spec produces (Q,)-shaped aggregates, a multi-channel spec (Q, K).
     """
-    channel: int = 0
+    channels: Tuple[int, ...] = (0,)
     ops: Tuple[str, ...] = AGG_OPS
 
-    def __post_init__(self):
-        if isinstance(self.ops, str):
-            object.__setattr__(self, "ops", (self.ops,))
-        else:
-            object.__setattr__(self, "ops", tuple(self.ops))
+    def __init__(self, channel: Optional[int] = None,
+                 ops: Tuple[str, ...] = AGG_OPS,
+                 channels: Optional[Tuple[int, ...]] = None):
+        if channel is not None and channels is not None:
+            raise ValueError(
+                "pass channel= (single) OR channels= (batched), not both.")
+        if channels is None:
+            channels = (0 if channel is None else channel,)
+        if isinstance(channels, int):
+            channels = (channels,)
+        channels = tuple(int(c) for c in channels)
+        ops = (ops,) if isinstance(ops, str) else tuple(ops)
+        object.__setattr__(self, "channels", channels)
+        object.__setattr__(self, "ops", ops)
         unknown = [op for op in self.ops if op not in AGG_OPS]
         if unknown:
             raise ValueError(
@@ -196,30 +232,55 @@ class AggSpec:
         if not self.ops:
             raise ValueError("AggSpec.ops is empty: request at least one of "
                              f"{AGG_OPS}.")
-        if self.channel < 0:
-            raise ValueError(f"channel={self.channel} must be >= 0.")
+        if not self.channels:
+            raise ValueError("AggSpec.channels is empty: select at least one "
+                             "sensor channel.")
+        if len(set(self.channels)) != len(self.channels):
+            raise ValueError(
+                f"channels={self.channels} contains duplicates: each channel "
+                "is aggregated once per scan; deduplicate the request.")
+        for c in self.channels:
+            if c < 0:
+                raise ValueError(f"channel={c} must be >= 0.")
+
+    @property
+    def channel(self) -> int:
+        """First (for single-channel specs: the only) selected channel."""
+        return self.channels[0]
+
+    @property
+    def n_channels(self) -> int:
+        return len(self.channels)
 
     def validate_for(self, cfg: "StoreConfig") -> "AggSpec":
-        if self.channel >= cfg.n_values:
-            raise ValueError(
-                f"channel={self.channel} out of range: this deployment "
-                f"stores n_values={cfg.n_values} sensor channels per tuple "
-                f"(valid channels 0..{cfg.n_values - 1}).")
+        for c in self.channels:
+            if c >= cfg.n_values:
+                raise ValueError(
+                    f"channel={c} out of range: this deployment stores "
+                    f"n_values={cfg.n_values} sensor channels per tuple "
+                    f"(valid channels 0..{cfg.n_values - 1}).")
         return self
 
 
 class QueryResult(NamedTuple):
     """Fixed-shape query answer: aggregates over matching tuples of the
-    ``AggSpec``-selected sensor channel (default: channel 0)."""
+    ``AggSpec``-selected sensor channel(s).
+
+    Value aggregates are (Q,) float32 for a single-channel spec and (Q, K)
+    for a K-channel spec (one column per requested channel, in spec order);
+    ``count`` is channel-independent and always (Q,). All value aggregates
+    (min/max/mean) are NaN for queries that matched nothing."""
     count: jnp.ndarray    # (Q,) int32
-    vsum: jnp.ndarray     # (Q,) float32 — sum of the selected channel
-    vmin: jnp.ndarray     # (Q,) float32 (+inf when count==0)
-    vmax: jnp.ndarray     # (Q,) float32 (-inf when count==0)
+    vsum: jnp.ndarray     # (Q[, K]) float32 — sum of the selected channel(s)
+    vmin: jnp.ndarray     # (Q[, K]) float32 (NaN when count==0)
+    vmax: jnp.ndarray     # (Q[, K]) float32 (NaN when count==0)
     overflow: jnp.ndarray # (Q,) bool — matched shards exceeded the static budget
-    vmean: jnp.ndarray = None  # (Q,) float32 — vsum/count (NaN when count==0)
+    vmean: jnp.ndarray = None  # (Q[, K]) float32 — vsum/count (NaN when count==0)
 
     def view(self, agg: AggSpec) -> dict:
-        """Project the aggregates the spec asked for: op name -> (Q,) array."""
+        """Project the aggregates the spec asked for: op name -> array —
+        ``count`` is (Q,); value ops are (Q,) for a single-channel spec and
+        (Q, K) for a K-channel spec (one column per channel, spec order)."""
         full = {"count": self.count, "sum": self.vsum, "min": self.vmin,
                 "max": self.vmax, "mean": self.vmean}
         return {op: full[op] for op in agg.ops}
@@ -300,8 +361,8 @@ def init_store(cfg: StoreConfig) -> StoreState:
     e = cfg.n_edges
     return StoreState(
         index=init_index(e, cfg.index_capacity),
-        tup_f=jnp.zeros((e, cfg.tuple_capacity, cfg.tuple_width), jnp.float32),
-        tup_sid=jnp.full((e, cfg.tuple_capacity, 2), -1, jnp.int32),
+        tup_f=jnp.zeros((e, cfg.tuple_width, cfg.padded_capacity), jnp.float32),
+        tup_sid=jnp.full((e, 2, cfg.padded_capacity), -1, jnp.int32),
         tup_count=jnp.zeros((e,), jnp.int32),
         tup_pos=jnp.zeros((e,), jnp.int32),
         tup_overwritten=jnp.zeros((e,), jnp.int32),
@@ -364,7 +425,9 @@ def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     start = state.tup_pos[None, :] + rank * r                    # (B, E_loc)
     pos = start[..., None] + jnp.arange(r, dtype=jnp.int32)      # (B, E_loc, R)
     ok = dm[..., None]
-    pp = jnp.where(ok, pos % cap, cap)                           # ring slot; sentinel drops
+    # Ring slot modulo the LOGICAL capacity (lane-padding slots stay dead);
+    # the drop sentinel must be out of range of the PADDED tuple axis.
+    pp = jnp.where(ok, pos % cap, cfg.padded_capacity)
     ee = jnp.broadcast_to(
         jnp.arange(e_loc, dtype=jnp.int32)[None, :, None], (b, e_loc, r))
 
@@ -373,8 +436,12 @@ def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
         jnp.stack([meta.sid_hi, meta.sid_lo], axis=-1)[:, None, None, :],
         (b, e_loc, r, 2))
 
-    tup_f = state.tup_f.at[ee, pp].set(pay, mode="drop")
-    tup_sid = state.tup_sid.at[ee, pp].set(sid, mode="drop")
+    # Column-major write pattern: one scatter per tuple writes its whole
+    # field COLUMN tup_f[e, :, slot] (the slice between the advanced indices
+    # spans the field rows), so the lane-aligned log never needs a
+    # query-time relayout.
+    tup_f = state.tup_f.at[ee, :, pp].set(pay, mode="drop")
+    tup_sid = state.tup_sid.at[ee, :, pp].set(sid, mode="drop")
     n_in = jnp.sum(dm, axis=0) * r                               # (E_loc,)
     tup_pos = ((state.tup_pos + n_in) % cap).astype(jnp.int32)
     tup_count = jnp.minimum(state.tup_count + n_in,
@@ -398,9 +465,10 @@ def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     do_sweep = steps % cfg.retention_every == 0
 
     def _local_wm(_):
-        retained = (jnp.arange(cap, dtype=jnp.int32)[None, :]
-                    < valid_after[:, None])                      # (E_loc, CAP)
-        t_oldest = jnp.min(jnp.where(retained, tup_f[..., 0], jnp.inf), axis=1)
+        retained = (jnp.arange(cfg.padded_capacity, dtype=jnp.int32)[None, :]
+                    < valid_after[:, None])                      # (E_loc, CAP_L)
+        t_oldest = jnp.min(jnp.where(retained, tup_f[:, 0, :], jnp.inf),
+                           axis=1)                               # t row
         return jnp.where(tup_count > cap, t_oldest,
                          -jnp.inf).astype(jnp.float32)           # (E_loc,)
 
@@ -546,30 +614,44 @@ def _lookup_sets(cfg: StoreConfig, pred: QueryPred, sites: jnp.ndarray,
 
 def scan_engine(tup_f, tup_sid, tup_count, pred: QueryPred, sublists,
                 sublist_len, use_kernel: bool = False,
-                interpret: Optional[bool] = None, channel: int = 0):
+                interpret: Optional[bool] = None,
+                channels: Tuple[int, ...] = (0,),
+                valid_c: Optional[int] = None):
     """Per-edge predicate scan (the InfluxDB role). Evaluates each query's
     predicate + shard OR-list against the edge-local retained window
-    (``slot < min(tup_count, capacity)`` — ring-buffer validity).
+    (``slot < min(tup_count, valid_c)`` — ring-buffer validity over the
+    logical capacity; the stored tuple axis may be lane-padded above it).
+
+    Single pass: the whole query batch and every requested channel are
+    answered in ONE sweep over the column-major log — the Pallas kernel
+    tiles queries so each resident tuple tile serves a ``block_q``-query
+    tile, and both engines fuse all K channels' aggregates behind one
+    predicate mask.
 
     Args:
+      tup_f/tup_sid: column-major (E, 3+V, C) / (E, 2, C) — the native
+                   StoreState layout, streamed as-is (no relayout).
       sublists:    (Q, E, L, 2) int32 shard ids assigned to each (query, edge).
       sublist_len: (Q, E) int32 — #valid entries in each OR-list.
       use_kernel:  dispatch to the Pallas TPU kernel instead of the jnp ref.
       interpret:   force Pallas interpret mode; None = auto (compiled on TPU,
                    interpreted elsewhere).
-      channel:     static sensor channel to aggregate (``AggSpec.channel``);
-                   value column ``3 + channel`` in both engines.
+      channels:    static tuple of sensor channels to aggregate
+                   (``AggSpec.channels``); value rows ``3 + channel``.
+      valid_c:     logical ring capacity (``StoreConfig.tuple_capacity``);
+                   None = the stored C (unpadded input).
 
-    Returns (count, vsum, vmin, vmax): each (Q, E).
+    Returns (count, vsum, vmin, vmax): count (Q, E) int32; vsum/vmin/vmax
+    (Q, K, E) float32 per-channel partials.
     """
     if use_kernel:
         from repro.kernels.st_scan import ops as st_ops
         return st_ops.st_scan(tup_f, tup_sid, tup_count, pred, sublists,
                               sublist_len, interpret=interpret,
-                              channel=channel)
+                              channels=channels, valid_c=valid_c)
     from repro.kernels.st_scan import ref as st_ref
     return st_ref.st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists,
-                              sublist_len, channel=channel)
+                              sublist_len, channels=channels, valid_c=valid_c)
 
 
 def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
@@ -589,9 +671,11 @@ def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
     ``index.dedup_matched`` (exactly the single-device result — see there).
 
     Returns (partials, sublist_len, (lookup_mask, broadcast, overflow,
-    shards_matched)): ``partials`` are the (Q, E_local) per-edge aggregates,
-    ``sublist_len`` is (Q, E_local); the rest is replicated metadata. Feed the
-    pieces (with per-edge arrays concatenated back to full E) to
+    shards_matched)): ``partials`` are the per-edge aggregates — (Q, E_local)
+    count plus (Q, K, E_local) per-channel value aggregates for the
+    ``agg.channels`` tuple, all produced by ONE scan of the local log;
+    ``sublist_len`` is (Q, E_local); the rest is replicated metadata. Feed
+    the pieces (with per-edge arrays concatenated back to full E) to
     ``finalize_query`` for the final combine.
     """
     q = pred.lat0.shape[0]
@@ -634,28 +718,44 @@ def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
 
     partials = scan_engine(state.tup_f, state.tup_sid, state.tup_count, pred,
                            sublists, sublist_len, use_kernel, interpret,
-                           channel=agg.channel)
+                           channels=agg.channels, valid_c=cfg.tuple_capacity)
     return partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched)
 
 
 def finalize_query(partials, sublist_len, lookup_mask, broadcast, overflow,
                    shards_matched):
-    """Final (Q, E) -> (Q,) combine shared by the 1-device and sharded paths
-    (under the federated runtime, this is the only tuple-volume-independent
-    reduction crossing devices). ``partials`` are full-E per-edge aggregates.
-    ``mean`` is derived here from the combined sum/count, so it adds no
-    cross-device reduction of its own."""
+    """Final (Q, K, E) -> (Q[, K]) combine shared by the 1-device and sharded
+    paths (under the federated runtime, this is the only
+    tuple-volume-independent reduction crossing devices). ``partials`` are
+    full-E per-edge aggregates: channel-independent (Q, E) count plus
+    per-channel (Q, K, E) value aggregates; single-channel specs (K == 1)
+    squeeze to the classic (Q,) result shapes. ``mean`` is derived here from
+    the combined sum/count, so it adds no cross-device reduction of its own.
+
+    Zero-match queries: the scan's +inf/-inf min/max accumulator sentinels
+    (and the meaningless mean) are masked to NaN — they must never leak into
+    ``QueryResult`` as if they were data.
+    """
     count, vsum, vmin, vmax = partials
-    total = jnp.sum(count, axis=-1).astype(jnp.int32)
-    vsum_total = jnp.sum(vsum, axis=-1)
+    total = jnp.sum(count, axis=-1).astype(jnp.int32)            # (Q,)
+    vsum_total = jnp.sum(vsum, axis=-1)                          # (Q, K)
+    vmin_total = jnp.min(vmin, axis=-1)
+    vmax_total = jnp.max(vmax, axis=-1)
+    some = (total > 0)[:, None]                                  # (Q, 1)
+    vmin_total = jnp.where(some, vmin_total, jnp.nan)
+    vmax_total = jnp.where(some, vmax_total, jnp.nan)
+    vmean = jnp.where(some, vsum_total / jnp.maximum(total, 1)[:, None],
+                      jnp.nan)
+    if vsum_total.shape[-1] == 1:    # single-channel spec: classic (Q,) shape
+        vsum_total, vmin_total, vmax_total, vmean = (
+            a[:, 0] for a in (vsum_total, vmin_total, vmax_total, vmean))
     result = QueryResult(
         count=total,
         vsum=vsum_total,
-        vmin=jnp.min(vmin, axis=-1),
-        vmax=jnp.max(vmax, axis=-1),
+        vmin=vmin_total,
+        vmax=vmax_total,
         overflow=overflow,
-        vmean=jnp.where(total > 0,
-                        vsum_total / jnp.maximum(total, 1), jnp.nan),
+        vmean=vmean,
     )
     info = QueryInfo(
         lookup_edges=jnp.sum(lookup_mask, axis=-1),
@@ -672,12 +772,12 @@ def _query_step_jit(cfg: StoreConfig, state: StoreState, pred: QueryPred,
                     alive: jnp.ndarray, key: jax.Array,
                     use_kernel: bool = False,
                     interpret: Optional[bool] = None,
-                    channel: int = 0):
+                    channels: Tuple[int, ...] = (0,)):
     edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
     partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched) = \
         query_local(cfg, state, pred, alive, key, edge_ids,
                     use_kernel=use_kernel, interpret=interpret,
-                    agg=AggSpec(channel=channel))
+                    agg=AggSpec(channels=channels))
     return finalize_query(partials, sublist_len, lookup_mask, broadcast, ovf,
                           shards_matched)
 
@@ -686,11 +786,11 @@ def _query(cfg: StoreConfig, state: StoreState, pred: QueryPred,
            alive: jnp.ndarray, key: jax.Array, use_kernel: bool = False,
            interpret: Optional[bool] = None, agg: AggSpec = AggSpec()):
     """1-device query body shared by the ``AerialDB`` facade and the
-    deprecated ``query_step`` shim. Only ``agg.channel`` reaches the jit
+    deprecated ``query_step`` shim. Only ``agg.channels`` reaches the jit
     cache key — varying the requested ops never recompiles."""
     agg.validate_for(cfg)
     return _query_step_jit(cfg, state, pred, alive, key, use_kernel,
-                           interpret, agg.channel)
+                           interpret, agg.channels)
 
 
 def query_step(cfg: StoreConfig, state: StoreState, pred: QueryPred,

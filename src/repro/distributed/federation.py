@@ -205,7 +205,7 @@ def ingest_rounds(cfg: StoreConfig, state: StoreState, payloads, metas,
 
 @lru_cache(maxsize=None)
 def _query_fn(cfg: StoreConfig, mesh: Mesh, use_kernel: bool,
-              interpret: Optional[bool], channel: int):
+              interpret: Optional[bool], channels: tuple):
     state_specs = store_partition_specs()
     s = cfg.max_shards_per_query
 
@@ -215,8 +215,13 @@ def _query_fn(cfg: StoreConfig, mesh: Mesh, use_kernel: bool,
             cfg, state, pred, alive, key, edge_ids,
             combine_matched=partial(_merge_matched, max_shards=s),
             use_kernel=use_kernel, interpret=interpret,
-            agg=AggSpec(channel=channel))
+            agg=AggSpec(channels=channels))
         return partials, sublist_len, meta_info
+
+    # Partials: channel-independent (Q, E) count + per-channel (Q, K, E)
+    # value aggregates — the edge axis stays last, so the final combine's
+    # reduction axis is the mesh axis in both cases.
+    partial_specs = (P(None, EDGE_AXIS),) + (P(None, None, EDGE_AXIS),) * 3
 
     def outer(state, pred, alive, key_data):
         edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
@@ -224,7 +229,7 @@ def _query_fn(cfg: StoreConfig, mesh: Mesh, use_kernel: bool,
             body, mesh=mesh,
             in_specs=(state_specs, _replicated_like(pred), P(), P(),
                       P(EDGE_AXIS)),
-            out_specs=((P(None, EDGE_AXIS),) * 4, P(None, EDGE_AXIS),
+            out_specs=(partial_specs, P(None, EDGE_AXIS),
                        (P(), P(), P(), P())),
             check_rep=False)
         partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched) = \
@@ -244,13 +249,14 @@ def federated_query_step(cfg: StoreConfig, state: StoreState, pred,
                          agg: AggSpec = AggSpec()):
     """``query_step`` over an edge mesh: device-local index match + tuple
     scan, metadata-scale candidate merge, replicated planning, and a final
-    cross-device (Q, E) combine. ``agg`` (static) selects the sensor channel
-    and aggregate set; the device-local scan produces per-edge partials for
-    that channel and ``finalize_query``'s combine (including the derived
-    mean) stays the only cross-device reduction. Only ``agg.channel`` keys
-    the compiled-function cache — varying the ops projection is free.
-    Returns (QueryResult, QueryInfo)."""
+    cross-device (Q, K, E) combine. ``agg`` (static) selects the sensor
+    channel tuple and aggregate set; the device-local scan produces
+    per-channel per-edge partials for every requested channel in ONE pass
+    over the local log, and ``finalize_query``'s combine (including the
+    derived mean) stays the only cross-device reduction. Only
+    ``agg.channels`` keys the compiled-function cache — varying the ops
+    projection is free. Returns (QueryResult, QueryInfo)."""
     check_edge_mesh(cfg, mesh)
     agg.validate_for(cfg)
-    return _query_fn(cfg, mesh, use_kernel, interpret, agg.channel)(
+    return _query_fn(cfg, mesh, use_kernel, interpret, agg.channels)(
         state, pred, alive, jax.random.key_data(key))

@@ -40,7 +40,11 @@ def store_partition_specs():
     """StoreState-shaped PartitionSpec tree of the sharded-state layout
     contract: every per-edge array (leading logical-E dim, including the
     nested IndexState) is partitioned over the mesh "edge" axis; the scalar
-    step counter replicates. Dims beyond the leading one replicate."""
+    step counter replicates. Dims beyond the leading one replicate — in
+    particular the column-major tuple log's (field-row, lane-padded tuple)
+    trailing dims live whole on each edge's device, so the contract is
+    layout-agnostic: each device holds its edges' complete logs whichever
+    axis is minor."""
     from repro.core.datastore import StoreState
     from repro.core.index import IndexState
     edge = P(EDGE_AXIS)

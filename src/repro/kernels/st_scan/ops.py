@@ -1,7 +1,12 @@
 """Jit'd wrapper for the st_scan Pallas kernel.
 
-Accepts the datastore's row-major layout and QueryPred struct, performs the
-TPU-friendly column-major relayout + padding, and invokes the kernel.
+Accepts the datastore's NATIVE column-major layout (``(E, 3+V, C)`` tuple
+log, ``(E, 2, C)`` shard ids) and the QueryPred struct. The hot path
+performs **no relayout**: the only data movement before the kernel is
+constant padding — the tuple axis to a ``block_c`` multiple (a no-op for
+lane-aligned store capacities), the query axis to a ``block_q`` multiple
+(padding queries carry ``sublist_len == 0`` so they match nothing and are
+sliced off the outputs), and the OR-list axis to a lane multiple.
 ``interpret=None`` (the default) auto-selects: compiled execution on TPU,
 interpret mode elsewhere (CPU tests / this container).
 """
@@ -9,11 +14,12 @@ interpret mode elsewhere (CPU tests / this container).
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.st_scan.ref import check_channels
 from repro.kernels.st_scan.st_scan import st_scan_kernel
 
 
@@ -31,40 +37,62 @@ def pack_pred(pred):
     return pred_f, pred_i.astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("block_c", "interpret", "channel"))
+@partial(jax.jit, static_argnames=("block_c", "block_q", "interpret",
+                                   "channels", "valid_c"))
 def st_scan(tup_f, tup_sid, tup_count, pred, sublists, sublist_len,
-            block_c: int = 512, interpret: Optional[bool] = None,
-            channel: int = 0):
+            block_c: int = 512, block_q: int = 8,
+            interpret: Optional[bool] = None,
+            channels: Tuple[int, ...] = (0,),
+            valid_c: Optional[int] = None):
     """Drop-in replacement for ref.st_scan_ref backed by the Pallas kernel.
 
+    ``tup_f``/``tup_sid`` are column-major ``(E, 3+V, C)`` / ``(E, 2, C)``
+    (the native StoreState layout — nothing is transposed here).
     ``tup_count`` is the monotonic total-written counter; the valid window is
-    ``min(count, C)`` (ring-buffer retention). The unpadded C is forwarded to
-    the kernel as ``valid_c`` so its per-lane bound never admits the lanes
-    this wrapper pads on. ``channel`` (static) selects the sensor channel to
-    aggregate — value column ``3 + channel`` of the row-major log.
+    ``min(count, valid_c)`` where ``valid_c`` is the logical ring capacity
+    (None = C) — forwarded to the kernel so neither store lane-padding nor
+    this wrapper's block padding is ever admitted. ``channels`` (static)
+    selects the sensor channels to aggregate — value rows ``3 + channel`` of
+    the log, all fused into one sweep.
+
+    Returns (count, vsum, vmin, vmax): count (Q, E) int32; vsum/vmin/vmax
+    (Q, K, E) float32 with K = len(channels).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    e, c, w = tup_f.shape
-    if not 0 <= channel < w - 3:
-        raise ValueError(
-            f"channel={channel} is not a valid sensor channel: the tuple log "
-            f"holds {w - 3} channels (value columns 3..{w - 1}; negative "
-            "channels would alias the t/lat/lon metadata columns).")
+    e, w, c = tup_f.shape
+    value_cols = check_channels(channels, w)
+    if valid_c is None:
+        valid_c = c
+    block_c = min(block_c, max(c, 1))
     pad_c = (-c) % block_c
-    tupf_t = jnp.swapaxes(tup_f, 1, 2)           # (E, W, C): tuples on lanes
-    sid_t = jnp.swapaxes(tup_sid, 1, 2)          # (E, 2, C)
     if pad_c:
-        tupf_t = jnp.pad(tupf_t, ((0, 0), (0, 0), (0, pad_c)))
-        sid_t = jnp.pad(sid_t, ((0, 0), (0, 0), (0, pad_c)), constant_values=-1)
+        tup_f = jnp.pad(tup_f, ((0, 0), (0, 0), (0, pad_c)))
+        tup_sid = jnp.pad(tup_sid, ((0, 0), (0, 0), (0, pad_c)),
+                          constant_values=-1)
+    # Pad the query batch to a tile multiple: padding queries are inert
+    # (sublist_len == 0 selects no edge) and sliced off below. block_q is
+    # NOT shrunk for small batches — a lone query runs as a degenerate
+    # block_q-wide tile (same HBM tuple traffic, one compiled variant).
+    q = pred.lat0.shape[0]
+    pad_q = (-q) % block_q
+    pred_f, pred_i = pack_pred(pred)
+    if pad_q:
+        pred_f = jnp.pad(pred_f, ((0, pad_q), (0, 0)))
+        pred_i = jnp.pad(pred_i, ((0, pad_q), (0, 0)))
+        sublists = jnp.pad(sublists, ((0, pad_q), (0, 0), (0, 0), (0, 0)),
+                           constant_values=-(1 << 30))
+        sublist_len = jnp.pad(sublist_len, ((0, pad_q), (0, 0)))
     # Pad the OR-list length to a lane multiple.
     l = sublists.shape[2]
     pad_l = (-l) % 128
     if pad_l:
         sublists = jnp.pad(sublists, ((0, 0), (0, 0), (0, pad_l), (0, 0)),
                            constant_values=-(1 << 30))
-    pred_f, pred_i = pack_pred(pred)
-    return st_scan_kernel(tupf_t, sid_t, tup_count[:, None], pred_f, pred_i,
-                          sublists, sublist_len, block_c=block_c,
-                          interpret=interpret, valid_c=c,
-                          value_col=3 + channel)
+    count, vsum, vmin, vmax = st_scan_kernel(
+        tup_f, tup_sid, tup_count[:, None], pred_f, pred_i, sublists,
+        sublist_len, block_c=block_c, block_q=block_q, interpret=interpret,
+        valid_c=min(valid_c, c), value_cols=value_cols)
+    if pad_q:
+        count, vsum, vmin, vmax = (count[:q], vsum[:q], vmin[:q], vmax[:q])
+    return count, vsum, vmin, vmax

@@ -5,20 +5,59 @@ Semantics (the per-edge "InfluxDB role", paper §3.5.2): for every
 satisfy the query's spatio-temporal/sid predicate AND belong to a shard in
 the sub-query's shard OR-list.
 
+Layout: the tuple log arrives **column-major** — ``(E, 3+V, C)`` with the
+tuple axis last — matching the native ``StoreState`` layout (each field is a
+contiguous (E, C) plane, so per-field slices here are views, not copies).
+``C`` may be lane-padded above the logical ring capacity; ``valid_c`` names
+the logical capacity so padding slots are never admitted.
+
 ``sublist_len[q, e]`` semantics:
     > 0  — OR-list filter with that many valid (hi, lo) entries,
     = 0  — edge not selected: contributes nothing,
     < 0  — scan-all sentinel (broadcast baseline: no shard scoping).
+
+Multi-channel aggregation: ``channels`` is a static tuple of sensor channels;
+the predicate mask is evaluated ONCE and all K channels' sum/min/max are
+accumulated in the same sweep (the fused-aggregation contract the Pallas
+kernel implements tile-wise).
 """
 
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax.numpy as jnp
 
 
+def check_channels(channels, n_cols: int) -> Tuple[int, ...]:
+    """Validate a static channel tuple against a ``3 + V``-row log; returns
+    the value-row indices (``3 + channel``). Shared by both engines."""
+    if isinstance(channels, int):
+        channels = (channels,)
+    channels = tuple(int(c) for c in channels)
+    if not channels:
+        raise ValueError("channels is empty: select at least one sensor "
+                         "channel to aggregate.")
+    if len(set(channels)) != len(channels):
+        raise ValueError(
+            f"channels={channels} contains duplicates: each channel is "
+            "aggregated once per scan; deduplicate the request.")
+    for ch in channels:
+        if not 0 <= ch < n_cols - 3:
+            raise ValueError(
+                f"channel={ch} is not a valid sensor channel: the tuple log "
+                f"holds {n_cols - 3} channels (value rows 3..{n_cols - 1}; "
+                "negative channels would alias the t/lat/lon metadata rows).")
+    return tuple(3 + ch for ch in channels)
+
+
 def tuple_pred_match(tup_f, tup_sid, pred):
-    """(Q, E, C) bool — tuple-level predicate evaluation (no shard list)."""
-    t, lat, lon = tup_f[..., 0], tup_f[..., 1], tup_f[..., 2]
+    """(Q, E, C) bool — tuple-level predicate evaluation (no shard list).
+
+    ``tup_f``/``tup_sid`` are column-major ``(E, 3+V, C)`` / ``(E, 2, C)``.
+    """
+    t, lat, lon = tup_f[:, 0, :], tup_f[:, 1, :], tup_f[:, 2, :]   # (E, C)
+    sid_hi, sid_lo = tup_sid[:, 0, :], tup_sid[:, 1, :]
 
     def bc(x):
         return x[:, None, None]
@@ -26,7 +65,7 @@ def tuple_pred_match(tup_f, tup_sid, pred):
     sp = (bc(pred.lat0) <= lat) & (lat <= bc(pred.lat1)) & \
          (bc(pred.lon0) <= lon) & (lon <= bc(pred.lon1))
     tp = (bc(pred.t0) <= t) & (t <= bc(pred.t1))
-    ip = (tup_sid[..., 0] == bc(pred.sid_hi)) & (tup_sid[..., 1] == bc(pred.sid_lo))
+    ip = (sid_hi == bc(pred.sid_hi)) & (sid_lo == bc(pred.sid_lo))
     hs, ht, hi = bc(pred.has_spatial), bc(pred.has_temporal), bc(pred.has_sid)
     m_and = (sp | ~hs) & (tp | ~ht) & (ip | ~hi)
     m_or = (sp & hs) | (tp & ht) | (ip & hi)
@@ -34,54 +73,62 @@ def tuple_pred_match(tup_f, tup_sid, pred):
 
 
 def st_scan_ref(tup_f, tup_sid, tup_count, pred, sublists, sublist_len,
-                channel: int = 0):
+                channels: Tuple[int, ...] = (0,),
+                valid_c: Optional[int] = None):
     """Oracle scan.
 
     Args:
-      tup_f:       (E, C, 3+V) float32.
-      tup_sid:     (E, C, 2) int32.
+      tup_f:       (E, 3+V, C) float32 column-major tuple log.
+      tup_sid:     (E, 2, C) int32.
       tup_count:   (E,) int32 total tuples ever written (monotonic); the log
-                   is a ring buffer, so slots < min(count, C) hold live data.
+                   is a ring buffer, so slots < min(count, valid_c) hold live
+                   data.
       pred:        QueryPred with (Q,) fields.
       sublists:    (Q, E, L, 2) int32 shard OR-lists.
       sublist_len: (Q, E) int32 (see module docstring).
-      channel:     sensor channel to aggregate — value column
-                   ``tup_f[..., 3 + channel]`` (static).
+      channels:    static tuple of sensor channels to aggregate — value rows
+                   ``3 + channel`` of the column-major log.
+      valid_c:     logical ring capacity. The stored C axis may be
+                   lane-padded above it; slots >= valid_c are never live.
+                   None = C (unpadded input).
 
     Returns:
-      (count, vsum, vmin, vmax) each (Q, E) — per-edge partial aggregates
-      of the selected value column.
+      (count, vsum, vmin, vmax): ``count`` is (Q, E) int32; ``vsum``/
+      ``vmin``/``vmax`` are (Q, K, E) float32 per-edge partial aggregates,
+      one row per requested channel (K = len(channels)).
     """
-    e, c, w = tup_f.shape
+    e, w, c = tup_f.shape
     q = sublists.shape[0]
     l = sublists.shape[2]
-    if not 0 <= channel < w - 3:
-        raise ValueError(
-            f"channel={channel} is not a valid sensor channel: the tuple log "
-            f"holds {w - 3} channels (value columns 3..{w - 1}; negative "
-            "channels would alias the t/lat/lon metadata columns).")
+    value_rows = check_channels(channels, w)
+    if valid_c is None:
+        valid_c = c
 
-    # Ring-buffer validity: every slot below min(count, capacity) is live
-    # (once the ring wraps, all slots are — count keeps growing past C).
-    n_valid = jnp.minimum(tup_count, c)
+    # Ring-buffer validity: every slot below min(count, logical capacity) is
+    # live (once the ring wraps, all logical slots are — count keeps growing
+    # past the cap); lane-padding slots in [valid_c, C) are never written.
+    n_valid = jnp.minimum(tup_count, min(valid_c, c))
     alive_t = jnp.arange(c, dtype=jnp.int32)[None, :] < n_valid[:, None]     # (E, C)
-    pm = tuple_pred_match(tup_f[None], tup_sid[None], pred)                  # (Q, E, C)
+    pm = tuple_pred_match(tup_f, tup_sid, pred)                              # (Q, E, C)
 
     # Shard OR-list membership: tuple sid against each list entry.
+    sid_hi, sid_lo = tup_sid[:, 0, :], tup_sid[:, 1, :]                      # (E, C)
     k = jnp.arange(l, dtype=jnp.int32)
     entry_valid = k[None, None, :] < jnp.abs(sublist_len)[..., None]         # (Q, E, L)
-    hit = (tup_sid[None, :, :, None, 0] == sublists[:, :, None, :, 0]) & \
-          (tup_sid[None, :, :, None, 1] == sublists[:, :, None, :, 1])       # (Q, E, C, L)
+    hit = (sid_hi[None, :, :, None] == sublists[:, :, None, :, 0]) & \
+          (sid_lo[None, :, :, None] == sublists[:, :, None, :, 1])           # (Q, E, C, L)
     in_list = jnp.any(hit & entry_valid[:, :, None, :], axis=-1)             # (Q, E, C)
 
     scan_all = (sublist_len < 0)[..., None]                                  # (Q, E, 1)
     selected = (sublist_len != 0)[..., None]
     shard_ok = jnp.where(scan_all, True, in_list) & selected
 
-    m = pm & shard_ok & alive_t[None]
-    v0 = tup_f[None, ..., 3 + channel]
-    count = jnp.sum(m, axis=-1).astype(jnp.int32)
-    vsum = jnp.sum(jnp.where(m, v0, 0.0), axis=-1)
-    vmin = jnp.min(jnp.where(m, v0, jnp.inf), axis=-1)
-    vmax = jnp.max(jnp.where(m, v0, -jnp.inf), axis=-1)
+    m = pm & shard_ok & alive_t[None]                                        # (Q, E, C)
+    # Fused multi-channel aggregation: one mask, K channels per sweep.
+    vals = jnp.stack([tup_f[:, row, :] for row in value_rows])               # (K, E, C)
+    mk = m[:, None]                                                          # (Q, 1, E, C)
+    count = jnp.sum(m, axis=-1).astype(jnp.int32)                            # (Q, E)
+    vsum = jnp.sum(jnp.where(mk, vals[None], 0.0), axis=-1)                  # (Q, K, E)
+    vmin = jnp.min(jnp.where(mk, vals[None], jnp.inf), axis=-1)
+    vmax = jnp.max(jnp.where(mk, vals[None], -jnp.inf), axis=-1)
     return count, vsum, vmin, vmax

@@ -1,22 +1,36 @@
 """Pallas TPU kernel: blocked spatio-temporal predicate scan + aggregation.
 
 This is the per-edge query engine hot loop (the paper's InfluxDB role,
-§3.5.2, Fig 5). For each (edge, query) pair the kernel streams the edge's
-tuple log through VMEM in ``block_c``-tuple tiles, evaluates the
-spatio-temporal predicate and the shard-id OR-list membership entirely in
-vector registers, and accumulates count/sum/min/max into the output tile.
+§3.5.2, Fig 5). For each (edge, query-tile) pair the kernel streams the
+edge's tuple log through VMEM in ``block_c``-tuple tiles, evaluates the
+spatio-temporal predicate and the shard-id OR-list membership of a whole
+``block_q``-query tile entirely in vector registers, and accumulates
+count/sum/min/max — for a static tuple of sensor channels at once — into
+revisited output tiles.
 
 TPU-native layout decisions (vs the paper's row-store in InfluxDB):
-  * tuple log is stored column-major (E, W, C) so the *tuple* axis is the
-    lane dimension (128-aligned), giving unit-stride vector loads per field;
-  * shard OR-lists are (2, L) per (q, e) with L lanes — the membership test
-    is a (L, block_c) broadcast-compare, i.e. the "OR clause" of Fig 5
-    becomes one vectorized compare per list entry rather than a regex walk;
-  * aggregation is a running (1, 1) accumulator revisited across the c-grid
-    (Pallas revisiting-output pattern), so no cross-block reduction pass.
+  * the tuple log is stored column-major (E, W, C) — NATIVELY, in
+    ``StoreState`` itself — so the *tuple* axis is the lane dimension
+    (128-aligned by ``init_store``'s capacity padding), giving unit-stride
+    vector loads per field with no per-query relayout;
+  * queries are tiled: the predicate is a (block_q, block_c) broadcast
+    evaluation and the shard OR-list membership a (block_q, L, block_c)
+    broadcast-compare, so each resident VMEM tuple tile answers block_q
+    queries before the grid advances — HBM tuple traffic is
+    ceil(Q/block_q)x the log instead of Qx;
+  * aggregation is fused across channels: one predicate mask drives the
+    count and every requested channel's sum/min/max accumulators
+    (the marginal cost per extra channel is one VMEM row already resident
+    in the tuple tile);
+  * accumulators are (block_q, 1) / (block_q, K, 1) output tiles revisited
+    across the c-grid (Pallas revisiting-output pattern), so no cross-block
+    reduction pass.
 
-Grid: (E, Q, C // block_c) — c fastest, so each (e, q) accumulator is
-complete before the grid moves on.
+Grid note: the grid is ``(E, Q // block_q, C // block_c)`` with the c axis
+FASTEST — each (edge, query-tile) accumulator is completed over consecutive
+grid steps before the grid moves on (the only ordering under which Pallas
+revisited outputs are well-defined), and the tuple-tile index map depends
+only on (e, c), so one fetch of the log serves the whole query tile.
 """
 
 from __future__ import annotations
@@ -30,7 +44,7 @@ from jax.experimental import pallas as pl
 
 def _kernel(tupf_ref, sidl_ref, cnt_ref, predf_ref, predi_ref, subl_ref,
             slen_ref, count_ref, vsum_ref, vmin_ref, vmax_ref, *, block_c: int,
-            valid_c: int, value_col: int):
+            valid_c: int, value_cols: tuple):
     pc = pl.program_id(2)
 
     @pl.when(pc == 0)
@@ -43,50 +57,60 @@ def _kernel(tupf_ref, sidl_ref, cnt_ref, predf_ref, predi_ref, subl_ref,
     t = tupf_ref[0, 0:1, :]      # (1, BC)
     lat = tupf_ref[0, 1:2, :]
     lon = tupf_ref[0, 2:3, :]
-    v0 = tupf_ref[0, value_col:value_col + 1, :]   # static channel selection
     sid_hi = sidl_ref[0, 0:1, :]
     sid_lo = sidl_ref[0, 1:2, :]
 
     # Ring-buffer validity: slots below min(count, valid_c) are live, where
-    # valid_c is the UNPADDED log length — a monotonic total-written count
-    # above capacity must never admit zero-padding lanes.
+    # valid_c is the LOGICAL ring capacity — a monotonic total-written count
+    # above capacity must never admit lane-padding slots.
     n_valid = jnp.minimum(cnt_ref[0, 0], valid_c)
     base = pc * block_c
     idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1)
-    alive = idx < n_valid
+    alive = idx < n_valid        # (1, BC)
 
-    pf = predf_ref[0]            # (8,) lat0, lat1, lon0, lon1, t0, t1, -, -
-    pi = predi_ref[0]            # (8,) sid_hi, sid_lo, has_s, has_t, has_i, is_and
-    sp = (pf[0] <= lat) & (lat <= pf[1]) & (pf[2] <= lon) & (lon <= pf[3])
-    tp = (pf[4] <= t) & (t <= pf[5])
-    ip = (sid_hi == pi[0]) & (sid_lo == pi[1])
-    hs, ht, hi = pi[2] != 0, pi[3] != 0, pi[4] != 0
+    pf = predf_ref[...]          # (BQ, 8) lat0, lat1, lon0, lon1, t0, t1, -, -
+    pi = predi_ref[...]          # (BQ, 8) sid_hi, sid_lo, has_s, has_t, has_i, is_and
+    sp = (pf[:, 0:1] <= lat) & (lat <= pf[:, 1:2]) & \
+         (pf[:, 2:3] <= lon) & (lon <= pf[:, 3:4])            # (BQ, BC)
+    tp = (pf[:, 4:5] <= t) & (t <= pf[:, 5:6])
+    ip = (sid_hi == pi[:, 0:1]) & (sid_lo == pi[:, 1:2])
+    hs, ht, hi = pi[:, 2:3] != 0, pi[:, 3:4] != 0, pi[:, 4:5] != 0
     m_and = (sp | ~hs) & (tp | ~ht) & (ip | ~hi)
     m_or = (sp & hs) | (tp & ht) | (ip & hi)
-    pm = jnp.where(pi[5] != 0, m_and, m_or)
+    pm = jnp.where(pi[:, 5:6] != 0, m_and, m_or)              # (BQ, BC)
 
-    # Shard OR-list membership: (L, BC) broadcast compare.
-    slen = slen_ref[0, 0]
+    # Shard OR-list membership: (BQ, L, BC) broadcast compare.
+    slen = slen_ref[...]                                      # (BQ, 1)
     l = subl_ref.shape[2]
-    list_hi = subl_ref[0, 0, :, 0:1]   # (L, 1)
-    list_lo = subl_ref[0, 0, :, 1:2]
-    k = jax.lax.broadcasted_iota(jnp.int32, (l, 1), 0)
-    entry_ok = k < jnp.abs(slen)
-    hit = (sid_hi == list_hi) & (sid_lo == list_lo) & entry_ok   # (L, BC)
-    in_list = jnp.any(hit, axis=0, keepdims=True)                # (1, BC)
+    list_hi = subl_ref[:, 0, :, 0]                            # (BQ, L)
+    list_lo = subl_ref[:, 0, :, 1]
+    k = jax.lax.broadcasted_iota(jnp.int32, (1, l), 1)
+    entry_ok = k < jnp.abs(slen)                              # (BQ, L)
+    hit = (sid_hi[:, None, :] == list_hi[:, :, None]) & \
+          (sid_lo[:, None, :] == list_lo[:, :, None]) & entry_ok[:, :, None]
+    in_list = jnp.any(hit, axis=1)                            # (BQ, BC)
     shard_ok = jnp.where(slen < 0, True, in_list) & (slen != 0)
 
-    m = pm & shard_ok & alive
-    count_ref[0, 0] += jnp.sum(m).astype(jnp.int32)
-    vsum_ref[0, 0] += jnp.sum(jnp.where(m, v0, 0.0))
-    vmin_ref[0, 0] = jnp.minimum(vmin_ref[0, 0], jnp.min(jnp.where(m, v0, jnp.inf)))
-    vmax_ref[0, 0] = jnp.maximum(vmax_ref[0, 0], jnp.max(jnp.where(m, v0, -jnp.inf)))
+    m = pm & shard_ok & alive                                 # (BQ, BC)
+    count_ref[...] += jnp.sum(m, axis=1, keepdims=True).astype(jnp.int32)
+    # Fused multi-channel aggregation: the mask is computed once; every
+    # requested channel's row is already resident in the VMEM tuple tile.
+    for kk, col in enumerate(value_cols):
+        v = tupf_ref[0, col:col + 1, :]                       # (1, BC)
+        vsum_ref[:, kk] += jnp.sum(jnp.where(m, v, 0.0), axis=1, keepdims=True)
+        vmin_ref[:, kk] = jnp.minimum(
+            vmin_ref[:, kk],
+            jnp.min(jnp.where(m, v, jnp.inf), axis=1, keepdims=True))
+        vmax_ref[:, kk] = jnp.maximum(
+            vmax_ref[:, kk],
+            jnp.max(jnp.where(m, v, -jnp.inf), axis=1, keepdims=True))
 
 
 def st_scan_kernel(tupf_t, sid_t, tup_count, pred_f, pred_i, sublists_t,
-                   sublist_len, *, block_c: int = 512,
+                   sublist_len, *, block_c: int = 512, block_q: int = 8,
                    interpret: "bool | None" = None,
-                   valid_c: "int | None" = None, value_col: int = 3):
+                   valid_c: "int | None" = None,
+                   value_cols: "tuple[int, ...]" = (3,)):
     """Invoke the Pallas scan.
 
     Args:
@@ -94,36 +118,46 @@ def st_scan_kernel(tupf_t, sid_t, tup_count, pred_f, pred_i, sublists_t,
       sid_t:       (E, 2, C) int32 shard ids.
       tup_count:   (E, 1) int32 — ring-buffer total-written counter; clamped
                    in-kernel to min(count, valid_c).
-      pred_f:      (Q, 8) float32 packed predicate.
+      pred_f:      (Q, 8) float32 packed predicate; Q % block_q == 0
+                   (ops.py pads the query batch).
       pred_i:      (Q, 8) int32 packed predicate.
       sublists_t:  (Q, E, L, 2) int32 OR-lists.
       sublist_len: (Q, E) int32.
+      block_q:     queries evaluated per resident tuple tile — the HBM
+                   tuple-traffic divisor for batched queries.
       interpret:   None = auto (compiled on TPU, interpreted elsewhere).
-      valid_c:     unpadded log length (ops.py pads C to a block multiple and
-                   passes the original here so padding lanes are never
+      valid_c:     logical ring capacity (ops.py forwards the store's
+                   un-lane-padded capacity so padding lanes are never
                    admitted); None = C.
-      value_col:   static row of the column-major log to aggregate (the
-                   selected sensor channel; 3 = v0).
+      value_cols:  static rows of the column-major log to aggregate (the
+                   selected sensor channels; 3 = v0). All are accumulated in
+                   the same sweep.
 
-    Returns (count, vsum, vmin, vmax), each (Q, E).
+    Returns (count, vsum, vmin, vmax): count (Q, E) int32; the rest
+    (Q, K, E) float32 with K = len(value_cols).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     e, w, c = tupf_t.shape
     if valid_c is None:
         valid_c = c
-    if not 3 <= value_col < w:
-        raise ValueError(
-            f"value_col={value_col} out of range: the column-major log has "
-            f"rows 0..2 = (t, lat, lon) and value rows 3..{w - 1}.")
+    n_ch = len(value_cols)
+    for col in value_cols:
+        if not 3 <= col < w:
+            raise ValueError(
+                f"value_col={col} out of range: the column-major log has "
+                f"rows 0..2 = (t, lat, lon) and value rows 3..{w - 1}.")
     q = pred_f.shape[0]
     l = sublists_t.shape[2]
     if c % block_c:
         raise ValueError(f"C={c} must be a multiple of block_c={block_c}")
-    grid = (e, q, c // block_c)
+    if q % block_q:
+        raise ValueError(f"Q={q} must be a multiple of block_q={block_q} "
+                         "(ops.py pads the query batch)")
+    grid = (e, q // block_q, c // block_c)
 
     kernel = functools.partial(_kernel, block_c=block_c, valid_c=valid_c,
-                               value_col=value_col)
+                               value_cols=tuple(value_cols))
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -131,22 +165,22 @@ def st_scan_kernel(tupf_t, sid_t, tup_count, pred_f, pred_i, sublists_t,
             pl.BlockSpec((1, w, block_c), lambda e_, q_, c_: (e_, 0, c_)),
             pl.BlockSpec((1, 2, block_c), lambda e_, q_, c_: (e_, 0, c_)),
             pl.BlockSpec((1, 1), lambda e_, q_, c_: (e_, 0)),
-            pl.BlockSpec((1, 8), lambda e_, q_, c_: (q_, 0)),
-            pl.BlockSpec((1, 8), lambda e_, q_, c_: (q_, 0)),
-            pl.BlockSpec((1, 1, l, 2), lambda e_, q_, c_: (q_, e_, 0, 0)),
-            pl.BlockSpec((1, 1), lambda e_, q_, c_: (q_, e_)),
+            pl.BlockSpec((block_q, 8), lambda e_, q_, c_: (q_, 0)),
+            pl.BlockSpec((block_q, 8), lambda e_, q_, c_: (q_, 0)),
+            pl.BlockSpec((block_q, 1, l, 2), lambda e_, q_, c_: (q_, e_, 0, 0)),
+            pl.BlockSpec((block_q, 1), lambda e_, q_, c_: (q_, e_)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1), lambda e_, q_, c_: (q_, e_)),
-            pl.BlockSpec((1, 1), lambda e_, q_, c_: (q_, e_)),
-            pl.BlockSpec((1, 1), lambda e_, q_, c_: (q_, e_)),
-            pl.BlockSpec((1, 1), lambda e_, q_, c_: (q_, e_)),
+            pl.BlockSpec((block_q, 1), lambda e_, q_, c_: (q_, e_)),
+            pl.BlockSpec((block_q, n_ch, 1), lambda e_, q_, c_: (q_, 0, e_)),
+            pl.BlockSpec((block_q, n_ch, 1), lambda e_, q_, c_: (q_, 0, e_)),
+            pl.BlockSpec((block_q, n_ch, 1), lambda e_, q_, c_: (q_, 0, e_)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((q, e), jnp.int32),
-            jax.ShapeDtypeStruct((q, e), jnp.float32),
-            jax.ShapeDtypeStruct((q, e), jnp.float32),
-            jax.ShapeDtypeStruct((q, e), jnp.float32),
+            jax.ShapeDtypeStruct((q, n_ch, e), jnp.float32),
+            jax.ShapeDtypeStruct((q, n_ch, e), jnp.float32),
+            jax.ShapeDtypeStruct((q, n_ch, e), jnp.float32),
         ],
         interpret=interpret,
     )(tupf_t, sid_t, tup_count, pred_f, pred_i, sublists_t, sublist_len)

@@ -18,7 +18,21 @@ def test_default_config_constructs_and_is_usable():
     assert len({tuple(s) for s in sites.tolist()}) == cfg.n_edges  # distinct
     assert StoreConfig().sites == cfg.sites                        # deterministic
     state = init_store(cfg)
-    assert state.tup_f.shape == (cfg.n_edges, cfg.tuple_capacity, cfg.tuple_width)
+    # Column-major log: field rows x lane-aligned tuple axis.
+    assert state.tup_f.shape == (cfg.n_edges, cfg.tuple_width,
+                                 cfg.padded_capacity)
+    assert state.tup_sid.shape == (cfg.n_edges, 2, cfg.padded_capacity)
+
+
+def test_padded_capacity_lane_alignment():
+    """padded_capacity rounds the stored tuple axis up to a 128 multiple;
+    aligned capacities are unchanged."""
+    assert StoreConfig(tuple_capacity=100).padded_capacity == 128
+    assert StoreConfig(tuple_capacity=128).padded_capacity == 128
+    assert StoreConfig(tuple_capacity=129).padded_capacity == 256
+    assert StoreConfig().padded_capacity == StoreConfig().tuple_capacity
+    cfg = StoreConfig(tuple_capacity=100)
+    assert init_store(cfg).tup_f.shape[-1] == 128
 
 
 def test_sites_length_mismatch_raises():

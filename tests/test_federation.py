@@ -238,6 +238,8 @@ AGG_SPECS = {
     "ch2_all": AggSpec(channel=2),
     "ch1_mean": AggSpec(channel=1, ops=("mean",)),
     "ch3_minmax": AggSpec(channel=3, ops=("min", "max")),
+    # multi-channel: fused (Q, K) partials cross the device combine
+    "multi_ch": AggSpec(channels=(0, 2, 3)),
 }
 
 

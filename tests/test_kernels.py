@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core.datastore import make_pred
 from repro.data.synthetic import CityConfig, make_sites
@@ -56,8 +58,9 @@ def test_voronoi_kernel_vs_oracle(n, e, block):
 # ---------------------------------------------------------------------------
 
 def random_scan_problem(rng, e=4, c=1024, q=3, l=8, w=7):
-    tup_f = rng.uniform(0, 100, (e, c, w)).astype(np.float32)
-    tup_sid = rng.integers(0, 6, (e, c, 2)).astype(np.int32)
+    """Random column-major scan problem: (E, W, C) log, (E, 2, C) sids."""
+    tup_f = rng.uniform(0, 100, (e, w, c)).astype(np.float32)
+    tup_sid = rng.integers(0, 6, (e, 2, c)).astype(np.int32)
     tup_count = rng.integers(0, c + 1, (e,)).astype(np.int32)
     sublists = rng.integers(0, 6, (q, e, l, 2)).astype(np.int32)
     sublist_len = rng.integers(-1, l + 1, (q, e)).astype(np.int32)
@@ -110,7 +113,7 @@ def test_st_scan_ring_count_clamp():
     engines."""
     rng = np.random.default_rng(11)
     tup_f, tup_sid, _, pred, sublists, slen = random_scan_problem(rng)
-    c = tup_f.shape[1]
+    c = tup_f.shape[2]            # column-major: the tuple axis is last
     over = jnp.asarray(rng.integers(c + 1, 5 * c, tup_f.shape[0]), jnp.int32)
     full = jnp.full(tup_f.shape[0], c, jnp.int32)
     exp = st_ref.st_scan_ref(tup_f, tup_sid, full, pred, sublists, slen)
@@ -183,38 +186,169 @@ def test_st_scan_exactly_at_capacity(interpret):
 @pytest.mark.parametrize("interpret", [True, None])
 def test_st_scan_channel_selection(channel, interpret):
     """AggSpec channel generalization: both engines aggregate the selected
-    value column (3 + channel), counts bitwise, floats to accumulation
+    value row (3 + channel), counts bitwise, floats to accumulation
     order; and selecting a channel must equal slicing it out by hand."""
     rng = np.random.default_rng(31 + channel)
     tup_f, tup_sid, cnt, pred, sublists, slen = random_scan_problem(rng)
     args = (tup_f, tup_sid, cnt, pred, sublists, slen)
-    exp = st_ref.st_scan_ref(*args, channel=channel)
+    exp = st_ref.st_scan_ref(*args, channels=(channel,))
     got = st_ops.st_scan(*args, block_c=256, interpret=interpret,
-                         channel=channel)
+                         channels=(channel,))
     np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]),
                                   err_msg="count")
     for g, x, name in zip(got[1:], exp[1:], ["vsum", "vmin", "vmax"]):
         np.testing.assert_allclose(np.asarray(g), np.asarray(x), rtol=1e-5,
                                    err_msg=name)
-    # Independent oracle: move the channel into column v0 and scan channel 0.
-    swapped = tup_f.at[..., 3].set(tup_f[..., 3 + channel])
+    # Independent oracle: move the channel into row v0 and scan channel 0.
+    swapped = tup_f.at[:, 3, :].set(tup_f[:, 3 + channel, :])
     exp0 = st_ref.st_scan_ref(swapped, tup_sid, cnt, pred, sublists, slen)
     for g, x in zip(exp, exp0):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(x))
+
+
+def test_st_scan_multi_channel_fused_vs_oracles():
+    """Fused multi-channel aggregation: a K-channel scan must equal (a) a
+    plain numpy oracle over the live window and (b) K independent
+    single-channel scans stacked — for both engines, in one pass."""
+    rng = np.random.default_rng(41)
+    channels = (0, 2, 3)
+    tup_f, tup_sid, cnt, pred, sublists, slen = random_scan_problem(rng, c=640)
+    args = (tup_f, tup_sid, cnt, pred, sublists, slen)
+    got_ref = st_ref.st_scan_ref(*args, channels=channels)
+    got_ker = st_ops.st_scan(*args, block_c=128, interpret=True,
+                             channels=channels)
+    assert got_ref[1].shape == (3, len(channels), 4)
+    # (a) numpy oracle: recompute the mask and every aggregate per channel.
+    e, w, c = tup_f.shape
+    q = sublists.shape[0]
+    npf, nps = np.asarray(tup_f), np.asarray(tup_sid)
+    p = {f: np.asarray(getattr(pred, f)) for f in pred._fields}
+    for qi in range(q):
+        for ei in range(e):
+            sp = ((p["lat0"][qi] <= npf[ei, 1]) & (npf[ei, 1] <= p["lat1"][qi])
+                  & (p["lon0"][qi] <= npf[ei, 2]) & (npf[ei, 2] <= p["lon1"][qi]))
+            tp = (p["t0"][qi] <= npf[ei, 0]) & (npf[ei, 0] <= p["t1"][qi])
+            ip = ((nps[ei, 0] == p["sid_hi"][qi])
+                  & (nps[ei, 1] == p["sid_lo"][qi]))
+            if p["is_and"][qi]:
+                m = ((sp | ~p["has_spatial"][qi]) & (tp | ~p["has_temporal"][qi])
+                     & (ip | ~p["has_sid"][qi]))
+            else:
+                m = ((sp & p["has_spatial"][qi]) | (tp & p["has_temporal"][qi])
+                     | (ip & p["has_sid"][qi]))
+            sl = int(np.asarray(slen)[qi, ei])
+            if sl == 0:
+                m &= False
+            elif sl > 0:
+                entries = np.asarray(sublists)[qi, ei, :sl]
+                m &= np.array([(entries == nps[ei, :, t]).all(1).any()
+                               for t in range(c)])
+            m &= np.arange(c) < int(np.asarray(cnt)[ei])
+            assert int(got_ref[0][qi, ei]) == int(m.sum())
+            for k, ch in enumerate(channels):
+                v = npf[ei, 3 + ch][m]
+                np.testing.assert_allclose(float(got_ref[1][qi, k, ei]),
+                                           v.sum() if len(v) else 0.0,
+                                           rtol=1e-4, atol=1e-4)
+    # (b) K single-channel scans, both engines.
+    for k, ch in enumerate(channels):
+        one_ref = st_ref.st_scan_ref(*args, channels=(ch,))
+        one_ker = st_ops.st_scan(*args, block_c=128, interpret=True,
+                                 channels=(ch,))
+        for got, one in ((got_ref, one_ref), (got_ker, one_ker)):
+            np.testing.assert_array_equal(np.asarray(got[0]),
+                                          np.asarray(one[0]))
+            for agg_i in (1, 2, 3):
+                np.testing.assert_array_equal(
+                    np.asarray(got[agg_i][:, k]),
+                    np.asarray(one[agg_i][:, 0]))
 
 
 def test_st_scan_channel_out_of_range():
     rng = np.random.default_rng(5)
     args = random_scan_problem(rng, w=7)
     with pytest.raises(ValueError, match="channel=4"):
-        st_ref.st_scan_ref(*args, channel=4)
+        st_ref.st_scan_ref(*args, channels=(4,))
     with pytest.raises(ValueError, match="channel=4"):
-        st_ops.st_scan(*args, channel=4)
-    # Negative channels must not alias the t/lat/lon metadata columns.
+        st_ops.st_scan(*args, channels=(4,))
+    # Negative channels must not alias the t/lat/lon metadata rows.
     with pytest.raises(ValueError, match="channel=-1"):
-        st_ref.st_scan_ref(*args, channel=-1)
+        st_ref.st_scan_ref(*args, channels=(-1,))
     with pytest.raises(ValueError, match="channel=-1"):
-        st_ops.st_scan(*args, channel=-1)
+        st_ops.st_scan(*args, channels=(-1,))
+    with pytest.raises(ValueError, match="duplicates"):
+        st_ref.st_scan_ref(*args, channels=(1, 1))
+
+
+@pytest.mark.parametrize("q,block_q", [(1, 8), (3, 4), (5, 8), (9, 4)])
+def test_st_scan_non_multiple_query_tiles(q, block_q):
+    """Query batches that are not block_q multiples force the wrapper's Q
+    padding; padding-query lanes must be inert and sliced off — kernel ==
+    ref bitwise on counts at every (q, block_q)."""
+    rng = np.random.default_rng(q * 10 + block_q)
+    args = random_scan_problem(rng, q=q, c=512)
+    exp = st_ref.st_scan_ref(*args)
+    got = st_ops.st_scan(*args, block_c=128, block_q=block_q, interpret=True)
+    assert got[0].shape == (q, 4) and got[1].shape == (q, 1, 4)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]),
+                                  err_msg="count")
+    for g, x, name in zip(got[1:], exp[1:], ["vsum", "vmin", "vmax"]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(x), rtol=1e-5,
+                                   err_msg=name)
+
+
+@pytest.mark.parametrize("interpret", [True, None])
+def test_st_scan_lane_padded_capacity_post_wrap(interpret):
+    """The store lane-pads the tuple axis above the logical capacity: with a
+    post-wrap ring count (count >> capacity) neither engine may ever admit
+    the padding slots — fill them with garbage and compare against an oracle
+    scan of the unpadded log."""
+    rng = np.random.default_rng(55)
+    cap, pad = 500, 140                       # stored C = 640, logical = 500
+    tup_f, tup_sid, _, pred, sublists, slen = random_scan_problem(rng, c=cap)
+    garbage_f = rng.uniform(0, 100, (4, 7, pad)).astype(np.float32)
+    garbage_s = rng.integers(0, 6, (4, 2, pad)).astype(np.int32)
+    padded_f = jnp.concatenate([tup_f, jnp.asarray(garbage_f)], axis=2)
+    padded_s = jnp.concatenate([tup_sid, jnp.asarray(garbage_s)], axis=2)
+    over = jnp.asarray(rng.integers(cap + 1, 7 * cap, (4,)), jnp.int32)
+    exp = st_ref.st_scan_ref(tup_f, tup_sid, jnp.full((4,), cap, jnp.int32),
+                             pred, sublists, slen)
+    got_ref = st_ref.st_scan_ref(padded_f, padded_s, over, pred, sublists,
+                                 slen, valid_c=cap)
+    got_ker = st_ops.st_scan(padded_f, padded_s, over, pred, sublists, slen,
+                             block_c=128, interpret=interpret, valid_c=cap)
+    for got in (got_ref, got_ker):
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]),
+                                      err_msg="count")
+        for g, x, name in zip(got[1:], exp[1:], ["vsum", "vmin", "vmax"]):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(x),
+                                       rtol=1e-5, err_msg=name)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.data())
+def test_st_scan_random_query_tiles_property(data):
+    """Hypothesis property: for random problem shapes and random (block_q,
+    block_c) tilings, the query-tiled kernel agrees with the reference —
+    counts bitwise, float aggregates to accumulation order."""
+    q = data.draw(st.integers(1, 12), label="q")
+    e = data.draw(st.integers(1, 5), label="e")
+    c = data.draw(st.integers(1, 5), label="c128") * 128
+    block_q = 2 ** data.draw(st.integers(0, 3), label="log2_block_q")
+    block_c = 128 * data.draw(st.integers(1, 2), label="block_c128")
+    n_ch = data.draw(st.integers(1, 3), label="n_ch")
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    rng = np.random.default_rng(seed)
+    channels = tuple(rng.choice(4, n_ch, replace=False).tolist())
+    args = random_scan_problem(rng, e=e, c=c, q=q)
+    exp = st_ref.st_scan_ref(*args, channels=channels)
+    got = st_ops.st_scan(*args, block_c=block_c, block_q=block_q,
+                         interpret=True, channels=channels)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]),
+                                  err_msg="count")
+    for g, x, name in zip(got[1:], exp[1:], ["vsum", "vmin", "vmax"]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(x), rtol=1e-5,
+                                   atol=1e-5, err_msg=name)
 
 
 @pytest.fixture(scope="module")

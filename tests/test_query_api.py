@@ -169,7 +169,7 @@ def test_agg_accumulates_and_validates():
     q = Query().time(0, 1).agg("count", channel=2).agg("mean", channel=2)
     assert q.spec == AggSpec(channel=2, ops=("count", "mean"))
     assert Query().time(0, 1).agg(channel=1).spec.ops == AGG_OPS
-    with pytest.raises(ValueError, match="one channel per query"):
+    with pytest.raises(ValueError, match="channel set is fixed"):
         Query().time(0, 1).agg("count", channel=0).agg("mean", channel=1)
     with pytest.raises(ValueError, match="unknown aggregate"):
         AggSpec(ops=("median",))
@@ -180,6 +180,26 @@ def test_agg_accumulates_and_validates():
     with pytest.raises(ValueError, match="share one AggSpec"):
         Query.batch(Query().time(0, 1).agg("count"),
                     Query().time(0, 1).agg("mean"))
+
+
+def test_agg_multi_channel_spec():
+    """channels= requests one fused scan over a static channel tuple; the
+    channel set is fixed once chosen and single-channel specs are equal
+    whichever spelling built them."""
+    q = Query().time(0, 1).agg("count", "mean", channels=(0, 2))
+    assert q.spec == AggSpec(channels=(0, 2), ops=("count", "mean"))
+    assert q.spec.n_channels == 2 and q.spec.channel == 0
+    # later .agg calls may add ops but not change the channel set
+    assert q.agg("sum").spec.ops == ("count", "mean", "sum")
+    with pytest.raises(ValueError, match="channel set is fixed"):
+        q.agg("sum", channels=(1,))
+    with pytest.raises(ValueError, match="not both"):
+        Query().time(0, 1).agg("count", channel=1, channels=(1, 2))
+    with pytest.raises(ValueError, match="duplicates"):
+        AggSpec(channels=(1, 1))
+    with pytest.raises(ValueError, match="not both"):
+        AggSpec(channel=1, channels=(1, 2))
+    assert AggSpec(channel=3) == AggSpec(channels=(3,))
 
 
 def test_batch_stacks_queries():
@@ -226,6 +246,66 @@ def test_mean_of_empty_window_is_nan(loaded_db):
     res, _ = db.query(Query().time(t_max + 1e6, t_max + 2e6).agg("mean"))
     assert int(res.count[0]) == 0
     assert np.isnan(float(res.vmean[0]))
+
+
+def test_zero_match_min_max_are_nan_not_sentinels(loaded_db):
+    """Regression: zero-match queries used to leak the scan's +inf/-inf
+    accumulator sentinels into vmin/vmax; they must be NaN-masked like vmean
+    — including per-channel in a multi-channel spec, and per-query in a
+    mixed batch."""
+    db, flat, _ = loaded_db
+    t_max = float(flat[:, 0].max())
+    empty = Query().time(t_max + 1e6, t_max + 2e6)
+    res, _ = db.query(empty.agg("min", "max"))
+    assert int(res.count[0]) == 0
+    assert np.isnan(float(res.vmin[0])) and np.isnan(float(res.vmax[0]))
+    assert not np.isinf(np.asarray(res.vmin)).any()
+    # multi-channel: every channel column masked
+    res_mc, _ = db.query(empty.agg("min", "max", channels=(0, 3)))
+    assert np.isnan(np.asarray(res_mc.vmin)).all()
+    assert np.isnan(np.asarray(res_mc.vmax)).all()
+    # mixed batch: only the empty query's lanes are masked
+    pred, spec = Query.batch(empty, Query().time(0.0, t_max))
+    res_b, _ = db.query((pred, spec))
+    assert np.isnan(float(res_b.vmin[0])) and np.isnan(float(res_b.vmax[0]))
+    assert np.isfinite(float(res_b.vmin[1])) and int(res_b.count[1]) > 0
+    # kernel engine path behaves identically
+    db_k = AerialDB(db.cfg, db.state, db.alive, jax.random.key(0),
+                    use_kernel=True, interpret=True)
+    res_k, _ = db_k.query((pred, spec))
+    assert np.isnan(float(res_k.vmin[0])) and np.isnan(float(res_k.vmax[0]))
+
+
+def test_multi_channel_query_equals_k_single_channel_queries(loaded_db):
+    """Tentpole acceptance: a K-channel AggSpec scans the log ONCE and its
+    (Q, K) aggregates are identical to K independent single-channel queries
+    — on both engines."""
+    db, flat, _ = loaded_db
+    channels = (0, 2, 3)
+    pred, _ = Query.batch(
+        Query().bbox(12.85, 13.10, 77.45, 77.75).time(0.0, 1e9),
+        Query().time(0.0, float(np.median(flat[:, 0]))))
+    key = jax.random.key(11)
+    dbs = [db, AerialDB(db.cfg, db.state, db.alive, jax.random.key(0),
+                        use_kernel=True, interpret=True)]
+    for session in dbs:
+        multi, _ = session.query(pred, agg=AggSpec(channels=channels),
+                                 key=key)
+        assert multi.vsum.shape == (2, len(channels))
+        for k, ch in enumerate(channels):
+            single, _ = session.query(pred, agg=AggSpec(channel=ch), key=key)
+            np.testing.assert_array_equal(np.asarray(multi.count),
+                                          np.asarray(single.count))
+            for f in ("vsum", "vmin", "vmax", "vmean"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(multi, f)[:, k]),
+                    np.asarray(getattr(single, f)), err_msg=f)
+    # view projects per-op (Q, K) arrays
+    spec = AggSpec(channels=channels, ops=("count", "mean"))
+    res, _ = db.query(pred, agg=spec, key=key)
+    view = res.view(spec)
+    assert set(view) == {"count", "mean"}
+    assert view["mean"].shape == (2, len(channels))
 
 
 @pytest.mark.parametrize("channel", [0, 2, 3])

@@ -117,7 +117,7 @@ def test_fully_aged_out_window_is_empty():
     cfg, state, _, _, _, _ = _sustained_store()
     count = np.asarray(state.tup_count)
     assert count.min() > CAP  # every ring wrapped
-    oldest_retained = float(np.asarray(state.tup_f[..., 0]).min())
+    oldest_retained = float(np.asarray(state.tup_f[:, 0, :]).min())  # t row
     t1 = oldest_retained - 1.0
     assert t1 > 0
     pred = make_pred(q=1, t0=0.0, t1=t1, has_temporal=True, is_and=True)
