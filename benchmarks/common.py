@@ -42,17 +42,19 @@ def timeit(fn, *args, warmup=1, iters=3):
 def build_store(n_edges=20, n_drones=20, rounds=4, records=30, planner="min_shards",
                 replication=3, use_index=True, tuple_capacity=1 << 15, seed=0,
                 stagger_s=0.0, index_capacity=4096, retention_every=4,
-                mesh=None, max_shards=512):
+                mesh=None, max_shards=512, n_failure_domains=1):
     """Stand up a loaded store. Ingest goes through the fused lax.scan driver
     (one dispatch for all rounds, donated state); pass ``mesh`` (an edge mesh)
-    to load through the sharded federated runtime instead of 1-device jit."""
+    to load through the sharded federated runtime instead of 1-device jit.
+    ``n_failure_domains`` > 1 turns on failure-domain replica spreading
+    (fig14's device-failure rows)."""
     sites = make_sites(n_edges, CityConfig(), seed=3)
     cfg = StoreConfig(
         n_edges=n_edges, sites=tuple(map(tuple, sites.tolist())),
         tuple_capacity=tuple_capacity, index_capacity=index_capacity,
         max_shards_per_query=max_shards, records_per_shard=records,
         planner=planner, replication=replication, use_index=use_index,
-        retention_every=retention_every)
+        retention_every=retention_every, n_failure_domains=n_failure_domains)
     fleet = DroneFleet(n_drones, records_per_shard=records, seed=seed + 1,
                        stagger_s=stagger_s)
     state = init_store(cfg)

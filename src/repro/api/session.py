@@ -13,6 +13,19 @@ an edge mesh. The two paths are differentially tested bit-identical
     db.ingest_rounds(payloads, metas)
     res, info = db.query(Query().bbox(...).time(...).agg("mean", channel=2))
     db.fail_edges(1, 5); ...; db.recover_edges(1, 5)
+    db.fail_device(0); ...; db.recover_device(0)      # whole failure domain
+
+Failure-domain resilience (paper §4.5.3): ``fail_device`` / ``recover_device``
+flip an entire contiguous device block of the edge axis at once — the unit
+that actually fails when an edge *server* (one mesh device hosting
+``E / n_devices`` edges) goes down. Recovery triggers an **anti-entropy
+repair pass** (``core.repair``) by default: shards placed around the outage
+are re-placed under the recovered mask, added replicas are backfilled with
+tuples from surviving copies, and the recovered edges' indexes are
+backfilled with every entry they missed — so a recovered edge serves
+complete results instead of a silent lookup hole. ``QueryInfo`` reports the
+degraded-query accounting (``replicas_lost`` / ``completeness_bound``)
+whenever failures make results provably incomplete.
 
 See the package docstring (``repro.api``) for the facade-vs-local-bodies
 layering contract.
@@ -25,15 +38,18 @@ from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.query import Query
 from repro.core import datastore as _ds
+from repro.core import repair as _repair
 from repro.core.datastore import (AggSpec, QueryInfo, QueryResult, StoreConfig,
                                   StoreState, init_store)
 from repro.core.index import QueryPred
 from repro.core.placement import ShardMeta
 from repro.distributed import federation as _fed
-from repro.distributed.sharding import shard_store
+from repro.distributed.sharding import (EDGE_AXIS, device_edge_block,
+                                        shard_store)
 
 __all__ = ["AerialDB"]
 
@@ -57,6 +73,7 @@ class AerialDB:
         self._mesh = mesh
         self._use_kernel = use_kernel
         self._interpret = interpret
+        self._last_repair: Optional[dict] = None
 
     @classmethod
     def open(cls, cfg: Optional[StoreConfig] = None, mesh=None, *,
@@ -183,21 +200,109 @@ class AerialDB:
             self._cfg, self._state, pred, self._alive, key, self._mesh,
             use_kernel=self._use_kernel, interpret=self._interpret, agg=spec)
 
-    # -- membership ---------------------------------------------------------
+    # -- membership / failure domains ---------------------------------------
 
-    def _edge_ids(self, edges) -> jnp.ndarray:
-        ids = jnp.asarray(
+    def _edge_ids(self, edges) -> np.ndarray:
+        """Normalize + validate edge ids **eagerly** on host.
+
+        JAX scatter semantics silently clamp out-of-range indices, so the
+        historical ``.at[ids].set(...)`` membership flips turned
+        ``fail_edges(cfg.n_edges)`` into "mark the LAST edge dead" instead
+        of an error. Every membership id is therefore validated here against
+        ``cfg.n_edges`` (negatives, overflow, duplicates all raise) before
+        any device op sees it.
+        """
+        ids = np.asarray(
             edges[0] if len(edges) == 1 and not isinstance(edges[0], int)
-            else edges, jnp.int32).reshape(-1)
-        return ids
+            else edges, np.int64).reshape(-1)
+        if ids.size == 0:
+            raise ValueError("no edge ids given: pass at least one edge id "
+                             "(fail_edges(3) or fail_edges([3, 5])).")
+        e = self._cfg.n_edges
+        bad = ids[(ids < 0) | (ids >= e)]
+        if bad.size:
+            raise ValueError(
+                f"edge id(s) {sorted(set(bad.tolist()))} out of range: this "
+                f"deployment has n_edges={e} (valid ids 0..{e - 1}); JAX "
+                "scatter clamping would silently retarget them.")
+        if np.unique(ids).size != ids.size:
+            dup = sorted({int(i) for i in ids
+                          if (ids == i).sum() > 1})
+            raise ValueError(
+                f"duplicate edge id(s) {dup}: membership flips take each "
+                "edge at most once.")
+        return ids.astype(np.int32)
+
+    def _device_edges(self, device: int) -> np.ndarray:
+        """Resolve a failure-domain id to its contiguous edge block:
+        ``cfg.n_failure_domains`` blocks when configured (> 1), else the
+        session mesh's device blocks (the layout contract)."""
+        n = self._cfg.n_failure_domains
+        if n == 1 and self._mesh is not None:
+            n = self._mesh.shape[EDGE_AXIS]
+        if n == 1:
+            raise ValueError(
+                "no failure domains to address: open the session on an edge "
+                "mesh or set StoreConfig.n_failure_domains > 1 (device-level "
+                "failures flip one contiguous block of E / n_domains edges).")
+        return np.asarray(device_edge_block(self._cfg.n_edges, n, device),
+                          np.int32)
 
     def fail_edges(self, *edges) -> "AerialDB":
         """Mark edges dead (paper §4.5.3 resilience shape): subsequent
-        inserts skip them, queries re-plan around them."""
-        self._alive = self._alive.at[self._edge_ids(edges)].set(False)
+        inserts skip them, queries re-plan around them; ids are validated
+        eagerly (out-of-range / duplicate ids raise)."""
+        ids = self._edge_ids(edges)
+        self._alive = self._alive.at[ids].set(False)
         return self
 
-    def recover_edges(self, *edges) -> "AerialDB":
-        """Bring failed edges back (their state was retained while dead)."""
-        self._alive = self._alive.at[self._edge_ids(edges)].set(True)
+    def recover_edges(self, *edges, repair: bool = True) -> "AerialDB":
+        """Bring failed edges back (their state was retained while dead).
+
+        By default a recovery triggers the anti-entropy :meth:`repair` pass,
+        so shards ingested during the outage are re-placed onto the
+        recovered edges and their index entries/tuples backfilled — without
+        it, a recovered edge answers index lookups from a table that is
+        silently missing the whole outage window. Pass ``repair=False`` to
+        defer (e.g. when recovering several domains and repairing once).
+        """
+        ids = self._edge_ids(edges)
+        self._alive = self._alive.at[ids].set(True)
+        if repair:
+            self.repair()
         return self
+
+    def fail_device(self, device: int) -> "AerialDB":
+        """Kill a whole failure domain (one mesh device's contiguous edge
+        block): the paper's edge-server loss, where every edge the device
+        hosts disappears at once. Placement spreads replicas across domains
+        (``StoreConfig.n_failure_domains``), so a single device loss leaves
+        every shard reachable."""
+        return self.fail_edges(self._device_edges(device))
+
+    def recover_device(self, device: int, repair: bool = True) -> "AerialDB":
+        """Bring a failed device's whole edge block back; runs the
+        anti-entropy :meth:`repair` pass by default (see
+        :meth:`recover_edges`)."""
+        return self.recover_edges(self._device_edges(device), repair=repair)
+
+    def repair(self) -> dict:
+        """Anti-entropy re-replication sweep (``core.repair.repair_state``):
+        re-derive every tracked shard's canonical placement under the
+        current alive mask, rewrite stale replica sets, backfill tuples onto
+        added replicas from surviving copies, and backfill missing index
+        entries (the recovered-edge lookup hole). Host-side control-plane
+        operation — deterministic, so differential runtimes stay bitwise
+        identical. Returns the repair telemetry dict (also kept on
+        :attr:`last_repair`)."""
+        state, info = _repair.repair_state(self._cfg, self._state,
+                                           self._alive)
+        self._state = (shard_store(state, self._mesh)
+                       if self._mesh is not None else state)
+        self._last_repair = info
+        return info
+
+    @property
+    def last_repair(self) -> Optional[dict]:
+        """Telemetry of the most recent :meth:`repair` pass (None before)."""
+        return self._last_repair

@@ -122,6 +122,8 @@ class StoreConfig:
     planner: str = "min_shards"
     or_group: int = 150                           # paper: sub-queries split at 150 sids
     retention_every: int = 4                      # insert steps between index sweeps
+    n_failure_domains: int = 1                    # contiguous device blocks to spread
+                                                  # each shard's replicas across
 
     def __post_init__(self):
         if not (1 <= self.replication <= 3):
@@ -140,6 +142,12 @@ class StoreConfig:
             raise ValueError(
                 f"retention_every={self.retention_every} must be >= 1 (index "
                 "retention sweeps run every retention_every insert steps).")
+        if self.n_failure_domains < 1 or self.n_edges % self.n_failure_domains:
+            raise ValueError(
+                f"n_failure_domains={self.n_failure_domains} must be >= 1 and "
+                f"divide n_edges={self.n_edges}: failure domains are the "
+                "contiguous device blocks of the sharded layout contract "
+                "(one block of E / n_failure_domains edges each).")
         if not self.sites:
             object.__setattr__(self, "sites", _default_site_grid(self.n_edges))
         elif len(self.sites) != self.n_edges:
@@ -287,12 +295,31 @@ class QueryResult(NamedTuple):
 
 
 class QueryInfo(NamedTuple):
-    """Telemetry used by the paper-figure benchmarks (Fig 9–13)."""
+    """Telemetry used by the paper-figure benchmarks (Fig 9–14).
+
+    Degraded-query accounting (paper §4.5.3 resilience): ``replicas_lost``
+    counts dead replica slots over the matched shard set, and
+    ``completeness_bound`` is ``assigned_shards / matched_shards`` — the
+    planner-assigned fraction of the *index-visible* shard set (1.0 when
+    every matched shard has a live replica; shards whose entire replica set
+    is dead are unassignable and pull it below 1). It is NOT a tuple-level
+    floor in general: the fraction is shard-weighted, and a shard whose
+    every index entry died with its edges never appears in ``matched`` at
+    all — so without failure-domain spreading it can sit ABOVE the true
+    tuple completeness (fig14's spread=0 row demonstrates exactly that).
+    Under failure-domain spreading with <= replication-1 edge failures (or
+    one whole device), entry over-replication keeps every shard visible and
+    assignable, and the value is exactly 1.0 — which is what the fig14 CI
+    gate asserts. When ``overflow`` clipped the match, or on the index-free
+    broadcast baseline (``shards_matched == -1``), it is NaN (unknown)
+    rather than a fabricated 1.0."""
     lookup_edges: jnp.ndarray      # (Q,) #edges consulted for the index lookup
     subquery_edges: jnp.ndarray    # (Q,) #edges executing sub-queries
     shards_matched: jnp.ndarray    # (Q,) #distinct shards
     max_shards_per_edge: jnp.ndarray  # (Q,) worst per-edge OR-list length
     broadcast: jnp.ndarray         # (Q,) bool — index lookup degenerated
+    replicas_lost: jnp.ndarray     # (Q,) dead replica slots over matched shards
+    completeness_bound: jnp.ndarray  # (Q,) float32 assigned/matched (NaN unknown)
 
 
 def _concrete(x, q):
@@ -414,7 +441,8 @@ def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     b, r, w = payload.shape
     sites = cfg.sites_array()
 
-    replicas = place_replicas(meta, sites, alive, cfg.tau)      # (B, 3)
+    replicas = place_replicas(meta, sites, alive, cfg.tau,
+                              n_domains=cfg.n_failure_domains)  # (B, 3)
     replicas = replicas[:, : cfg.replication]
     alive_loc = jnp.take(alive, edge_ids)
 
@@ -671,7 +699,8 @@ def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
     ``index.dedup_matched`` (exactly the single-device result — see there).
 
     Returns (partials, sublist_len, (lookup_mask, broadcast, overflow,
-    shards_matched)): ``partials`` are the per-edge aggregates — (Q, E_local)
+    shards_matched, replicas_lost, completeness_bound)): ``partials`` are the
+    per-edge aggregates — (Q, E_local)
     count plus (Q, K, E_local) per-channel value aggregates for the
     ``agg.channels`` tuple, all produced by ONE scan of the local log;
     ``sublist_len`` is (Q, E_local); the rest is replicated metadata. Feed
@@ -705,6 +734,19 @@ def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
         sublist_len = jnp.sum(am, axis=1).astype(jnp.int32)           # (Q, E_loc)
         ovf = matched.overflow
         shards_matched = jnp.sum(matched.valid, axis=-1)
+        # Degraded-query accounting (replicated metadata, like planning):
+        # dead replica slots over the matched set, and the planner-derived
+        # completeness bound — matched shards whose replicas all died are
+        # unassignable (assignment == -1) and provably missing from the
+        # result. Overflow clips the tracked set, so the bound is unknown.
+        reps = matched.replicas
+        dead_slot = (matched.valid[..., None] & (reps >= 0)
+                     & ~jnp.take(alive, jnp.clip(reps, 0), axis=0))
+        replicas_lost = jnp.sum(dead_slot, axis=(1, 2)).astype(jnp.int32)
+        assigned_n = jnp.sum(matched.valid & (assignment >= 0), axis=-1)
+        bound = jnp.where(shards_matched > 0,
+                          assigned_n / jnp.maximum(shards_matched, 1), 1.0)
+        bound = jnp.where(ovf, jnp.nan, bound).astype(jnp.float32)
     else:
         # Broadcast baseline (Feather-like): no shard scoping; every alive
         # edge scans everything. StoreConfig rejects use_index=False with
@@ -715,15 +757,19 @@ def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
                                 -1, 0).astype(jnp.int32)
         ovf = jnp.zeros((q,), jnp.bool_)
         shards_matched = jnp.full((q,), -1, jnp.int32)
+        # No index: no shard tracking, so completeness is unknowable here.
+        replicas_lost = jnp.zeros((q,), jnp.int32)
+        bound = jnp.full((q,), jnp.nan, jnp.float32)
 
     partials = scan_engine(state.tup_f, state.tup_sid, state.tup_count, pred,
                            sublists, sublist_len, use_kernel, interpret,
                            channels=agg.channels, valid_c=cfg.tuple_capacity)
-    return partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched)
+    return partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched,
+                                   replicas_lost, bound)
 
 
 def finalize_query(partials, sublist_len, lookup_mask, broadcast, overflow,
-                   shards_matched):
+                   shards_matched, replicas_lost, completeness_bound):
     """Final (Q, K, E) -> (Q[, K]) combine shared by the 1-device and sharded
     paths (under the federated runtime, this is the only
     tuple-volume-independent reduction crossing devices). ``partials`` are
@@ -763,6 +809,8 @@ def finalize_query(partials, sublist_len, lookup_mask, broadcast, overflow,
         shards_matched=shards_matched,
         max_shards_per_edge=jnp.max(jnp.abs(sublist_len), axis=-1),
         broadcast=broadcast,
+        replicas_lost=replicas_lost,
+        completeness_bound=completeness_bound,
     )
     return result, info
 
@@ -774,12 +822,11 @@ def _query_step_jit(cfg: StoreConfig, state: StoreState, pred: QueryPred,
                     interpret: Optional[bool] = None,
                     channels: Tuple[int, ...] = (0,)):
     edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
-    partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched) = \
+    partials, sublist_len, meta_info = \
         query_local(cfg, state, pred, alive, key, edge_ids,
                     use_kernel=use_kernel, interpret=interpret,
                     agg=AggSpec(channels=channels))
-    return finalize_query(partials, sublist_len, lookup_mask, broadcast, ovf,
-                          shards_matched)
+    return finalize_query(partials, sublist_len, *meta_info)
 
 
 def _query(cfg: StoreConfig, state: StoreState, pred: QueryPred,

@@ -9,6 +9,33 @@ If a produced edge collides with an earlier replica of the same shard, or is
 dead (failure mask), the replica moves to the *immediate successor* edge id in
 the deterministic ascending order — resolved here with a vectorized
 first-alive-offset search instead of a sequential probe loop.
+
+Mass-failure contract: when fewer edges are alive than replica slots, the
+unsatisfiable slots are **explicitly degraded to the ``-1`` sentinel** (never
+a duplicate or dead edge id) — the same sentinel the index already uses for
+unfilled replica slots, so ``insert_local``'s dispatch, ``insert_entries``,
+``retire_entries``, and every planner skip them without special-casing. With
+0 alive edges all three slots are -1 and the batch is (explicitly) dropped.
+
+Failure-domain spreading (``n_domains > 1``): the edge axis is divided into
+``n_domains`` contiguous blocks (device blocks of the sharded runtime — see
+the layout contract in ``core.datastore``). The temporal replica ``r_t``
+additionally avoids the failure domain hosting ``r_s`` *whenever an alive,
+unused edge exists outside it*, so every shard's replica set spans >= 2
+distinct domains (whenever >= 2 domains have alive edges) and a whole-device
+loss can never take out all copies. The constraint is advisory — when only
+``r_s``'s domain has alive edges left it falls back to the plain successor
+probe, never to a dead or duplicate edge. ``n_domains == 1`` is bit-identical
+to the unconstrained placement.
+
+Only ``r_t`` carries the constraint, deliberately: spatial and temporal
+index *lookups* are served by slice-owner entries written independently of
+replica locations, so moving ``r_s``/``r_t`` is invisible to them — but sid
+point-lookups consult exactly ``H_i(shardID)``, whose entry exists only
+because ``r_i`` is that edge (or its collision successor, itself a replica).
+Constraining ``r_i`` would strand sid lookups on an alive edge holding no
+entry; constraining ``r_s`` would similarly skew the spatial-locality story
+(paper §3.4.1) for no extra durability.
 """
 
 from __future__ import annotations
@@ -41,7 +68,9 @@ def successor_resolve(start: jnp.ndarray, forbidden: jnp.ndarray) -> jnp.ndarray
       forbidden: (B, E) bool — dead or already-used edges.
 
     Returns (B,) int32 resolved edges; if all edges are forbidden, returns
-    ``start`` unchanged (caller handles the degenerate total-failure case).
+    the ``-1`` sentinel (an explicitly-degraded slot — the historical
+    behaviour of returning ``start`` handed callers a dead or duplicate edge
+    that no caller actually handled).
     """
     e = forbidden.shape[-1]
     offs = jnp.arange(e, dtype=jnp.int32)
@@ -50,21 +79,52 @@ def successor_resolve(start: jnp.ndarray, forbidden: jnp.ndarray) -> jnp.ndarray
     first = jnp.argmax(ok, axis=-1)                          # first True offset
     any_ok = jnp.any(ok, axis=-1)
     resolved = jnp.take_along_axis(idx, first[..., None], axis=-1)[..., 0]
-    return jnp.where(any_ok, resolved, start).astype(jnp.int32)
+    return jnp.where(any_ok, resolved, -1).astype(jnp.int32)
+
+
+def edge_domains(n_edges: int, n_domains: int) -> jnp.ndarray:
+    """(E,) int32 — failure domain of each edge: ``n_domains`` contiguous
+    blocks of ``E / n_domains`` edges, matching the sharded runtime's
+    device-block layout (device d hosts exactly domain d when the mesh size
+    equals ``n_domains``)."""
+    if n_domains < 1 or n_edges % n_domains:
+        raise ValueError(
+            f"n_domains={n_domains} must be >= 1 and divide n_edges="
+            f"{n_edges} (contiguous device blocks).")
+    return jnp.arange(n_edges, dtype=jnp.int32) // (n_edges // n_domains)
+
+
+def _spread_resolve(cand: jnp.ndarray, used: jnp.ndarray,
+                    dom_used: jnp.ndarray) -> jnp.ndarray:
+    """Successor-resolve ``cand`` preferring edges outside the failure
+    domains already hosting a replica (``dom_used``: (B, E) bool). The
+    domain constraint applies only where some non-``used`` edge exists
+    outside those domains; otherwise it degrades to the plain probe."""
+    constrained = used | dom_used
+    can_spread = jnp.any(~constrained, axis=-1)              # (B,)
+    forbidden = jnp.where(can_spread[..., None], constrained, used)
+    return successor_resolve(cand, forbidden)
 
 
 def place_replicas(meta: ShardMeta, sites: jnp.ndarray, alive: jnp.ndarray,
-                   tau: float) -> jnp.ndarray:
+                   tau: float, n_domains: int = 1) -> jnp.ndarray:
     """Compute the 3 replica edges for each shard (paper §3.4.2).
 
     Args:
-      meta:  ShardMeta of B shards.
-      sites: (E, 2) edge locations.
-      alive: (E,) bool availability mask.
-      tau:   temporal bucket width for H_t.
+      meta:      ShardMeta of B shards.
+      sites:     (E, 2) edge locations.
+      alive:     (E,) bool availability mask.
+      tau:       temporal bucket width for H_t.
+      n_domains: failure domains (contiguous device blocks) to spread the
+                 replica set across; 1 = unconstrained hash placement.
 
     Returns:
-      (B, 3) int32 distinct, alive edge ids (ordering: spatial, temporal, id).
+      (B, 3) int32 replica edge ids (ordering: spatial, temporal, id).
+      Slots are distinct and alive; with fewer than 3 alive edges the
+      unsatisfiable trailing slots degrade to ``-1`` (see module docstring),
+      and with ``n_domains > 1`` the temporal replica avoids the spatial
+      replica's failure domain when the alive mask allows (>= 2 domains
+      spanned — the whole-device durability invariant).
     """
     e = sites.shape[0]
     mid_lat = 0.5 * (meta.lat0 + meta.lat1)
@@ -80,8 +140,16 @@ def place_replicas(meta: ShardMeta, sites: jnp.ndarray, alive: jnp.ndarray,
 
     r0 = successor_resolve(cand_s, dead)
     used = dead | (eye == r0[..., None])
-    r1 = successor_resolve(cand_t, used)
+    if n_domains == 1:
+        r1 = successor_resolve(cand_t, used)
+    else:
+        dom = edge_domains(e, n_domains)                     # (E,)
+        r0_dom = jnp.where(r0 >= 0, dom[jnp.clip(r0, 0)], -1)
+        dom_used = dom[None, :] == r0_dom[..., None]         # (B, E)
+        r1 = _spread_resolve(cand_t, used, dom_used)
     used = used | (eye == r1[..., None])
+    # r_i stays the plain successor of H_i(shardID): sid point-lookups
+    # consult exactly that edge (module docstring).
     r2 = successor_resolve(cand_i, used)
     return jnp.stack([r0, r1, r2], axis=-1)
 
@@ -89,7 +157,8 @@ def place_replicas(meta: ShardMeta, sites: jnp.ndarray, alive: jnp.ndarray,
 def parent_edge(lat: jnp.ndarray, lon: jnp.ndarray, sites: jnp.ndarray,
                 alive: jnp.ndarray) -> jnp.ndarray:
     """Parent edge of a drone: Voronoi cell over its current location
-    (paper §3.3), falling back to the successor if that edge is down."""
+    (paper §3.3), falling back to the successor if that edge is down
+    (``-1`` when no edge is alive at all)."""
     cand = hash_spatial(lat, lon, sites)
     dead = ~jnp.broadcast_to(alive, cand.shape + (alive.shape[0],))
     return successor_resolve(cand, dead)

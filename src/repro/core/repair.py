@@ -1,0 +1,267 @@
+"""Anti-entropy repair: recovery re-replication after edge/device outages.
+
+The durability story (paper §3.4.2 + §4.5.3) assumes every shard keeps
+``replication`` live copies. An outage breaks that in two ways:
+
+* shards placed **before** the outage lose live replicas while their edges
+  are down (the data survives on the dead edge's frozen state, but the
+  replication factor is degraded until it recovers);
+* shards placed **during** the outage were placed *around* the dead edges —
+  their replica sets and index entries never touch them — so a recovered
+  edge comes back with an index that is silently missing every shard
+  ingested while it was away. If a later query selects that edge as its only
+  index-lookup edge (a narrow window whose slice grid maps to exactly that
+  edge), the missing entries become silently-incomplete results.
+
+``repair_state`` is the control-plane fix: a full anti-entropy sweep that
+re-derives, for every shard tracked by the index, the canonical placement
+under the *current* alive mask (the placement the shard would have received
+had the outage never happened — ``place_replicas`` is deterministic given
+the mask), then converges the store to it:
+
+  1. **re-placement** — where the canonical replica set differs from the
+     stored one AND a surviving replica still holds the shard's tuples,
+     every index entry of the shard is rewritten to the new set (a shard
+     with no live copy left is counted unrepairable and its entries keep
+     naming the dead replicas, so the degraded-query accounting keeps
+     reporting the loss instead of being laundered into an empty all-clear);
+  2. **tuple backfill** — for shards whose placement changed, every member
+     of the new replica set that does not hold the shard's tuples (edges
+     *added* by re-placement, or retained replicas whose own ring already
+     overwrote the copy) receives them from the first surviving replica
+     that still does (appended through the normal ring-buffer cursor, with
+     overwrite telemetry). Shards whose placement is unchanged are left
+     alone by design: re-verifying every copy of every shard on every sweep
+     would resurrect retention-aged copies wholesale, fighting the ring's
+     sliding window — repair converges *outage-affected* shards, retention
+     owns the rest. Edges dropped by re-placement keep their now-stale
+     copies — harmless, because sub-query OR-lists only ever name shards
+     assigned from index entries, and ring retention reclaims the slots;
+  3. **index backfill** — every edge that should hold a shard's entry under
+     the slicing contract (slice owners + replica edges, ``_index_edge_mask``)
+     but does not, gets the entry appended — this is what plugs the
+     recovered edge's lookup hole, including for shards whose replicas never
+     changed.
+
+The sweep is **host-side numpy** by design: repair is a rare, metadata-scale
+control-plane event (like an operator-triggered rebalance), not a hot path.
+It is deterministic, so the single-device and sharded runtimes — which hold
+bitwise-identical states by the differential harness — stay bitwise
+identical after repairing through ``AerialDB.recover_edges`` on both.
+Callers on a mesh re-shard the returned state (``shard_store``).
+
+Scope / caveats: repair needs the index (``use_index=False`` stores track no
+shards — the sweep is a no-op); copies are best-effort under retention — the
+source is the surviving replica holding the MOST of the shard's tuples, but
+a replica that retains only a partial remnant is left as-is (appending the
+full copy next to the remnant would double-count in scans, and per-tuple
+dedup is not worth a control-plane path; this is the same replica retention
+skew the query-exactness notes in ``datastore.py`` already scope); a shard
+whose live replicas ALL died before repair is unrepairable until one of
+them recovers (counted in the info dict).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datastore import (StoreConfig, StoreState, _COUNT_SAT,
+                                  _index_edge_mask)
+from repro.core.index import IndexState
+from repro.core.placement import ShardMeta, place_replicas
+
+__all__ = ["repair_state"]
+
+
+def _shard_table(ent_i, ent_f, valid):
+    """Flatten valid index entries into a deduplicated shard table.
+
+    Returns (ev, ec, entry_key, uniq_keys, first_idx): entry coordinates,
+    each entry's 64-bit sid key, the ascending unique keys, and the index of
+    each unique shard's first (representative) entry.
+    """
+    ev, ec = np.nonzero(valid)
+    hi = ent_i[ev, ec, 0].astype(np.int64)
+    lo = ent_i[ev, ec, 1].astype(np.int64) & 0xFFFFFFFF
+    key = (hi << 32) | lo
+    uniq, first = np.unique(key, return_index=True)
+    return ev, ec, key, uniq, first
+
+
+def repair_state(cfg: StoreConfig, state: StoreState,
+                 alive) -> Tuple[StoreState, dict]:
+    """Run the anti-entropy sweep (module docstring) against ``state``.
+
+    Args:
+      cfg:   deployment config (placement + slicing geometry).
+      state: StoreState — may be sharded; leaves are pulled to host.
+      alive: (E,) bool — the CURRENT availability mask (recovered edges
+             already alive; still-dead edges never receive copies/entries).
+
+    Returns (new_state, info): a host-materialized StoreState (callers on a
+    mesh re-shard it) and a telemetry dict — ``shards_tracked``,
+    ``shards_replaced`` (replica set rewritten), ``shards_unrepairable``
+    (no surviving source), ``tuples_copied``, ``entries_rewritten``,
+    ``entries_backfilled``, ``entries_dropped`` (backfill hit a full table).
+    """
+    e, cap_l = state.tup_f.shape[0], state.tup_f.shape[2]
+    cap = cfg.tuple_capacity
+    alive_np = np.asarray(alive, bool)
+
+    ent_f = np.array(state.index.ent_f)
+    ent_i = np.array(state.index.ent_i)
+    valid = np.array(state.index.valid)
+    cursor = np.array(state.index.cursor)
+    dropped = np.array(state.index.dropped)
+    tup_f = np.array(state.tup_f)
+    tup_sid = np.array(state.tup_sid)
+    tup_count = np.array(state.tup_count)
+    tup_pos = np.array(state.tup_pos)
+    tup_over = np.array(state.tup_overwritten)
+
+    info = {"shards_tracked": 0, "shards_replaced": 0,
+            "shards_unrepairable": 0, "tuples_copied": 0,
+            "entries_rewritten": 0, "entries_backfilled": 0,
+            "entries_dropped": 0}
+
+    ev, ec, key, uniq, first = _shard_table(ent_i, ent_f, valid)
+    n = uniq.shape[0]
+    info["shards_tracked"] = int(n)
+    if n == 0:
+        return state, info
+
+    # Representative meta + stored replicas per tracked shard.
+    f0 = ent_f[ev[first], ec[first]]                       # (N, 6)
+    old3 = ent_i[ev[first], ec[first], 2:5]                # (N, 3)
+    meta = ShardMeta(
+        sid_hi=jnp.asarray(ent_i[ev[first], ec[first], 0]),
+        sid_lo=jnp.asarray(ent_i[ev[first], ec[first], 1]),
+        lat0=jnp.asarray(f0[:, 0]), lat1=jnp.asarray(f0[:, 1]),
+        lon0=jnp.asarray(f0[:, 2]), lon1=jnp.asarray(f0[:, 3]),
+        t0=jnp.asarray(f0[:, 4]), t1=jnp.asarray(f0[:, 5]))
+
+    # Canonical placement under the current mask (deterministic — equals the
+    # never-failed placement once every edge is back).
+    new = np.asarray(place_replicas(meta, cfg.sites_array(),
+                                    jnp.asarray(alive_np), cfg.tau,
+                                    n_domains=cfg.n_failure_domains))
+    new3 = np.full((n, 3), -1, np.int32)
+    new3[:, : cfg.replication] = new[:, : cfg.replication]
+
+    # Where every edge should hold the entry: slice owners + new replicas.
+    want = np.asarray(_index_edge_mask(cfg, meta, jnp.asarray(new3),
+                                       cfg.sites_array(),
+                                       jnp.asarray(alive_np)))   # (N, E)
+    # Where entries currently exist, per shard x edge.
+    present = np.zeros((n, e), bool)
+    present[np.searchsorted(uniq, key), ev] = True
+
+    # Entry groups per shard, precomputed once: entries of shard i are
+    # order[starts[i]:ends[i]] (avoids an O(entries) rescan per shard).
+    order = np.argsort(key, kind="stable")
+    starts = np.searchsorted(key, uniq, side="left", sorter=order)
+    ends = np.searchsorted(key, uniq, side="right", sorter=order)
+
+    def live_window(edge):
+        """Live ring slots on ``edge`` right now (backfills grow it)."""
+        return min(int(tup_count[edge]), cap)
+
+    def holds_tuples(edge, hi, lo):
+        w = live_window(edge)
+        return bool(np.any((tup_sid[edge, 0, :w] == hi)
+                           & (tup_sid[edge, 1, :w] == lo)))
+
+    for i in range(n):
+        old_set = {int(r) for r in old3[i] if r >= 0}
+        new_set = {int(r) for r in new3[i] if r >= 0}
+        hi = int(ent_i[ev[first[i]], ec[first[i]], 0])
+        lo = int(ent_i[ev[first[i]], ec[first[i]], 1])
+
+        if new_set != old_set:
+            # The copy source is the alive replica holding the MOST of the
+            # shard's tuples: rings wrap at independent rates, so a
+            # lower-id survivor may hold only a partial remnant while a
+            # fuller copy lives elsewhere — propagating the remnant would
+            # cement the loss.
+            hit = np.empty(0, np.int64)
+            src = -1
+            for cand in sorted(old_set):
+                if not alive_np[cand]:
+                    continue
+                w = live_window(cand)
+                h = np.nonzero((tup_sid[cand, 0, :w] == hi)
+                               & (tup_sid[cand, 1, :w] == lo))[0]
+                if h.size > hit.size:
+                    hit, src = h, cand
+            if hit.size == 0:
+                # Unrepairable: every live copy is gone. Do NOT rewrite the
+                # entries — replacing the dead replica ids with fresh (empty)
+                # alive ones would launder the loss and reset the degraded-
+                # query accounting (replicas_lost / completeness_bound) to a
+                # fabricated all-clear. Keep the stored set so queries keep
+                # reporting the shard as unreachable until a copy returns
+                # (step 3 below still backfills missing entries — naming the
+                # dead replicas — so the loss stays VISIBLE on recovered
+                # lookup edges too, instead of vanishing from their index).
+                info["shards_unrepairable"] += 1
+                new3[i] = old3[i]
+            else:
+                # 1. rewrite every entry of this shard to the canonical set.
+                idx = order[starts[i]:ends[i]]
+                ent_i[ev[idx], ec[idx], 2:5] = new3[i]
+                info["entries_rewritten"] += int(idx.size)
+                info["shards_replaced"] += 1
+
+                # 2. backfill tuples from the surviving copy onto every
+                # member of the new replica set that does not hold them —
+                # replicas *added* by re-placement, and retained replicas
+                # whose own ring already overwrote the copy (verified via
+                # holds_tuples, so replicas with the data are never touched).
+                cols_f = tup_f[src][:, hit]                # (3+V, n_hit)
+                for dst in sorted(new_set):
+                    if not alive_np[dst] or holds_tuples(dst, hi, lo):
+                        continue
+                    slots = (tup_pos[dst] + np.arange(hit.size)) % cap
+                    tup_f[dst][:, slots] = cols_f
+                    tup_sid[dst][0, slots] = hi
+                    tup_sid[dst][1, slots] = lo
+                    before = min(int(tup_count[dst]), cap)
+                    tup_count[dst] = min(int(tup_count[dst]) + hit.size,
+                                         _COUNT_SAT)
+                    after = min(int(tup_count[dst]), cap)
+                    tup_over[dst] = min(
+                        int(tup_over[dst]) + before + hit.size - after,
+                        _COUNT_SAT)
+                    tup_pos[dst] = (int(tup_pos[dst]) + hit.size) % cap
+                    info["tuples_copied"] += int(hit.size)
+
+        # 3. backfill missing index entries (slice owners + replicas) — this
+        # runs for unchanged shards too: the recovered edge missed every
+        # entry written while it was down, replicas moved or not.
+        for dst in np.nonzero(want[i] & ~present[i])[0]:
+            c = int(cursor[dst])
+            if c >= valid.shape[1]:
+                dropped[dst] += 1
+                info["entries_dropped"] += 1
+                continue
+            ent_f[dst, c] = f0[i]
+            ent_i[dst, c, 0] = hi
+            ent_i[dst, c, 1] = lo
+            ent_i[dst, c, 2:5] = new3[i]
+            valid[dst, c] = True
+            cursor[dst] = c + 1
+            info["entries_backfilled"] += 1
+
+    index = IndexState(
+        ent_f=jnp.asarray(ent_f), ent_i=jnp.asarray(ent_i),
+        valid=jnp.asarray(valid), cursor=jnp.asarray(cursor),
+        dropped=jnp.asarray(dropped), retired=state.index.retired)
+    new_state = StoreState(
+        index=index, tup_f=jnp.asarray(tup_f), tup_sid=jnp.asarray(tup_sid),
+        tup_count=jnp.asarray(tup_count), tup_pos=jnp.asarray(tup_pos),
+        tup_overwritten=jnp.asarray(tup_over), tup_dropped=state.tup_dropped,
+        steps=state.steps)
+    return new_state, info

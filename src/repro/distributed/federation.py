@@ -67,6 +67,15 @@ def check_edge_mesh(cfg: StoreConfig, mesh: Mesh) -> int:
             f"n_edges={cfg.n_edges} is not divisible by the edge-mesh size "
             f"{n_dev}: every device must host the same number of edges "
             "(contiguous blocks of the leading E axis).")
+    if cfg.n_failure_domains > 1 and n_dev % cfg.n_failure_domains:
+        raise ValueError(
+            f"n_failure_domains={cfg.n_failure_domains} is incompatible with "
+            f"an edge mesh of {n_dev} devices: each failure domain must be a "
+            "whole number of device blocks (n_devices % n_failure_domains "
+            "== 0), or two 'spread' replicas can silently share one device "
+            "and a single device loss still takes out every copy. Use "
+            f"n_failure_domains == {n_dev} (one domain per device), a "
+            "divisor of it, or 1 to disable spreading.")
     return n_dev
 
 
@@ -230,14 +239,15 @@ def _query_fn(cfg: StoreConfig, mesh: Mesh, use_kernel: bool,
             in_specs=(state_specs, _replicated_like(pred), P(), P(),
                       P(EDGE_AXIS)),
             out_specs=(partial_specs, P(None, EDGE_AXIS),
-                       (P(), P(), P(), P())),
+                       (P(),) * 6),
             check_rep=False)
-        partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched) = \
+        partials, sublist_len, meta_info = \
             sharded(state, pred, alive, key_data, edge_ids)
         # The only tuple-volume-independent cross-device reduction: the final
-        # (Q, E) combine over the sharded per-edge partials.
-        return finalize_query(partials, sublist_len, lookup_mask, broadcast,
-                              ovf, shards_matched)
+        # (Q, E) combine over the sharded per-edge partials. The degraded-
+        # query accounting (replicas_lost / completeness_bound) rides in
+        # meta_info — computed replicated next to planning, like the rest.
+        return finalize_query(partials, sublist_len, *meta_info)
 
     return jax.jit(outer)
 

@@ -55,6 +55,23 @@ def store_partition_specs():
         tup_overwritten=edge, tup_dropped=edge, steps=P())
 
 
+def device_edge_block(n_edges: int, n_devices: int, device: int) -> range:
+    """Global edge ids hosted by mesh device ``device`` under the layout
+    contract (contiguous blocks of ``E / n_devices`` along the leading edge
+    axis) — the failure-domain resolution used by ``AerialDB.fail_device``:
+    a device loss takes out exactly this block."""
+    if n_devices < 1 or n_edges % n_devices:
+        raise ValueError(
+            f"n_edges={n_edges} must be a positive multiple of n_devices="
+            f"{n_devices} (layout contract: equal contiguous blocks).")
+    if not 0 <= device < n_devices:
+        raise ValueError(
+            f"device={device} out of range: the edge mesh has {n_devices} "
+            f"devices (valid ids 0..{n_devices - 1}).")
+    block = n_edges // n_devices
+    return range(device * block, (device + 1) * block)
+
+
 def shard_store(state, mesh: Mesh):
     """Place a StoreState onto an edge mesh per ``store_partition_specs``
     (leading-E dim split into contiguous per-device blocks)."""

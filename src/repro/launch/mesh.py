@@ -30,6 +30,11 @@ def make_edge_mesh(n_devices: int | None = None):
     federation story — a device plays the role of one edge site's local
     store). ``n_devices`` defaults to every local device; it must divide the
     deployment's ``StoreConfig.n_edges``. Simulate a fleet on CPU with
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+    The device blocks double as *failure domains*: ``AerialDB.fail_device(d)``
+    kills exactly device d's block (``distributed.sharding.device_edge_block``),
+    and ``StoreConfig.n_failure_domains = n_devices`` makes placement spread
+    every shard's replicas across blocks so that loss is survivable."""
     n = jax.device_count() if n_devices is None else n_devices
     return jax.make_mesh((n,), ("edge",))

@@ -87,6 +87,14 @@ class _Tuples(SearchStrategy):
         return tuple(s.do_draw(rng) for s in self.strategies)
 
 
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def do_draw(self, rng):
+        return self.elements[int(rng.integers(0, len(self.elements)))]
+
+
 class _Sets(SearchStrategy):
     def __init__(self, elements, min_size, max_size):
         self.elements = elements
@@ -147,6 +155,10 @@ def sets(elements, min_size=0, max_size=None, **_):
                  else min_size + 10)
 
 
+def sampled_from(elements):
+    return _SampledFrom(elements)
+
+
 def data():
     return _Data()
 
@@ -204,5 +216,6 @@ strategies.integers = integers
 strategies.lists = lists
 strategies.tuples = tuples
 strategies.sets = sets
+strategies.sampled_from = sampled_from
 strategies.data = data
 strategies.SearchStrategy = SearchStrategy

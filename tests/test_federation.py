@@ -317,6 +317,65 @@ def test_facade_ingest_and_failures_identical(mesh):
     assert_queries_identical(r1, i1, r2, i2)
 
 
+def test_query_identical_whole_device_dead(loaded, mesh):
+    """An ENTIRE device's edge block dies (edges 2·E/N..3·E/N): its local
+    index matches, candidate contributions, and scan partials must all mask
+    out identically in both runtimes, for every predicate shape."""
+    cfg, ref, fed, alive = loaded
+    block = jnp.arange(2 * (E // N_DEV), 3 * (E // N_DEV))
+    alive2 = alive.at[block].set(False)
+    for name, pred in QUERY_PREDS.items():
+        key = jax.random.key(17)
+        r1, i1 = query_step(cfg, ref, pred, alive2, key)
+        r2, i2 = federated_query_step(cfg, fed, pred, alive2, key, mesh)
+        assert_queries_identical(r1, i1, r2, i2)
+
+
+def test_facade_device_failure_and_repair_identical(mesh):
+    """The full failure-domain lifecycle through the facade on both
+    runtimes: device failure, during-outage ingest, recovery with the
+    anti-entropy repair pass — states bitwise identical and every answer
+    equal at each stage (the repair pass is deterministic host-side work,
+    re-sharded onto the mesh afterwards)."""
+    cfg = make_cfg(n_failure_domains=N_DEV)
+    db_ref = AerialDB.open(cfg)
+    db_fed = AerialDB.open(cfg, mesh=mesh)
+    fleet = DroneFleet(10, records_per_shard=12, seed=41)
+    pay, met = fleet.next_rounds(2)
+    db_ref.ingest_rounds(pay, met)
+    db_fed.ingest_rounds(pay, met)
+
+    db_ref.fail_device(1)
+    db_fed.fail_device(1)
+    assert int(db_ref.alive.sum()) == E - E // N_DEV
+    np.testing.assert_array_equal(np.asarray(db_ref.alive),
+                                  np.asarray(db_fed.alive))
+
+    pay2, met2 = fleet.next_rounds(2)
+    db_ref.ingest_rounds(pay2, met2)
+    db_fed.ingest_rounds(pay2, met2)
+    assert_states_identical(db_ref.state, db_fed.state)
+
+    q = Query().time(0.0, 1e9).agg("count", "mean", channel=1)
+    key = jax.random.key(19)
+    r1, i1 = db_ref.query(q, key=key)
+    r2, i2 = db_fed.query(q, key=key)
+    assert_queries_identical(r1, i1, r2, i2)
+
+    db_ref.recover_device(1)
+    db_fed.recover_device(1)
+    assert db_ref.last_repair == db_fed.last_repair
+    assert db_ref.last_repair["shards_replaced"] > 0
+    assert_states_identical(db_ref.state, db_fed.state)
+    r1, i1 = db_ref.query(q, key=key)
+    r2, i2 = db_fed.query(q, key=key)
+    assert_queries_identical(r1, i1, r2, i2)
+    # recovered + repaired: the full window is complete again
+    total = int(np.prod(pay.shape[:3])) + int(np.prod(pay2.shape[:3]))
+    assert int(np.asarray(r1.count)[0]) == total
+    assert float(np.asarray(i1.completeness_bound)[0]) == 1.0
+
+
 def test_shim_return_values_unchanged(loaded, mesh):
     """The deprecated insert_step/query_step shims still return exactly what
     the PR-2 harness pinned: default-AggSpec facade answers equal shim

@@ -1,0 +1,165 @@
+"""Placement properties under arbitrary alive masks (paper §3.4.2 + §4.5.3).
+
+The mass-failure contract (the `successor_resolve` total-failure bugfix):
+``place_replicas`` returns, for every shard,
+
+  * ``min(3, n_alive)`` real slots that are DISTINCT and ALIVE, and
+  * the remaining slots explicitly degraded to ``-1`` — never a duplicate,
+    never a dead edge (the historical fallback returned the unresolved hash
+    candidate, which violated both and no caller handled it);
+
+down to the 1-alive and 0-alive corners. With failure-domain spreading
+(``n_domains > 1``) the real slots additionally span at least
+``min(2, n_real_slots, #domains containing an alive edge)`` distinct
+domains — the temporal replica avoids the spatial replica's domain whenever
+possible — so a whole-device loss can never take out every copy (the sid
+replica stays on the H_i successor chain so point-lookups keep working; see
+``place_replicas``).
+
+Runs under the real `hypothesis` package when installed, or the
+deterministic fallback shim in tests/_hypothesis_fallback.py otherwise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.placement import (ShardMeta, edge_domains, place_replicas,
+                                  successor_resolve)
+from repro.data.synthetic import CityConfig, make_sites
+
+E = 12
+SITES = jnp.asarray(make_sites(E, CityConfig(), seed=3))
+
+
+def _meta(n, rng, city=CityConfig()):
+    lat = rng.uniform(city.lat_min, city.lat_max, (n, 2)).astype(np.float32)
+    lon = rng.uniform(city.lon_min, city.lon_max, (n, 2)).astype(np.float32)
+    t = rng.uniform(0, 86400, (n, 2)).astype(np.float32)
+    return ShardMeta(
+        sid_hi=rng.integers(0, 100, n).astype(np.int32),
+        sid_lo=rng.integers(0, 1 << 30, n).astype(np.int32),
+        lat0=lat.min(1), lat1=lat.max(1),
+        lon0=lon.min(1), lon1=lon.max(1),
+        t0=t.min(1), t1=t.max(1))
+
+
+def check_mass_failure_contract(reps, alive, n_domains=1):
+    """The (B, 3) replica contract for ONE alive mask (module docstring)."""
+    n_alive = int(alive.sum())
+    dom = np.asarray(edge_domains(E, n_domains))
+    n_alive_domains = len(set(dom[alive])) if n_alive else 0
+    for row in reps:
+        real = [int(r) for r in row if r >= 0]
+        assert len(real) == min(3, n_alive), (row, alive)
+        assert len(set(real)) == len(real), (row, alive)        # distinct
+        assert all(alive[r] for r in real), (row, alive)        # alive
+        # degraded slots trail (r0 fills first): -1s only after real slots
+        k = len(real)
+        assert all(int(r) == -1 for r in row[k:]), (row, alive)
+        spanned = len({int(dom[r]) for r in real})
+        assert spanned >= min(2, len(real), n_alive_domains), \
+            (row, alive, dom, spanned)
+
+
+@given(st.integers(min_value=0, max_value=E), st.data())
+@settings(deadline=None, max_examples=30)
+def test_replicas_mass_failure_contract(n_alive, data):
+    """Random alive masks all the way down to 0 alive edges: slots are
+    distinct+alive or explicitly -1, never a dead or duplicate id."""
+    alive_idx = data.draw(st.sets(st.integers(0, E - 1), min_size=n_alive,
+                                  max_size=n_alive))
+    alive = np.zeros(E, bool)
+    alive[list(alive_idx)] = True
+    rng = np.random.default_rng(data.draw(st.integers(0, 1 << 30)))
+    meta = _meta(8, rng)
+    reps = np.asarray(place_replicas(meta, SITES, jnp.asarray(alive), 300.0))
+    check_mass_failure_contract(reps, alive)
+
+
+@given(st.integers(min_value=1, max_value=E), st.data())
+@settings(deadline=None, max_examples=30)
+def test_replicas_failure_domain_spreading(n_alive, data):
+    """With contiguous failure domains, the replica set spans as many
+    distinct domains as the alive mask allows — the invariant behind the
+    'one device loss never loses all copies' durability claim."""
+    n_domains = data.draw(st.sampled_from([2, 3, 4, 6]), label="domains")
+    alive_idx = data.draw(st.sets(st.integers(0, E - 1), min_size=n_alive,
+                                  max_size=n_alive))
+    alive = np.zeros(E, bool)
+    alive[list(alive_idx)] = True
+    rng = np.random.default_rng(data.draw(st.integers(0, 1 << 30)))
+    meta = _meta(8, rng)
+    reps = np.asarray(place_replicas(meta, SITES, jnp.asarray(alive), 300.0,
+                                     n_domains=n_domains))
+    check_mass_failure_contract(reps, alive, n_domains=n_domains)
+
+
+def test_one_alive_corner():
+    """1 alive edge: every shard gets exactly (that edge, -1, -1)."""
+    alive = np.zeros(E, bool)
+    alive[5] = True
+    meta = _meta(16, np.random.default_rng(0))
+    reps = np.asarray(place_replicas(meta, SITES, jnp.asarray(alive), 300.0))
+    assert (reps == np.asarray([5, -1, -1], np.int32)).all(), reps
+
+
+def test_zero_alive_corner():
+    """0 alive edges: all slots degrade to -1 (and successor_resolve itself
+    returns the sentinel instead of the forbidden start edge)."""
+    alive = np.zeros(E, bool)
+    meta = _meta(4, np.random.default_rng(1))
+    reps = np.asarray(place_replicas(meta, SITES, jnp.asarray(alive), 300.0))
+    assert (reps == -1).all(), reps
+    got = successor_resolve(jnp.asarray([3], jnp.int32),
+                            jnp.ones((1, E), bool))
+    assert int(got[0]) == -1
+
+
+def test_spreading_never_packs_one_domain():
+    """With >= 2 alive domains, a whole-domain loss leaves >= 1 replica:
+    exhaustively over every shard of a large batch — no replica set may
+    ever be contained in a single domain."""
+    n_domains = 4
+    meta = _meta(256, np.random.default_rng(2))
+    reps = np.asarray(place_replicas(meta, SITES, jnp.ones(E, bool), 300.0,
+                                     n_domains=n_domains))
+    dom = np.asarray(edge_domains(E, n_domains))
+    for row in reps:
+        assert len(set(dom[row])) >= 2, (row, dom[row])
+
+
+def test_spreading_keeps_sid_hash_replica():
+    """The sid replica r_i must stay the plain successor of H_i(shardID)
+    (spreading exempts it): when the hash edge is alive and distinct from
+    r0/r1, r2 IS that edge — the invariant sid point-lookups rely on."""
+    from repro.core import hashing
+    meta = _meta(256, np.random.default_rng(4))
+    reps = np.asarray(place_replicas(meta, SITES, jnp.ones(E, bool), 300.0,
+                                     n_domains=4))
+    cand_i = np.asarray(hashing.hash_shard_id(
+        jnp.asarray(meta.sid_hi), jnp.asarray(meta.sid_lo), E))
+    free = cand_i != reps[:, 0]
+    free &= cand_i != reps[:, 1]
+    assert free.any()
+    np.testing.assert_array_equal(reps[free, 2], cand_i[free])
+
+
+def test_single_domain_bit_identical_to_unconstrained():
+    """n_domains=1 must not move a single replica (the single-device path
+    is unchanged — the StoreConfig default)."""
+    meta = _meta(128, np.random.default_rng(3))
+    alive = jnp.ones(E, bool).at[jnp.asarray([2, 7])].set(False)
+    a = np.asarray(place_replicas(meta, SITES, alive, 300.0))
+    b = np.asarray(place_replicas(meta, SITES, alive, 300.0, n_domains=1))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_edge_domains_validation():
+    import pytest
+    with pytest.raises(ValueError, match="divide"):
+        edge_domains(E, 5)
+    with pytest.raises(ValueError, match="divide"):
+        edge_domains(E, 0)

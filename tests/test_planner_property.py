@@ -86,3 +86,24 @@ def test_min_shards_never_assigns_dead_edge(data):
     assignment = np.asarray(plan_jit("min_shards", matched, alive, None))
     assigned = assignment[assignment >= 0]
     assert alive_np[assigned].all(), (assignment, alive_np)
+
+
+def test_planners_skip_fully_degraded_replica_rows():
+    """Mass-failure placement degrades unsatisfiable replica slots to -1
+    (down to ALL slots -1 when no edge was alive at insert time): every
+    planner must leave such shards unassigned — -1 slots are skipped, never
+    dereferenced as edge ids."""
+    s, e = 6, 5
+    reps = np.full((s, 3), -1, np.int32)
+    reps[0] = [2, -1, -1]            # partially degraded: only edge 2 usable
+    matched = MatchedShards(
+        sid_hi=jnp.asarray(np.arange(s, dtype=np.int32)[None]),
+        sid_lo=jnp.asarray(np.arange(s, dtype=np.int32)[None]),
+        replicas=jnp.asarray(reps[None]),
+        valid=jnp.ones((1, s), bool),
+        overflow=jnp.zeros((1,), jnp.bool_))
+    alive = jnp.ones(e, bool)
+    for planner in ["random", "min_edges", "min_shards"]:
+        a = np.asarray(plan_jit(planner, matched, alive, jax.random.key(0)))
+        assert a[0, 0] == 2, (planner, a)
+        assert (a[0, 1:] == -1).all(), (planner, a)
