@@ -1,14 +1,25 @@
 """Subprocess worker for the fig7 sharded-runtime scaling sweep.
 
 Runs a paper-scale deployment (default: 80 edges / 400 drones, §4.4.2 D400)
-through the sharded federated runtime on N simulated host devices and emits
-the usual ``name,us_per_call,derived`` rows on stdout. Must be launched with
-``XLA_FLAGS=--xla_force_host_platform_device_count=N`` already in the
+through the sharded federated runtime on N simulated host devices — on the
+1-D ``("edge",)`` mesh, or with ``--fleets F`` on the 2-D ``("fleet",
+"edge")`` mesh (hierarchical merge + double-buffered query tiling) — and
+emits the usual ``name,us_per_call,derived`` rows on stdout. Must be launched
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` already in the
 environment (jax locks the device count at first backend initialization, so
 the parent — fig7_insertion_scaling.py — sets it and spawns this module).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-      PYTHONPATH=src python -m benchmarks.fed_worker --devices 4
+      PYTHONPATH=src python -m benchmarks.fed_worker --devices 4 --fleets 2
+
+True cross-host mode — one OS process per fleet partition over
+``jax.distributed`` (``launch.mesh.init_fleet_processes``); every process
+runs the same command, ``--devices`` counts GLOBAL devices, and only process
+0 prints rows:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \
+      python -m benchmarks.fed_worker --devices 4 --fleets 2 \
+      --coordinator localhost:9731 --num-processes 2 --process-id $RANK
 """
 
 import argparse
@@ -16,12 +27,27 @@ import argparse
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--devices", type=int, required=True)
+    ap.add_argument("--devices", type=int, required=True,
+                    help="total (global) device count the mesh must span")
+    ap.add_argument("--fleets", type=int, default=1,
+                    help="fleet partitions: 1 = 1-D ('edge',) mesh, "
+                         ">1 = 2-D ('fleet', 'edge') mesh")
     ap.add_argument("--edges", type=int, default=80)
     ap.add_argument("--drones", type=int, default=400)
     ap.add_argument("--records", type=int, default=15)
     ap.add_argument("--prefill-rounds", type=int, default=2)
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port — run multi-process over jax.distributed "
+                         "(one process per fleet partition)")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
     args = ap.parse_args()
+
+    if args.coordinator is not None:
+        # Must run before any other jax API touches the backend.
+        from repro.launch.mesh import init_fleet_processes
+        init_fleet_processes(args.coordinator, args.num_processes,
+                             args.process_id)
 
     import jax
     import jax.numpy as jnp
@@ -32,15 +58,20 @@ def main() -> None:
             f"expected {args.devices} devices, found {jax.device_count()} — "
             "launch with XLA_FLAGS=--xla_force_host_platform_device_count="
             f"{args.devices}")
+    primary = jax.process_index() == 0
 
     from benchmarks.common import build_store, timeit
     from repro.core.datastore import make_pred
     from repro.core.placement import ShardMeta
     from repro.distributed.federation import (federated_insert_step,
                                               federated_query_step)
-    from repro.launch.mesh import make_edge_mesh
+    from repro.launch.mesh import make_edge_mesh, make_fleet_mesh
 
-    mesh = make_edge_mesh(args.devices)
+    if args.fleets > 1:
+        mesh = make_fleet_mesh(args.fleets, args.devices // args.fleets,
+                               n_edges=args.edges)
+    else:
+        mesh = make_edge_mesh(args.devices, n_edges=args.edges)
     # tuple_capacity sized so the H_t hotspot edge (§3.4.1: one synchronous
     # round can land every shard's temporal replica on one edge) never wraps
     # within the run — keeps the catch-all count exact. min_edges planner:
@@ -57,10 +88,12 @@ def main() -> None:
     pj = jnp.asarray(payload)
     us, (state2, _) = timeit(
         lambda: federated_insert_step(cfg, state, pj, meta, alive, mesh))
-    tag = f"E{args.edges}/D{args.drones}/dev{args.devices}"
-    print(f"fig7/sharded_insert/{tag},{us:.1f},"
-          f"us_per_shard={us / args.drones:.1f};devices={args.devices}",
-          flush=True)
+    tag = f"E{args.edges}/D{args.drones}/dev{args.devices}/fleet{args.fleets}"
+    if primary:
+        print(f"fig7/sharded_insert/{tag},{us:.1f},"
+              f"us_per_shard={us / args.drones:.1f};devices={args.devices};"
+              f"fleets={args.fleets}",
+              flush=True)
 
     # Query smoke on the sharded store: exact catch-all count proves the
     # sharded runtime answered, not just ingested.
@@ -71,7 +104,9 @@ def main() -> None:
     got = int(np.asarray(result.count)[0])
     if got != expected:
         raise SystemExit(f"sharded catch-all count {got} != {expected}")
-    print(f"fig7/sharded_query_exact/{tag},0.0,count={got}", flush=True)
+    if primary:
+        print(f"fig7/sharded_query_exact/{tag},0.0,count={got};"
+              f"fleets={args.fleets}", flush=True)
 
 
 if __name__ == "__main__":

@@ -26,10 +26,25 @@ from repro.core.placement import ShardMeta
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
-def run_sharded_scaling(device_counts=(1, 2, 4, 8)):
+# (devices, fleets) sweep: 1-D mesh scaling over 1/2/4/8 devices, plus the
+# 2-D ("fleet", "edge") mesh at 1/2/4 fleet partitions on 4 devices — the
+# 1/2/4-fleet scaling rows of BENCH_fig7_insertion_scaling.json. Override
+# with FIG7_SWEEP="dev:fleet,dev:fleet,..." (CI runs a light subset).
+DEFAULT_SWEEP = ((1, 1), (2, 1), (4, 1), (8, 1), (4, 2), (4, 4))
+
+
+def _sweep():
+    spec = os.environ.get("FIG7_SWEEP")
+    if not spec:
+        return DEFAULT_SWEEP
+    return tuple(tuple(int(x) for x in pair.split(":"))
+                 for pair in spec.split(","))
+
+
+def run_sharded_scaling(sweep=None):
     """Paper-scale 80-edge/400-drone ingest through the sharded federated
-    runtime, one subprocess per simulated device count."""
-    for ndev in device_counts:
+    runtime, one subprocess per (device count, fleet count) mesh shape."""
+    for ndev, nfleet in (_sweep() if sweep is None else sweep):
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
         src = str(REPO_ROOT / "src")
@@ -37,11 +52,12 @@ def run_sharded_scaling(device_counts=(1, 2, 4, 8)):
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
         proc = subprocess.run(
             [sys.executable, "-m", "benchmarks.fed_worker",
-             "--devices", str(ndev)],
+             "--devices", str(ndev), "--fleets", str(nfleet)],
             capture_output=True, text=True, env=env, cwd=REPO_ROOT)
         if proc.returncode != 0:
             raise RuntimeError(
-                f"fed_worker (devices={ndev}) failed:\n{proc.stderr[-4000:]}")
+                f"fed_worker (devices={ndev}, fleets={nfleet}) failed:\n"
+                f"{proc.stderr[-4000:]}")
         for line in proc.stdout.splitlines():
             if line.startswith("fig7/"):
                 name, us, derived = line.split(",", 2)
@@ -72,5 +88,6 @@ def run():
              f"max={pe1.max()};mean={pe1.mean():.0f};"
              f"paper_s3.4.1_temporal_clustering")
 
-    # --- sharded federated runtime: D400 over 1/2/4/8 simulated devices ---
+    # --- sharded federated runtime: D400 over 1/2/4/8 simulated devices on
+    # the 1-D mesh, plus 1/2/4 fleet partitions on the 2-D mesh ---
     run_sharded_scaling()

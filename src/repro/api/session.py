@@ -10,6 +10,7 @@ an edge mesh. The two paths are differentially tested bit-identical
 
     db = AerialDB.open(cfg)                      # single device
     db = AerialDB.open(cfg, mesh=make_edge_mesh(4))   # 4-device federation
+    db = AerialDB.open(cfg, mesh=make_fleet_mesh(2, 2))  # 2 fleets x 2 edges
     db.ingest_rounds(payloads, metas)
     res, info = db.query(Query().bbox(...).time(...).agg("mean", channel=2))
     db.fail_edges(1, 5); ...; db.recover_edges(1, 5)
@@ -48,7 +49,7 @@ from repro.core.datastore import (AggSpec, QueryInfo, QueryResult, StoreConfig,
 from repro.core.index import QueryPred
 from repro.core.placement import ShardMeta
 from repro.distributed import federation as _fed
-from repro.distributed.sharding import (EDGE_AXIS, device_edge_block,
+from repro.distributed.sharding import (device_edge_block, mesh_edge_devices,
                                         shard_store)
 
 __all__ = ["AerialDB"]
@@ -84,8 +85,9 @@ class AerialDB:
 
         Args:
           cfg:   deployment config; None builds ``StoreConfig(**overrides)``.
-          mesh:  optional ``("edge",)`` device mesh
-                 (``launch.mesh.make_edge_mesh``): state is sharded per the
+          mesh:  optional datastore mesh — 1-D ``("edge",)``
+                 (``launch.mesh.make_edge_mesh``) or 2-D ``("fleet", "edge")``
+                 (``launch.mesh.make_fleet_mesh``): state is sharded per the
                  layout contract and every operation runs the federated
                  shard_map path. None = single-device jit path.
           seed:  planner PRNG seed (the facade owns and splits the key).
@@ -239,7 +241,7 @@ class AerialDB:
         session mesh's device blocks (the layout contract)."""
         n = self._cfg.n_failure_domains
         if n == 1 and self._mesh is not None:
-            n = self._mesh.shape[EDGE_AXIS]
+            n = mesh_edge_devices(self._mesh)
         if n == 1:
             raise ValueError(
                 "no failure domains to address: open the session on an edge "

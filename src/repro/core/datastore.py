@@ -73,7 +73,7 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from functools import lru_cache, partial
-from typing import NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +85,37 @@ from repro.core.index import (IndexState, MatchedShards, QueryPred,
                               lookup, retire_entries)
 from repro.core.placement import ShardMeta, place_replicas
 from repro.core.slicing import SliceConfig, spatial_slice_edges, temporal_slice_edges
+
+
+class EdgeCollectives(NamedTuple):
+    """Axis-parameterized collective hook bundle for the shard-local bodies.
+
+    The shard-local bodies (``insert_local`` / ``query_local``) are mesh-
+    agnostic: the two metadata-scale cross-device exchanges they need are
+    injected through this bundle, so the same bodies serve the single-device
+    runtime (identity hooks — ``LOCAL_COLLECTIVES``), the 1-D ``("edge",)``
+    mesh, and the 2-D ``("fleet", "edge")`` cross-host mesh
+    (``distributed.federation.make_collectives`` builds the bundle from the
+    mesh's edge-bearing axes; on the fleet mesh the candidate merge is
+    hierarchical — intra-fleet first, inter-fleet over the reduced set).
+
+      gather_watermark: (E_local,) local retention watermark -> (E,) global
+          (identity on one device; all-gather over the edge-bearing axes
+          under shard_map).
+      combine_matched:  (MatchedShards over local edges, max_shards) ->
+          globally-merged MatchedShards every device plans against
+          (identity on one device; hierarchical all-gather + top-S
+          re-dedup under shard_map — bit-identical to the single-device
+          lookup, see ``index.dedup_matched``).
+    """
+    gather_watermark: Callable
+    combine_matched: Callable
+
+
+#: Identity hooks — the 1-device special case (``edge_ids == arange(E)``).
+LOCAL_COLLECTIVES = EdgeCollectives(
+    gather_watermark=lambda wm: wm,
+    combine_matched=lambda matched, max_shards: matched)
 
 
 def _default_site_grid(n_edges: int) -> Tuple[Tuple[float, float], ...]:
@@ -420,7 +451,7 @@ def _index_edge_mask(cfg: StoreConfig, meta: ShardMeta, replicas: jnp.ndarray,
 
 def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
                  meta: ShardMeta, alive: jnp.ndarray, edge_ids: jnp.ndarray,
-                 gather_watermark=lambda wm: wm):
+                 collectives: EdgeCollectives = LOCAL_COLLECTIVES):
     """Shard-local insert body — placement, replication, indexing.
 
     ``state`` arrays carry a slice of the logical edge axis whose global ids
@@ -429,10 +460,10 @@ def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     are metadata-scale, recomputed replicated on every shard; the tuple
     scatter and index writes touch only the local edges.
 
-    ``gather_watermark`` maps this shard's (E_local,) retention watermark to
-    the global (E,) watermark that ``retire_entries`` needs (entries name
-    replica edges anywhere in the deployment): identity on one device, an
-    all-gather over the "edge" mesh axis under shard_map.
+    ``collectives.gather_watermark`` maps this shard's (E_local,) retention
+    watermark to the global (E,) watermark that ``retire_entries`` needs
+    (entries name replica edges anywhere in the deployment): identity on one
+    device, an all-gather over the mesh's edge-bearing axes under shard_map.
 
     Returns (new_state, info dict) with per-edge info sliced like ``state``.
     """
@@ -503,7 +534,7 @@ def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     wm_local = jax.lax.cond(
         do_sweep, _local_wm,
         lambda _: jnp.full((e_loc,), -jnp.inf, jnp.float32), None)
-    watermark = gather_watermark(wm_local)                       # (E,) global
+    watermark = collectives.gather_watermark(wm_local)           # (E,) global
     index = jax.lax.cond(
         do_sweep, lambda ix: compact_index(retire_entries(ix, watermark)),
         lambda ix: ix, state.index)
@@ -682,21 +713,46 @@ def scan_engine(tup_f, tup_sid, tup_count, pred: QueryPred, sublists,
                               sublist_len, channels=channels, valid_c=valid_c)
 
 
+def _tile_slices(q: int, n_tiles: int):
+    """Split the static query-batch dim into ``min(n_tiles, q)`` contiguous
+    slices, as evenly as possible (sizes differ by at most 1)."""
+    n = max(1, min(n_tiles, q))
+    base, rem = divmod(q, n)
+    out, start = [], 0
+    for i in range(n):
+        size = base + (1 if i < rem else 0)
+        out.append(slice(start, start + size))
+        start += size
+    return out
+
+
 def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
                 alive: jnp.ndarray, key: jax.Array, edge_ids: jnp.ndarray,
-                combine_matched=lambda local: local,
+                collectives: EdgeCollectives = LOCAL_COLLECTIVES,
                 use_kernel: bool = False, interpret: Optional[bool] = None,
-                agg: AggSpec = AggSpec()):
-    """Shard-local query body: index lookup -> planning -> per-edge sub-query
-    scan, over the slice of the edge axis named by ``edge_ids``.
+                agg: AggSpec = AggSpec(), overlap_tiles: int = 1):
+    """Shard-local query body: index lookup -> candidate merge -> planning ->
+    per-edge sub-query scan, over the slice of the edge axis named by
+    ``edge_ids``.
 
     Lookup-set selection and planning are metadata-scale and computed
     replicated from the global ``pred``/``alive``; the index match and the
-    tuple scan touch only local state. ``combine_matched`` merges per-shard
-    candidate lists into the global ``MatchedShards`` every device plans
-    against: identity on one device; under shard_map, an all-gather of each
-    device's local top-S candidates re-deduplicated with
+    tuple scan touch only local state. ``collectives.combine_matched`` merges
+    per-shard candidate lists into the global ``MatchedShards`` every device
+    plans against: identity on one device; under shard_map, a (hierarchical)
+    all-gather of each device's local top-S candidates re-deduplicated with
     ``index.dedup_matched`` (exactly the single-device result — see there).
+
+    Collective/compute overlap: with ``overlap_tiles > 1`` the query batch is
+    split into that many tiles and every tile's index match + candidate merge
+    is issued BEFORE any tile's log scan — the merge collectives of tile t+1
+    (on the fleet mesh: the cross-host inter-fleet exchange) carry no data
+    dependency on tile t's scan, so the latency-hiding scheduler can overlap
+    them (double-buffered at the default ``overlap_tiles=2`` the federated
+    runtime uses on multi-fleet meshes). Every per-query computation here —
+    lookup, dedup, planning (per-query folded PRNG keys), OR-list build, scan
+    — is query-independent, so results are bitwise invariant to the tiling;
+    the differential harness pins that.
 
     Returns (partials, sublist_len, (lookup_mask, broadcast, overflow,
     shards_matched, replicas_lost, completeness_bound)): ``partials`` are the
@@ -715,23 +771,61 @@ def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
     lookup_mask, broadcast = _lookup_sets(cfg, pred, sites, alive)   # (Q, E)
     lookup_loc = jnp.take(lookup_mask, edge_ids, axis=1)             # (Q, E_loc)
 
-    if cfg.use_index:
-        matched = combine_matched(
-            lookup(state.index, pred, lookup_loc, s))
-        assignment = planner_lib.plan(cfg.planner, matched, alive, key)  # (Q, S)
+    if not cfg.use_index:
+        # Broadcast baseline (Feather-like): no shard scoping; every alive
+        # edge scans everything. StoreConfig rejects use_index=False with
+        # replication > 1, which would overcount ~R-fold here. No candidate
+        # merge means nothing to overlap — the batch stays untiled.
+        alive_loc = jnp.take(alive, edge_ids)
+        sublists = jnp.zeros((q, e_loc, 1, 2), jnp.int32)
+        sublist_len = jnp.where(jnp.broadcast_to(alive_loc, (q, e_loc)),
+                                -1, 0).astype(jnp.int32)
+        ovf = jnp.zeros((q,), jnp.bool_)
+        shards_matched = jnp.full((q,), -1, jnp.int32)
+        # No index: no shard tracking, so completeness is unknowable here.
+        replicas_lost = jnp.zeros((q,), jnp.int32)
+        bound = jnp.full((q,), jnp.nan, jnp.float32)
+        partials = scan_engine(state.tup_f, state.tup_sid, state.tup_count,
+                               pred, sublists, sublist_len, use_kernel,
+                               interpret, channels=agg.channels,
+                               valid_c=cfg.tuple_capacity)
+        return partials, sublist_len, (lookup_mask, broadcast, ovf,
+                                       shards_matched, replicas_lost, bound)
+
+    # Per-query planner keys (key folded with the GLOBAL query index), so
+    # planner randomness is invariant to the tiling below.
+    qkeys = jax.vmap(jax.random.fold_in, (None, 0))(key,
+                                                    jnp.arange(q))
+
+    # Phase 1 — index match + candidate merge for EVERY tile up front: all
+    # cross-device exchanges are issued before any log scan.
+    tiles = _tile_slices(q, overlap_tiles)
+    pred_tiles = [jax.tree.map(lambda a: a[sl], pred) for sl in tiles]
+    matched_tiles = [
+        collectives.combine_matched(
+            lookup(state.index, p, lookup_loc[sl], s), s)
+        for sl, p in zip(tiles, pred_tiles)]
+
+    # Phase 2 — plan + per-edge OR-lists + single-pass scan, per tile (tile
+    # t's scan is dependency-free of tile t+1's in-flight merge).
+    outs = []
+    for sl, p, matched in zip(tiles, pred_tiles, matched_tiles):
+        qt = p.lat0.shape[0]
+        assignment = planner_lib.plan(cfg.planner, matched, alive,
+                                      qkeys[sl])                  # (Qt, S)
         # Per-edge OR-lists: rank of shard within its assigned edge.
-        am = (assignment[..., None] == edge_ids)                      # (Q, S, E_loc)
+        am = (assignment[..., None] == edge_ids)                  # (Qt, S, E_loc)
         rank = jnp.cumsum(am, axis=1) - 1
         pos = jnp.where(am, rank, s)
-        sublists = jnp.full((q, e_loc, s, 2), -1, jnp.int32)
-        qq = jnp.broadcast_to(jnp.arange(q, dtype=jnp.int32)[:, None, None],
-                              (q, s, e_loc))
+        sublists = jnp.full((qt, e_loc, s, 2), -1, jnp.int32)
+        qq = jnp.broadcast_to(jnp.arange(qt, dtype=jnp.int32)[:, None, None],
+                              (qt, s, e_loc))
         ee = jnp.broadcast_to(jnp.arange(e_loc, dtype=jnp.int32)[None, None, :],
-                              (q, s, e_loc))
-        sidv = jnp.stack([matched.sid_hi, matched.sid_lo], axis=-1)   # (Q, S, 2)
-        sidv = jnp.broadcast_to(sidv[:, :, None, :], (q, s, e_loc, 2))
+                              (qt, s, e_loc))
+        sidv = jnp.stack([matched.sid_hi, matched.sid_lo], axis=-1)  # (Qt, S, 2)
+        sidv = jnp.broadcast_to(sidv[:, :, None, :], (qt, s, e_loc, 2))
         sublists = sublists.at[qq, ee, pos].set(sidv, mode="drop")
-        sublist_len = jnp.sum(am, axis=1).astype(jnp.int32)           # (Q, E_loc)
+        sublist_len = jnp.sum(am, axis=1).astype(jnp.int32)       # (Qt, E_loc)
         ovf = matched.overflow
         shards_matched = jnp.sum(matched.valid, axis=-1)
         # Degraded-query accounting (replicated metadata, like planning):
@@ -747,23 +841,21 @@ def query_local(cfg: StoreConfig, state: StoreState, pred: QueryPred,
         bound = jnp.where(shards_matched > 0,
                           assigned_n / jnp.maximum(shards_matched, 1), 1.0)
         bound = jnp.where(ovf, jnp.nan, bound).astype(jnp.float32)
-    else:
-        # Broadcast baseline (Feather-like): no shard scoping; every alive
-        # edge scans everything. StoreConfig rejects use_index=False with
-        # replication > 1, which would overcount ~R-fold here.
-        alive_loc = jnp.take(alive, edge_ids)
-        sublists = jnp.zeros((q, e_loc, 1, 2), jnp.int32)
-        sublist_len = jnp.where(jnp.broadcast_to(alive_loc, (q, e_loc)),
-                                -1, 0).astype(jnp.int32)
-        ovf = jnp.zeros((q,), jnp.bool_)
-        shards_matched = jnp.full((q,), -1, jnp.int32)
-        # No index: no shard tracking, so completeness is unknowable here.
-        replicas_lost = jnp.zeros((q,), jnp.int32)
-        bound = jnp.full((q,), jnp.nan, jnp.float32)
+        partials = scan_engine(state.tup_f, state.tup_sid, state.tup_count,
+                               p, sublists, sublist_len, use_kernel,
+                               interpret, channels=agg.channels,
+                               valid_c=cfg.tuple_capacity)
+        outs.append((partials, sublist_len, ovf, shards_matched,
+                     replicas_lost, bound))
 
-    partials = scan_engine(state.tup_f, state.tup_sid, state.tup_count, pred,
-                           sublists, sublist_len, use_kernel, interpret,
-                           channels=agg.channels, valid_c=cfg.tuple_capacity)
+    if len(outs) == 1:
+        partials, sublist_len, ovf, shards_matched, replicas_lost, bound = \
+            outs[0]
+    else:
+        cat = lambda xs: jnp.concatenate(xs, axis=0)
+        partials = tuple(cat([o[0][i] for o in outs]) for i in range(4))
+        sublist_len, ovf, shards_matched, replicas_lost, bound = (
+            cat([o[j] for o in outs]) for j in range(1, 6))
     return partials, sublist_len, (lookup_mask, broadcast, ovf, shards_matched,
                                    replicas_lost, bound)
 

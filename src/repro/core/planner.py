@@ -33,12 +33,25 @@ def _alive_replica_mask(matched: MatchedShards, alive: jnp.ndarray) -> jnp.ndarr
 
 def plan_random(matched: MatchedShards, alive: jnp.ndarray,
                 key: jax.Array) -> jnp.ndarray:
-    """(Q, S) int32 edge per shard, -1 where unassignable."""
+    """(Q, S) int32 edge per shard, -1 where unassignable.
+
+    ``key`` is either one key (folded with each query index internally) or a
+    (Q,) batch of per-query keys. Both forms draw the same gumbels for the
+    same global query index, so callers that tile the query batch (the
+    compute-overlapped federated merge) stay bitwise identical to the untiled
+    plan as long as they fold against GLOBAL indices and slice."""
     ok = _alive_replica_mask(matched, alive)
-    g = jax.random.gumbel(key, ok.shape)
-    pick = jnp.argmax(jnp.where(ok, g, -jnp.inf), axis=-1)
-    edge = jnp.take_along_axis(matched.replicas, pick[..., None], axis=-1)[..., 0]
-    return jnp.where(jnp.any(ok, axis=-1), edge, -1).astype(jnp.int32)
+    q = ok.shape[0]
+    if jnp.shape(key) == ():
+        key = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(q))
+
+    def per_query(k, okq, repsq):
+        g = jax.random.gumbel(k, okq.shape)                     # (S, 3)
+        pick = jnp.argmax(jnp.where(okq, g, -jnp.inf), axis=-1)
+        edge = jnp.take_along_axis(repsq, pick[..., None], axis=-1)[..., 0]
+        return jnp.where(jnp.any(okq, axis=-1), edge, -1).astype(jnp.int32)
+
+    return jax.vmap(per_query)(key, ok, matched.replicas)
 
 
 def _coverage(ok: jnp.ndarray, reps: jnp.ndarray, unassigned: jnp.ndarray,

@@ -1,38 +1,54 @@
 """Sharded federated runtime: the datastore partitioned over a device mesh.
 
-The paper's federation story at device scale — a 1-D ``("edge",)`` mesh
-(``launch.mesh.make_edge_mesh``) where each device plays a block of
-``E / n_devices`` ground edge servers, holding exactly those edges' slice of
+The paper's federation story at device scale — a datastore mesh whose
+*edge-bearing axes* (``distributed.sharding.mesh_edge_axes``) partition the
+logical edge axis: the 1-D ``("edge",)`` mesh (``launch.mesh.make_edge_mesh``)
+where each device plays a block of ``E / n_devices`` ground edge servers, or
+the 2-D ``("fleet", "edge")`` cross-host mesh (``launch.mesh.make_fleet_mesh``)
+where each host owns one fleet partition and the edge axis splits over the
+axis product, fleet-major. Each device holds exactly its edges' slice of
 every ``StoreState`` array (leading logical-E dim; contract in
 ``distributed.sharding.store_partition_specs``). The shard-local bodies in
 ``core.datastore`` (``insert_local`` / ``query_local``) run under ``shard_map``
-so the tuple scatter, the index writes, and the per-edge predicate scan are
-all device-local; cross-device traffic is tuple-volume independent:
+with the axis-parameterized ``EdgeCollectives`` bundle built here
+(``make_collectives``), so the tuple scatter, the index writes, and the
+per-edge predicate scan are all device-local; cross-device traffic is
+tuple-volume independent:
 
   * insert — one (E,) all-gather of per-edge retention watermarks (entries
     name replica edges anywhere, so retirement needs every edge's watermark);
-  * query  — one all-gather of each device's local top-S candidate shards,
-    re-deduplicated replicated (``index.dedup_matched``: distributed top-k,
-    bit-identical to the single-device lookup), then the final (Q, E) -> (Q,)
-    combine of per-edge partial aggregates;
+  * query  — a *hierarchical* merge of each device's local top-S candidate
+    shards (``_merge_matched``): intra-fleet all-gather + top-S reduce first
+    (on-host under the fleet mesh), then the inter-fleet collective over the
+    already-reduced S-sized set — re-deduplicated replicated at each level
+    (``index.dedup_matched``: distributed top-k, bit-identical to the
+    single-device lookup), then the final (Q, E) -> (Q,) combine of per-edge
+    partial aggregates. On multi-fleet meshes the query batch is split into
+    double-buffered tiles (``query_local``'s ``overlap_tiles=2``): every
+    tile's merge collectives are issued before any tile's log scan, so the
+    cross-host exchange overlaps device-local compute — bitwise identical to
+    the untiled plan (per-query folded planner keys);
 
 everything else (placement, slice masks, planning) is metadata-scale and
 recomputed replicated. ``tests/test_federation.py`` is the differential
-harness proving both paths produce identical results and states.
+harness proving the single-device, 1-D, and 2-D paths produce identical
+results and states.
 
 Sustained ingest goes through ``ingest_rounds`` — a fused ``lax.scan`` over
 collection rounds that replaces Python-loop round-tripping (one dispatch, no
 per-round host sync) and **donates** the store so the tuple ring is updated
 in place instead of double-allocating (donation is a no-op on CPU backends).
 
-Paper-scale runs (80 edges / 400 drones over 1/2/4/8 simulated devices) are
-driven by ``benchmarks/fig7_insertion_scaling.py`` via
-``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+Paper-scale runs (80 edges / 400 drones over 1/2/4/8 simulated devices and
+1/2/4 fleets) are driven by ``benchmarks/fig7_insertion_scaling.py`` via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``; the true
+multi-process cross-host path (one process per fleet,
+``launch.mesh.init_fleet_processes``) by ``benchmarks/multihost_smoke.py``.
 """
 
 from __future__ import annotations
 
-from functools import lru_cache, partial
+from functools import lru_cache
 from typing import Optional
 
 import jax
@@ -41,32 +57,28 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.core.datastore import (AggSpec, StoreConfig, StoreState,
-                                  check_batch_fits, finalize_query,
-                                  insert_local, query_local)
+from repro.core.datastore import (AggSpec, EdgeCollectives, LOCAL_COLLECTIVES,
+                                  StoreConfig, StoreState, check_batch_fits,
+                                  finalize_query, insert_local, query_local)
 from repro.core.index import MatchedShards, dedup_matched
 from repro.core.placement import ShardMeta
-from repro.distributed.sharding import (EDGE_AXIS, shard_store,
+from repro.distributed.sharding import (check_edge_partition, mesh_edge_axes,
+                                        mesh_edge_devices, shard_store,
                                         store_partition_specs)
 
 __all__ = [
     "federated_insert_step", "federated_query_step", "ingest_rounds",
-    "shard_store", "store_partition_specs",
+    "make_collectives", "shard_store", "store_partition_specs",
 ]
 
 
 def check_edge_mesh(cfg: StoreConfig, mesh: Mesh) -> int:
-    """Validate the mesh against the deployment; returns the device count."""
-    if EDGE_AXIS not in mesh.shape:
-        raise ValueError(
-            f"mesh axes {tuple(mesh.shape)} lack the '{EDGE_AXIS}' axis; "
-            "build the datastore mesh with launch.mesh.make_edge_mesh.")
-    n_dev = mesh.shape[EDGE_AXIS]
-    if cfg.n_edges % n_dev:
-        raise ValueError(
-            f"n_edges={cfg.n_edges} is not divisible by the edge-mesh size "
-            f"{n_dev}: every device must host the same number of edges "
-            "(contiguous blocks of the leading E axis).")
+    """Validate the mesh against the deployment; returns the number of edge
+    partitions (the edge-bearing axis product — device count for a pure
+    datastore mesh)."""
+    n_dev = mesh_edge_devices(mesh)  # raises without an "edge" axis
+    check_edge_partition(cfg.n_edges, n_dev,
+                         f"the edge mesh {dict(mesh.shape)}")
     if cfg.n_failure_domains > 1 and n_dev % cfg.n_failure_domains:
         raise ValueError(
             f"n_failure_domains={cfg.n_failure_domains} is incompatible with "
@@ -84,11 +96,12 @@ def _replicated_like(tree):
     return jax.tree.map(lambda _: P(), tree)
 
 
-def _insert_info_specs(scanned: bool):
+def _insert_info_specs(scanned: bool, axes: tuple):
     """PartitionSpec tree for the insert info dict. Per-edge telemetry is
-    sharded like the state; replicas and the (post-gather) watermark are
-    replicated. ``scanned`` adds the leading rounds dim of ``ingest_rounds``."""
-    per_edge = P(None, EDGE_AXIS) if scanned else P(EDGE_AXIS)
+    sharded like the state (over the edge-bearing ``axes``); replicas and the
+    (post-gather) watermark are replicated. ``scanned`` adds the leading
+    rounds dim of ``ingest_rounds``."""
+    per_edge = P(None, axes) if scanned else P(axes)
     return {
         "replicas": P(),
         "intake_per_edge": per_edge,
@@ -100,43 +113,77 @@ def _insert_info_specs(scanned: bool):
     }
 
 
-def _gather_watermark(wm_local: jnp.ndarray) -> jnp.ndarray:
-    return jax.lax.all_gather(wm_local, EDGE_AXIS, axis=0, tiled=True)
+def _gather_watermark(wm_local: jnp.ndarray, axes: tuple) -> jnp.ndarray:
+    """(E_local,) -> (E,) over the edge-bearing axis product. A tuple-axis
+    all-gather concatenates major axis outermost — exactly the fleet-major
+    edge-block order of the layout contract."""
+    return jax.lax.all_gather(wm_local, axes, axis=0, tiled=True)
 
 
-def _merge_matched(local: MatchedShards, max_shards: int) -> MatchedShards:
-    """Merge per-device candidate lists into the global MatchedShards.
-
-    Each device contributes its local top-``max_shards`` distinct sids (in
-    dedup_matched's canonical ascending order); gathering those lists and
-    re-deduplicating yields exactly the single-device lookup result — any sid
-    missing from a local top list is preceded by >= max_shards smaller sids on
-    that device alone, so it cannot be in the global top-``max_shards``
-    either. Overflow is the OR of local overflows (a device that clipped has
-    > max_shards distinct sids globally too) and the merged count test.
-    """
-    cat = lambda x: jax.lax.all_gather(x, EDGE_AXIS, axis=1, tiled=True)
+def _merge_axis(local: MatchedShards, max_shards: int,
+                axis: str) -> MatchedShards:
+    """One merge level: all-gather each participant's top-S list along one
+    mesh axis and re-deduplicate back down to top-S."""
+    cat = lambda x: jax.lax.all_gather(x, axis, axis=1, tiled=True)
     merged = dedup_matched(cat(local.valid), cat(local.sid_hi),
                            cat(local.sid_lo), cat(local.replicas), max_shards)
     any_local_ovf = jnp.any(
-        jax.lax.all_gather(local.overflow, EDGE_AXIS, axis=0, tiled=False),
+        jax.lax.all_gather(local.overflow, axis, axis=0, tiled=False),
         axis=0)
     return merged._replace(overflow=merged.overflow | any_local_ovf)
 
 
+def _merge_matched(local: MatchedShards, max_shards: int,
+                   axes: tuple) -> MatchedShards:
+    """Hierarchically merge per-device candidate lists into the global
+    MatchedShards, innermost mesh axis first: on the ("fleet", "edge") mesh
+    that is an intra-fleet all-gather + top-S reduce (on-host), then the
+    inter-fleet collective over the already-reduced set — each level moves
+    only S-sized lists, so the cross-host hop is max_shards wide regardless
+    of fleet size.
+
+    Exactness at every level: each participant contributes its top-
+    ``max_shards`` distinct sids (in dedup_matched's canonical ascending
+    order); gathering those lists and re-deduplicating yields exactly the
+    flat-merge result — any sid missing from a contributed top list is
+    preceded by >= max_shards smaller sids on that participant alone, so it
+    cannot be in the merged top-``max_shards`` either; by the same argument
+    the level outputs compose (distributed top-k transitivity). Overflow is
+    the OR of participant overflows (a participant that clipped has
+    > max_shards distinct sids globally too) and each level's merged count
+    test — identical to the flat overflow bit.
+    """
+    for ax in reversed(axes):
+        local = _merge_axis(local, max_shards, ax)
+    return local
+
+
+def make_collectives(axes: tuple) -> EdgeCollectives:
+    """The axis-parameterized collective-hook bundle for the shard-local
+    bodies: watermark all-gather over the edge-bearing axis product and the
+    hierarchical candidate merge. ``axes`` comes from ``mesh_edge_axes``;
+    the identity bundle (no mesh) is ``datastore.LOCAL_COLLECTIVES``."""
+    axes = tuple(axes)
+    return EdgeCollectives(
+        gather_watermark=lambda wm: _gather_watermark(wm, axes),
+        combine_matched=lambda matched, s: _merge_matched(matched, s, axes))
+
+
 @lru_cache(maxsize=None)
 def _insert_fn(cfg: StoreConfig, mesh: Mesh):
-    state_specs = store_partition_specs()
+    axes = mesh_edge_axes(mesh)
+    state_specs = store_partition_specs(axes)
     meta_specs = _replicated_like(ShardMeta(*ShardMeta._fields))
+    collectives = make_collectives(axes)
 
     def body(state, payload, meta, alive, edge_ids):
         return insert_local(cfg, state, payload, meta, alive, edge_ids,
-                            gather_watermark=_gather_watermark)
+                            collectives=collectives)
 
     sharded = shard_map(
         body, mesh=mesh,
-        in_specs=(state_specs, P(), meta_specs, P(), P(EDGE_AXIS)),
-        out_specs=(state_specs, _insert_info_specs(scanned=False)),
+        in_specs=(state_specs, P(), meta_specs, P(), P(axes)),
+        out_specs=(state_specs, _insert_info_specs(False, axes)),
         check_rep=False)
 
     def step(state, payload, meta, alive):
@@ -149,8 +196,8 @@ def _insert_fn(cfg: StoreConfig, mesh: Mesh):
 def federated_insert_step(cfg: StoreConfig, state: StoreState,
                           payload: jnp.ndarray, meta: ShardMeta,
                           alive: jnp.ndarray, mesh: Mesh):
-    """``insert_step`` over an edge mesh: identical semantics, state sharded
-    per ``store_partition_specs``, device-local tuple/index writes."""
+    """``insert_step`` over a datastore mesh: identical semantics, state
+    sharded per ``store_partition_specs``, device-local tuple/index writes."""
     check_edge_mesh(cfg, mesh)
     check_batch_fits(cfg, payload.shape)
     return _insert_fn(cfg, mesh)(state, payload, meta, alive)
@@ -158,15 +205,15 @@ def federated_insert_step(cfg: StoreConfig, state: StoreState,
 
 @lru_cache(maxsize=None)
 def _ingest_fn(cfg: StoreConfig, mesh: Optional[Mesh]):
-    state_specs = store_partition_specs()
     meta_specs = _replicated_like(ShardMeta(*ShardMeta._fields))
-    gather = _gather_watermark if mesh is not None else (lambda wm: wm)
+    collectives = (make_collectives(mesh_edge_axes(mesh))
+                   if mesh is not None else LOCAL_COLLECTIVES)
 
     def run(state, payloads, metas, alive, edge_ids):
         def round_body(carry, xs):
             payload, meta = xs
             return insert_local(cfg, carry, payload, meta, alive, edge_ids,
-                                gather_watermark=gather)
+                                collectives=collectives)
         return jax.lax.scan(round_body, state, (payloads, metas))
 
     if mesh is None:
@@ -175,10 +222,12 @@ def _ingest_fn(cfg: StoreConfig, mesh: Optional[Mesh]):
             return run(state, payloads, metas, alive, edge_ids)
         return jax.jit(single, donate_argnums=(0,))
 
+    axes = mesh_edge_axes(mesh)
+    state_specs = store_partition_specs(axes)
     sharded = shard_map(
         run, mesh=mesh,
-        in_specs=(state_specs, P(), meta_specs, P(), P(EDGE_AXIS)),
-        out_specs=(state_specs, _insert_info_specs(scanned=True)),
+        in_specs=(state_specs, P(), meta_specs, P(), P(axes)),
+        out_specs=(state_specs, _insert_info_specs(True, axes)),
         check_rep=False)
 
     def multi(state, payloads, metas, alive):
@@ -200,7 +249,7 @@ def ingest_rounds(cfg: StoreConfig, state: StoreState, payloads, metas,
       payloads: (N, B, R, 3+V) — N rounds of B shards.
       metas:    ShardMeta with (N, B) fields.
       alive:    (E,) availability mask, held fixed across the N rounds.
-      mesh:     optional edge mesh; None runs the 1-device jit path.
+      mesh:     optional datastore mesh; None runs the 1-device jit path.
 
     Returns (state, info) with every info entry stacked over the N rounds.
     """
@@ -215,30 +264,35 @@ def ingest_rounds(cfg: StoreConfig, state: StoreState, payloads, metas,
 @lru_cache(maxsize=None)
 def _query_fn(cfg: StoreConfig, mesh: Mesh, use_kernel: bool,
               interpret: Optional[bool], channels: tuple):
-    state_specs = store_partition_specs()
-    s = cfg.max_shards_per_query
+    axes = mesh_edge_axes(mesh)
+    state_specs = store_partition_specs(axes)
+    collectives = make_collectives(axes)
+    # Double-buffer the query batch on multi-fleet meshes so tile t+1's
+    # cross-host merge overlaps tile t's device-local log scan; single-axis
+    # meshes keep the untiled plan (the merge is on-host there).
+    overlap_tiles = 2 if len(axes) > 1 else 1
 
     def body(state, pred, alive, key_data, edge_ids):
         key = jax.random.wrap_key_data(key_data)
         partials, sublist_len, meta_info = query_local(
             cfg, state, pred, alive, key, edge_ids,
-            combine_matched=partial(_merge_matched, max_shards=s),
+            collectives=collectives,
             use_kernel=use_kernel, interpret=interpret,
-            agg=AggSpec(channels=channels))
+            agg=AggSpec(channels=channels), overlap_tiles=overlap_tiles)
         return partials, sublist_len, meta_info
 
     # Partials: channel-independent (Q, E) count + per-channel (Q, K, E)
     # value aggregates — the edge axis stays last, so the final combine's
-    # reduction axis is the mesh axis in both cases.
-    partial_specs = (P(None, EDGE_AXIS),) + (P(None, None, EDGE_AXIS),) * 3
+    # reduction axis is the (edge-bearing) mesh axes in both cases.
+    partial_specs = (P(None, axes),) + (P(None, None, axes),) * 3
 
     def outer(state, pred, alive, key_data):
         edge_ids = jnp.arange(cfg.n_edges, dtype=jnp.int32)
         sharded = shard_map(
             body, mesh=mesh,
             in_specs=(state_specs, _replicated_like(pred), P(), P(),
-                      P(EDGE_AXIS)),
-            out_specs=(partial_specs, P(None, EDGE_AXIS),
+                      P(axes)),
+            out_specs=(partial_specs, P(None, axes),
                        (P(),) * 6),
             check_rep=False)
         partials, sublist_len, meta_info = \
@@ -257,10 +311,10 @@ def federated_query_step(cfg: StoreConfig, state: StoreState, pred,
                          use_kernel: bool = False,
                          interpret: Optional[bool] = None,
                          agg: AggSpec = AggSpec()):
-    """``query_step`` over an edge mesh: device-local index match + tuple
-    scan, metadata-scale candidate merge, replicated planning, and a final
-    cross-device (Q, K, E) combine. ``agg`` (static) selects the sensor
-    channel tuple and aggregate set; the device-local scan produces
+    """``query_step`` over a datastore mesh: device-local index match + tuple
+    scan, metadata-scale hierarchical candidate merge, replicated planning,
+    and a final cross-device (Q, K, E) combine. ``agg`` (static) selects the
+    sensor channel tuple and aggregate set; the device-local scan produces
     per-channel per-edge partials for every requested channel in ONE pass
     over the local log, and ``finalize_query``'s combine (including the
     derived mean) stays the only cross-device reduction. Only

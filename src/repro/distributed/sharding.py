@@ -3,8 +3,13 @@
 Two sharding domains live here:
 
 * the **datastore** edge axis — every ``StoreState`` array carries the
-  logical edge axis E in front, partitioned over a 1-D ``("edge",)`` mesh
-  (``launch.mesh.make_edge_mesh``); ``store_partition_specs`` is the
+  logical edge axis E in front, partitioned over the mesh's *edge-bearing
+  axes*: a 1-D ``("edge",)`` mesh (``launch.mesh.make_edge_mesh``) or a 2-D
+  ``("fleet", "edge")`` mesh (``launch.mesh.make_fleet_mesh``) where each
+  host (or host-group) owns one fleet partition and the logical edge axis is
+  split over the *product* of both axes, fleet-major. ``mesh_edge_axes``
+  resolves a mesh to its edge-bearing axis tuple (the 1-D mesh is the
+  degenerate ``n_fleet == 1`` case); ``store_partition_specs`` is the
   PartitionSpec tree of that contract, used by ``distributed.federation``'s
   shard_map in/out specs and by ``shard_store`` for device placement;
 
@@ -34,20 +39,64 @@ from repro.models.layers import EXP, FSDP, TP
 
 
 EDGE_AXIS = "edge"
+FLEET_AXIS = "fleet"
 
 
-def store_partition_specs():
+def check_edge_partition(n_edges: int, n_blocks: int,
+                         what: str = "the edge mesh") -> int:
+    """The one divisibility check of the sharded-state layout contract,
+    shared by both mesh factories (``launch.mesh.make_edge_mesh`` /
+    ``make_fleet_mesh``), ``federation.check_edge_mesh`` and
+    ``device_edge_block``: the logical edge axis splits into equal contiguous
+    blocks, one per partition. Returns the block size ``n_edges // n_blocks``.
+    """
+    if n_blocks < 1 or n_edges % n_blocks:
+        raise ValueError(
+            f"n_edges={n_edges} is not divisible by {what} size {n_blocks}: "
+            "every device must host the same number of edges (equal "
+            "contiguous blocks of the leading E axis). Pick an edge/device "
+            "count pair with n_edges % n_devices == 0.")
+    return n_edges // n_blocks
+
+
+def mesh_edge_axes(mesh: Mesh) -> tuple:
+    """The mesh's *edge-bearing axes*, fleet-major: the logical edge axis is
+    partitioned over their product. ``("edge",)`` for the 1-D datastore mesh,
+    ``("fleet", "edge")`` for the 2-D cross-host fleet mesh — the 1-D mesh is
+    exactly the ``n_fleet == 1`` degenerate case of the same contract."""
+    axes = tuple(n for n in mesh.axis_names if n in (FLEET_AXIS, EDGE_AXIS))
+    if EDGE_AXIS not in axes:
+        raise ValueError(
+            f"mesh axes {tuple(mesh.axis_names)} lack the '{EDGE_AXIS}' "
+            "axis; build the datastore mesh with launch.mesh.make_edge_mesh "
+            "or launch.mesh.make_fleet_mesh.")
+    return axes
+
+
+def mesh_edge_devices(mesh: Mesh) -> int:
+    """Number of edge partitions a mesh carries: the product of its
+    edge-bearing axis sizes (= device count for a pure datastore mesh)."""
+    n = 1
+    for ax in mesh_edge_axes(mesh):
+        n *= mesh.shape[ax]
+    return n
+
+
+def store_partition_specs(edge_axes=(EDGE_AXIS,)):
     """StoreState-shaped PartitionSpec tree of the sharded-state layout
     contract: every per-edge array (leading logical-E dim, including the
-    nested IndexState) is partitioned over the mesh "edge" axis; the scalar
-    step counter replicates. Dims beyond the leading one replicate — in
-    particular the column-major tuple log's (field-row, lane-padded tuple)
-    trailing dims live whole on each edge's device, so the contract is
-    layout-agnostic: each device holds its edges' complete logs whichever
-    axis is minor."""
+    nested IndexState) is partitioned over the mesh's edge-bearing axes
+    (``("edge",)``, or ``("fleet", "edge")`` for the 2-D fleet mesh — the
+    leading dim splits over the axis *product*, fleet-major, so each device
+    still hosts one contiguous edge block); the scalar step counter
+    replicates. Dims beyond the leading one replicate — in particular the
+    column-major tuple log's (field-row, lane-padded tuple) trailing dims
+    live whole on each edge's device, so the contract is layout-agnostic:
+    each device holds its edges' complete logs whichever axis is minor."""
     from repro.core.datastore import StoreState
     from repro.core.index import IndexState
-    edge = P(EDGE_AXIS)
+    edge_axes = tuple(edge_axes)
+    edge = P(edge_axes)
     return StoreState(
         index=IndexState(ent_f=edge, ent_i=edge, valid=edge, cursor=edge,
                          dropped=edge, retired=edge),
@@ -59,24 +108,24 @@ def device_edge_block(n_edges: int, n_devices: int, device: int) -> range:
     """Global edge ids hosted by mesh device ``device`` under the layout
     contract (contiguous blocks of ``E / n_devices`` along the leading edge
     axis) — the failure-domain resolution used by ``AerialDB.fail_device``:
-    a device loss takes out exactly this block."""
-    if n_devices < 1 or n_edges % n_devices:
-        raise ValueError(
-            f"n_edges={n_edges} must be a positive multiple of n_devices="
-            f"{n_devices} (layout contract: equal contiguous blocks).")
+    a device loss takes out exactly this block. On the 2-D fleet mesh,
+    ``device`` is the flat (fleet-major) partition index and ``n_devices``
+    the axis product — block d of fleet f is flat device
+    ``f * n_edge_per_fleet + d``."""
+    block = check_edge_partition(n_edges, n_devices, "the device block count")
     if not 0 <= device < n_devices:
         raise ValueError(
             f"device={device} out of range: the edge mesh has {n_devices} "
             f"devices (valid ids 0..{n_devices - 1}).")
-    block = n_edges // n_devices
     return range(device * block, (device + 1) * block)
 
 
 def shard_store(state, mesh: Mesh):
-    """Place a StoreState onto an edge mesh per ``store_partition_specs``
-    (leading-E dim split into contiguous per-device blocks)."""
+    """Place a StoreState onto a datastore mesh per ``store_partition_specs``
+    (leading-E dim split into contiguous per-device blocks over the mesh's
+    edge-bearing axes)."""
     leaves, treedef = jax.tree.flatten(state)
-    specs = jax.tree.flatten(store_partition_specs(),
+    specs = jax.tree.flatten(store_partition_specs(mesh_edge_axes(mesh)),
                              is_leaf=lambda x: isinstance(x, P))[0]
     placed = [jax.device_put(x, NamedSharding(mesh, s))
               for x, s in zip(leaves, specs)]

@@ -2,9 +2,11 @@
 
 The core equivalence oracle: the same inserts and queries driven through the
 single-device jit path (``insert_step``/``query_step``) and through the
-shard_map path (``distributed.federation``) on a forced 4-host-device
-``("edge",)`` mesh must produce identical ``StoreState`` (bitwise — the
-sharded path scatters the same values into the same slots) and identical
+shard_map path (``distributed.federation``) on a forced 4-host-device mesh —
+parametrized over the 1-D ``(4,) ("edge",)`` layout AND the 2-D ``(2, 2)
+("fleet", "edge")`` cross-host layout (hierarchical merge + double-buffered
+query tiling) — must produce identical ``StoreState`` (bitwise — the sharded
+path scatters the same values into the same slots) and identical
 ``QueryResult``/``QueryInfo``. The only tolerated difference is ``vsum`` (and
 the derived ``vmean``), where the final (Q, E) combine crosses devices and
 float accumulation order may differ; counts/min/max/telemetry are
@@ -32,7 +34,8 @@ from repro.data.synthetic import CityConfig, DroneFleet, make_sites
 from repro.distributed.federation import (federated_insert_step,
                                           federated_query_step, ingest_rounds,
                                           shard_store, store_partition_specs)
-from repro.launch.mesh import make_edge_mesh
+from repro.distributed.sharding import mesh_edge_axes, mesh_edge_devices
+from repro.launch.mesh import make_edge_mesh, make_fleet_mesh
 
 N_DEV = 4
 E = 8
@@ -88,9 +91,15 @@ def assert_queries_identical(r1, i1, r2, i2):
                                       np.asarray(getattr(i2, f)), err_msg=f)
 
 
-@pytest.fixture(scope="module")
-def mesh():
-    return make_edge_mesh(N_DEV)
+@pytest.fixture(scope="module", params=["edge4", "fleet2x2"])
+def mesh(request):
+    """Every mesh-driven test below runs on BOTH datastore layouts: the 1-D
+    ``(4,) ("edge",)`` mesh and the 2-D ``(2, 2) ("fleet", "edge")`` mesh
+    (hierarchical candidate merge + double-buffered query tiling) — the
+    same 4 devices, two mesh contracts, one single-device oracle."""
+    if request.param == "edge4":
+        return make_edge_mesh(N_DEV)
+    return make_fleet_mesh(2, N_DEV // 2)
 
 
 @pytest.fixture(scope="module")
@@ -409,15 +418,46 @@ def test_fused_ingest_matches_python_loop():
 
 def test_store_sharding_layout(mesh):
     """shard_store realizes the layout contract: leading-E arrays split into
-    E/n_dev contiguous blocks, one per device; the step counter replicates."""
+    E/n_dev contiguous blocks, one per device (fleet-major on the 2-D mesh);
+    the step counter replicates."""
     cfg = make_cfg()
     state = shard_store(init_store(cfg), mesh)
     assert len(state.tup_f.sharding.device_set) == N_DEV
     shard_shapes = {s.data.shape for s in state.tup_f.addressable_shards}
     assert shard_shapes == {(E // N_DEV,) + state.tup_f.shape[1:]}
     assert state.steps.sharding.is_fully_replicated
-    specs = store_partition_specs()
-    assert specs.tup_f.index("edge") == 0
+    axes = mesh_edge_axes(mesh)
+    assert mesh_edge_devices(mesh) == N_DEV
+    specs = store_partition_specs(axes)
+    assert specs.tup_f[0] == axes  # leading E dim over the axis product
+
+
+def test_partition_specs_congruent_with_state(mesh):
+    """Property: the ``store_partition_specs`` pytree is structure-congruent
+    with ``StoreState`` (including the nested ``IndexState``) under both the
+    1-D and 2-D mesh contracts, and every per-edge leaf (leading logical-E
+    dim) is partitioned over exactly the mesh's edge-bearing axes — so a
+    future state field can't silently ship replicated-by-default or with a
+    missing spec."""
+    from jax.sharding import PartitionSpec as P
+    cfg = make_cfg()
+    state = init_store(cfg)
+    axes = mesh_edge_axes(mesh)
+    specs = store_partition_specs(axes)
+    is_spec = lambda x: isinstance(x, P)
+    assert (jax.tree.structure(specs, is_leaf=is_spec)
+            == jax.tree.structure(state))
+    spec_leaves = jax.tree_util.tree_flatten_with_path(specs,
+                                                       is_leaf=is_spec)[0]
+    for (path, spec), leaf in zip(spec_leaves, jax.tree.leaves(state)):
+        name = jax.tree_util.keystr(path)
+        leaf = np.asarray(leaf)
+        if leaf.ndim == 0:
+            assert spec == P(), name  # the one replicated scalar (steps)
+            assert "steps" in name
+        else:
+            assert spec == P(axes), name
+            assert leaf.shape[0] == cfg.n_edges, name
 
 
 def test_mesh_divisibility_rejected(mesh):
@@ -426,3 +466,54 @@ def test_mesh_divisibility_rejected(mesh):
         federated_query_step(cfg, init_store(cfg),
                              QUERY_PREDS["catch_all_temporal"],
                              jnp.ones(6, bool), jax.random.key(0), mesh)
+
+
+def test_mesh_factories_validate_at_construction():
+    """Satellite: the divisibility check moved into the mesh factories —
+    both raise the shared actionable error at construction time instead of
+    failing later inside the federated runtime."""
+    with pytest.raises(ValueError, match="not divisible"):
+        make_edge_mesh(N_DEV, n_edges=6)
+    with pytest.raises(ValueError, match="not divisible"):
+        make_fleet_mesh(2, N_DEV // 2, n_edges=6)
+    with pytest.raises(ValueError, match="does not divide"):
+        make_fleet_mesh(3)  # 3 fleets over 4 devices
+    assert make_edge_mesh(N_DEV, n_edges=E).shape == {"edge": N_DEV}
+    assert make_fleet_mesh(2, n_edges=E).shape == {"fleet": 2, "edge": 2}
+
+
+def test_fleet_mesh_equals_edge_mesh():
+    """The cross-mesh differential, stated directly: the SAME lifecycle
+    (ingest -> device failure -> degraded ingest + query -> recover + repair
+    -> query) on the (2, 2) fleet mesh and the (4,) 1-D mesh yields bitwise
+    identical states and identical answers — the hierarchical merge and the
+    double-buffered tiling change the schedule, never the result."""
+    mesh_1d = make_edge_mesh(N_DEV)
+    mesh_2d = make_fleet_mesh(2, N_DEV // 2)
+    cfg = make_cfg(n_failure_domains=N_DEV)
+    db1 = AerialDB.open(cfg, mesh=mesh_1d)
+    db2 = AerialDB.open(cfg, mesh=mesh_2d)
+    fleet = DroneFleet(10, records_per_shard=12, seed=43)
+    pay, met = fleet.next_rounds(3)
+    db1.ingest_rounds(pay, met)
+    db2.ingest_rounds(pay, met)
+    assert_states_identical(db1.state, db2.state)
+
+    q = Query().time(0.0, 1e9).agg("count", "mean", channel=1)
+    for db in (db1, db2):
+        db.fail_device(1)
+    pay2, met2 = fleet.next_rounds(1)
+    db1.ingest_rounds(pay2, met2)
+    db2.ingest_rounds(pay2, met2)
+    key = jax.random.key(23)
+    r1, i1 = db1.query(q, key=key)
+    r2, i2 = db2.query(q, key=key)
+    assert_queries_identical(r1, i1, r2, i2)
+
+    db1.recover_device(1)
+    db2.recover_device(1)
+    assert db1.last_repair == db2.last_repair
+    assert_states_identical(db1.state, db2.state)
+    r1, i1 = db1.query(q, key=key)
+    r2, i2 = db2.query(q, key=key)
+    assert_queries_identical(r1, i1, r2, i2)

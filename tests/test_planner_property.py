@@ -88,6 +88,33 @@ def test_min_shards_never_assigns_dead_edge(data):
     assert alive_np[assigned].all(), (assignment, alive_np)
 
 
+def test_plan_random_tiling_invariant():
+    """plan_random folds the key per GLOBAL query index, so a scalar key, the
+    equivalent explicit (Q,) key batch, and any contiguous tiling of the
+    batch all draw identical gumbels — the invariant the federated runtime's
+    double-buffered query tiling (query_local overlap_tiles) relies on for
+    bitwise equivalence."""
+    rng = np.random.default_rng(5)
+    q, s, e = 7, 6, 5
+    reps = rng.integers(-1, e, size=(q, s, 3)).astype(np.int32)
+    matched = MatchedShards(
+        sid_hi=jnp.asarray(np.tile(np.arange(s, dtype=np.int32), (q, 1))),
+        sid_lo=jnp.asarray(np.tile(np.arange(s, dtype=np.int32), (q, 1))),
+        replicas=jnp.asarray(reps),
+        valid=jnp.ones((q, s), bool),
+        overflow=jnp.zeros((q,), jnp.bool_))
+    alive = jnp.asarray(rng.integers(0, 2, size=e).astype(bool))
+    key = jax.random.key(11)
+    full = np.asarray(plan_jit("random", matched, alive, key))
+    qkeys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(q))
+    np.testing.assert_array_equal(
+        full, np.asarray(plan_jit("random", matched, alive, qkeys)))
+    for sl in (slice(0, 3), slice(3, 7), slice(2, 5)):
+        tile = MatchedShards(*[f[sl] for f in matched])
+        got = np.asarray(plan_jit("random", tile, alive, qkeys[sl]))
+        np.testing.assert_array_equal(full[sl], got, err_msg=str(sl))
+
+
 def test_planners_skip_fully_degraded_replica_rows():
     """Mass-failure placement degrades unsatisfiable replica slots to -1
     (down to ALL slots -1 when no edge was alive at insert time): every
