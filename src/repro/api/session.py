@@ -24,9 +24,15 @@ repair pass** (``core.repair``) by default: shards placed around the outage
 are re-placed under the recovered mask, added replicas are backfilled with
 tuples from surviving copies, and the recovered edges' indexes are
 backfilled with every entry they missed — so a recovered edge serves
-complete results instead of a silent lookup hole. ``QueryInfo`` reports the
-degraded-query accounting (``replicas_lost`` / ``completeness_bound``)
-whenever failures make results provably incomplete.
+complete results instead of a silent lookup hole. The session keeps a
+host-side **outage-epoch ledger** — every ``fail_*`` call opens an epoch
+record ``(dead edges, fail_step)``, every ``recover_*`` call closes the
+window at the current ingest step — and hands it to ``repair_state`` as an
+``OutageLog``, so repair sweeps only the shards the recorded outages could
+have touched (O(outage), not O(store); ``repair(full=True)`` forces the
+full sweep). ``QueryInfo`` reports the degraded-query accounting
+(``replicas_lost`` / ``completeness_bound``), and ``QueryResult.view``
+carries both keys so applications see degradation without digging.
 
 See the package docstring (``repro.api``) for the facade-vs-local-bodies
 layering contract.
@@ -75,6 +81,22 @@ class AerialDB:
         self._use_kernel = use_kernel
         self._interpret = interpret
         self._last_repair: Optional[dict] = None
+        # Outage-epoch ledger (see ``core.repair``): open records are
+        # in-flight outages ``[dead edge set, fail_step]``; closed records
+        # ``(recovered edge set, fail_step, recover_step)`` accumulate until
+        # a repair consumes them. ``_pending_sids`` holds shards swept by a
+        # repair that ran while other edges were still dead — they were
+        # normalized to a *degraded* canonical placement and must be
+        # re-swept until a repair completes with every edge alive.
+        self._open_outages: list = []
+        self._closed_outages: list = []
+        self._pending_sids: set = set()
+        dead = np.nonzero(~np.asarray(self._alive, bool))[0]
+        if dead.size:
+            # Adopted state with unknown outage history: a fail_step of -1
+            # covers every index entry, so the first repair after recovery
+            # degenerates to (a correct) full-coverage sweep.
+            self._open_outages.append([set(dead.tolist()), -1])
 
     @classmethod
     def open(cls, cfg: Optional[StoreConfig] = None, mesh=None, *,
@@ -253,23 +275,47 @@ class AerialDB:
     def fail_edges(self, *edges) -> "AerialDB":
         """Mark edges dead (paper §4.5.3 resilience shape): subsequent
         inserts skip them, queries re-plan around them; ids are validated
-        eagerly (out-of-range / duplicate ids raise)."""
+        eagerly (out-of-range / duplicate ids raise). Each call opens an
+        outage-epoch record ``(newly dead edges, current step)`` on the
+        session ledger so the eventual repair can sweep O(outage)."""
         ids = self._edge_ids(edges)
+        newly_dead = ids[np.asarray(self._alive)[ids]]
         self._alive = self._alive.at[ids].set(False)
+        if newly_dead.size:
+            self._open_outages.append(
+                [set(int(i) for i in newly_dead), int(self._state.steps)])
         return self
 
     def recover_edges(self, *edges, repair: bool = True) -> "AerialDB":
         """Bring failed edges back (their state was retained while dead).
 
-        By default a recovery triggers the anti-entropy :meth:`repair` pass,
-        so shards ingested during the outage are re-placed onto the
-        recovered edges and their index entries/tuples backfilled — without
-        it, a recovered edge answers index lookups from a table that is
-        silently missing the whole outage window. Pass ``repair=False`` to
-        defer (e.g. when recovering several domains and repairing once).
+        Closes the recovered edges' outage-epoch windows at the current
+        ingest step. By default a recovery then triggers the incremental
+        anti-entropy :meth:`repair` pass, so shards ingested during the
+        outage are re-placed onto the recovered edges and their index
+        entries/tuples backfilled — without it, a recovered edge answers
+        index lookups from a table that is silently missing the whole
+        outage window. Pass ``repair=False`` to defer (e.g. when recovering
+        several domains and repairing once): the closed windows stay on the
+        ledger until a repair consumes them.
         """
         ids = self._edge_ids(edges)
+        newly_alive = set(int(i) for i in ids[~np.asarray(self._alive)[ids]])
         self._alive = self._alive.at[ids].set(True)
+        recover_step = int(self._state.steps)
+        for rec in self._open_outages:
+            inter = rec[0] & newly_alive
+            if inter:
+                self._closed_outages.append(
+                    (frozenset(inter), rec[1], recover_step))
+                rec[0] -= inter
+                newly_alive -= inter
+        self._open_outages = [r for r in self._open_outages if r[0]]
+        if newly_alive:
+            # Dead edges with no ledger record (defensive — adopted masks are
+            # recorded by __init__): treat their history as unknown.
+            self._closed_outages.append(
+                (frozenset(newly_alive), -1, recover_step))
         if repair:
             self.repair()
         return self
@@ -288,19 +334,65 @@ class AerialDB:
         :meth:`recover_edges`)."""
         return self.recover_edges(self._device_edges(device), repair=repair)
 
-    def repair(self) -> dict:
+    def _outage_log(self) -> "_repair.OutageLog":
+        """Snapshot the session ledger as the ``OutageLog`` driving the
+        incremental sweep (sorted — deterministic across differential
+        runtimes). ``affected_edges`` carries only the OPEN outages' edges —
+        the ones still dead now: a shard whose replicas touch an edge that
+        failed AND already recovered is a full-sweep no-op (its stored
+        placement equals the canonical one under the restored mask), so
+        selecting it would make the sweep O(store) again. Shards *ingested*
+        while that edge was away are what its closed window selects."""
+        affected = set()
+        for rec in self._open_outages:
+            affected |= rec[0]
+        return _repair.OutageLog(
+            windows=tuple(sorted((int(f), int(r))
+                                 for _eds, f, r in self._closed_outages)),
+            affected_edges=tuple(sorted(affected)),
+            pending_sids=tuple(sorted(self._pending_sids)))
+
+    def repair(self, *, full: bool = False) -> dict:
         """Anti-entropy re-replication sweep (``core.repair.repair_state``):
-        re-derive every tracked shard's canonical placement under the
-        current alive mask, rewrite stale replica sets, backfill tuples onto
-        added replicas from surviving copies, and backfill missing index
-        entries (the recovered-edge lookup hole). Host-side control-plane
+        re-derive swept shards' canonical placement under the current alive
+        mask, rewrite stale replica sets, backfill tuples onto added
+        replicas from surviving copies, reclaim stale ring slots on edges
+        dropped by re-placement, and backfill missing index entries (the
+        recovered-edge lookup hole). By default the sweep is **incremental**
+        — driven by the session's outage-epoch ledger, it touches only
+        shards the recorded outages could have affected, so an empty ledger
+        is a telemetry-only no-op (``shards_swept == 0``); ``full=True``
+        forces the classic every-tracked-shard sweep. A completed repair
+        consumes the ledger's closed windows. Host-side control-plane
         operation — deterministic, so differential runtimes stay bitwise
-        identical. Returns the repair telemetry dict (also kept on
+        identical — and **single-process only**: the host gather assumes it
+        sees the whole store (ROADMAP, cross-host mesh contract), so
+        multi-process sessions raise instead of silently diverging per
+        process. Returns the repair telemetry dict (also kept on
         :attr:`last_repair`)."""
+        if jax.process_count() > 1:
+            raise NotImplementedError(
+                "AerialDB.repair() is single-process only: it gathers the "
+                "full store to the host, which under a multi-process mesh "
+                f"(jax.process_count()={jax.process_count()}) would repair "
+                "each process's addressable slice independently and diverge "
+                "the replicated state. See ROADMAP 'Cross-host mesh "
+                "contract' — run repair from a single-process session, or "
+                "defer with recover_edges(..., repair=False).")
+        outage = None if full else self._outage_log()
         state, info = _repair.repair_state(self._cfg, self._state,
-                                           self._alive)
+                                           self._alive, outage=outage)
         self._state = (shard_store(state, self._mesh)
                        if self._mesh is not None else state)
+        # Ledger consumption: closed windows are now repaired; shards swept
+        # under a still-degraded mask stay pending until a repair completes
+        # with every edge alive.
+        swept_keys = info.pop("_swept_keys")
+        self._closed_outages = []
+        if bool(np.asarray(self._alive).all()):
+            self._pending_sids = set()
+        else:
+            self._pending_sids |= set(swept_keys)
         self._last_repair = info
         return info
 

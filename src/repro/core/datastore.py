@@ -315,14 +315,28 @@ class QueryResult(NamedTuple):
     vmax: jnp.ndarray     # (Q[, K]) float32 (NaN when count==0)
     overflow: jnp.ndarray # (Q,) bool — matched shards exceeded the static budget
     vmean: jnp.ndarray = None  # (Q[, K]) float32 — vsum/count (NaN when count==0)
+    completeness_bound: jnp.ndarray = None  # (Q,) float32 — see QueryInfo
+    replicas_lost: jnp.ndarray = None       # (Q,) int32 — see QueryInfo
 
     def view(self, agg: AggSpec) -> dict:
-        """Project the aggregates the spec asked for: op name -> array —
-        ``count`` is (Q,); value ops are (Q,) for a single-channel spec and
-        (Q, K) for a K-channel spec (one column per channel, spec order)."""
+        """Project the aggregates the spec asked for plus the degradation
+        telemetry every caller should see: op name -> array — ``count`` is
+        (Q,); value ops are (Q,) for a single-channel spec and (Q, K) for a
+        K-channel spec (one column per channel, spec order).
+
+        The view always carries ``completeness_bound`` (planner-assigned
+        fraction of the index-visible shard set; 1.0 when fully served, NaN
+        when unknown — overflow or broadcast) and ``replicas_lost`` (dead
+        replica slots over the matched shards) so applications observe
+        degraded answers without digging through ``QueryInfo``. See the
+        ``QueryInfo`` docstring for the bound's exact (shard-weighted,
+        index-visible) semantics and caveat."""
         full = {"count": self.count, "sum": self.vsum, "min": self.vmin,
                 "max": self.vmax, "mean": self.vmean}
-        return {op: full[op] for op in agg.ops}
+        out = {op: full[op] for op in agg.ops}
+        out["completeness_bound"] = self.completeness_bound
+        out["replicas_lost"] = self.replicas_lost
+        return out
 
 
 class QueryInfo(NamedTuple):
@@ -545,7 +559,7 @@ def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     index = insert_entries(index, meta,
                            jnp.pad(replicas, ((0, 0), (0, 3 - cfg.replication)),
                                    constant_values=-1),
-                           idx_mask)
+                           idx_mask, step=steps)
 
     new_state = StoreState(index, tup_f, tup_sid, tup_count, tup_pos,
                            tup_overwritten, state.tup_dropped, steps)
@@ -894,6 +908,8 @@ def finalize_query(partials, sublist_len, lookup_mask, broadcast, overflow,
         vmax=vmax_total,
         overflow=overflow,
         vmean=vmean,
+        completeness_bound=completeness_bound,
+        replicas_lost=replicas_lost,
     )
     info = QueryInfo(
         lookup_edges=jnp.sum(lookup_mask, axis=-1),

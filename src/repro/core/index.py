@@ -13,6 +13,9 @@ Static-shape storage (TPU adaptation):
   cursor: (E,)         int32    append position
   dropped:(E,)         int32    entries lost to capacity overflow (telemetry)
   retired:(E,)         int32    entries invalidated by retention (telemetry)
+  ent_step:(E, CAP)    int32    ingest step that wrote the entry (epoch clock
+                                for the incremental-repair outage windows —
+                                see ``core/repair.py``)
 
 Retention (sustained ingest): the tuple log is a ring buffer, so an edge only
 retains a sliding window of recent tuples. ``retire_entries`` invalidates
@@ -46,6 +49,7 @@ class IndexState(NamedTuple):
     cursor: jnp.ndarray
     dropped: jnp.ndarray
     retired: jnp.ndarray
+    ent_step: jnp.ndarray
 
 
 class QueryPred(NamedTuple):
@@ -85,11 +89,12 @@ def init_index(n_edges: int, capacity: int) -> IndexState:
         cursor=jnp.zeros((n_edges,), jnp.int32),
         dropped=jnp.zeros((n_edges,), jnp.int32),
         retired=jnp.zeros((n_edges,), jnp.int32),
+        ent_step=jnp.zeros((n_edges, capacity), jnp.int32),
     )
 
 
 def insert_entries(state: IndexState, meta: ShardMeta, replicas: jnp.ndarray,
-                   edge_mask: jnp.ndarray) -> IndexState:
+                   edge_mask: jnp.ndarray, step: jnp.ndarray = 0) -> IndexState:
     """Write index entries for B shards onto all edges in their slice mask.
 
     Args:
@@ -97,6 +102,9 @@ def insert_entries(state: IndexState, meta: ShardMeta, replicas: jnp.ndarray,
       replicas:  (B, 3) replica edges.
       edge_mask: (B, E) bool — edges that must index each shard (slice owners
                  plus the replica edges themselves).
+      step:      scalar int32 — the store's ingest step performing the write,
+                 recorded per entry in ``ent_step`` (the epoch clock the
+                 incremental repair sweep keys outage windows against).
     """
     e, cap = state.valid.shape
     b = edge_mask.shape[0]
@@ -121,9 +129,11 @@ def insert_entries(state: IndexState, meta: ShardMeta, replicas: jnp.ndarray,
     ent_f = state.ent_f.at[ee, pp].set(vals_f, mode="drop")
     ent_i = state.ent_i.at[ee, pp].set(vals_i, mode="drop")
     valid = state.valid.at[ee, pp].set(ok, mode="drop")
+    steps = jnp.broadcast_to(jnp.asarray(step, jnp.int32), (b, e))
+    ent_step = state.ent_step.at[ee, pp].set(steps, mode="drop")
     cursor = jnp.minimum(state.cursor + jnp.sum(edge_mask, axis=0), cap).astype(jnp.int32)
     return IndexState(ent_f, ent_i, valid, cursor, state.dropped + n_dropped,
-                      state.retired)
+                      state.retired, ent_step)
 
 
 def retire_entries(state: IndexState, t_watermark: jnp.ndarray) -> IndexState:
@@ -163,8 +173,10 @@ def compact_index(state: IndexState) -> IndexState:
     ent_f = jnp.take_along_axis(state.ent_f, order[..., None], axis=1)
     ent_i = jnp.take_along_axis(state.ent_i, order[..., None], axis=1)
     valid = jnp.take_along_axis(state.valid, order, axis=1)
+    ent_step = jnp.take_along_axis(state.ent_step, order, axis=1)
     cursor = jnp.sum(state.valid, axis=1).astype(jnp.int32)
-    return IndexState(ent_f, ent_i, valid, cursor, state.dropped, state.retired)
+    return IndexState(ent_f, ent_i, valid, cursor, state.dropped, state.retired,
+                      ent_step)
 
 
 def entry_matches(state: IndexState, pred: QueryPred) -> jnp.ndarray:

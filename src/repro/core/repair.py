@@ -1,4 +1,4 @@
-"""Anti-entropy repair: recovery re-replication after edge/device outages.
+"""Anti-entropy repair: epoch-scoped recovery re-replication after outages.
 
 The durability story (paper §3.4.2 + §4.5.3) assumes every shard keeps
 ``replication`` live copies. An outage breaks that in two ways:
@@ -13,11 +13,10 @@ The durability story (paper §3.4.2 + §4.5.3) assumes every shard keeps
   index-lookup edge (a narrow window whose slice grid maps to exactly that
   edge), the missing entries become silently-incomplete results.
 
-``repair_state`` is the control-plane fix: a full anti-entropy sweep that
-re-derives, for every shard tracked by the index, the canonical placement
-under the *current* alive mask (the placement the shard would have received
-had the outage never happened — ``place_replicas`` is deterministic given
-the mask), then converges the store to it:
+``repair_state`` is the control-plane fix: it re-derives the canonical
+placement under the *current* alive mask (the placement a shard would have
+received had the outage never happened — ``place_replicas`` is deterministic
+given the mask) and converges the store to it, one swept shard at a time:
 
   1. **re-placement** — where the canonical replica set differs from the
      stored one AND a surviving replica still holds the shard's tuples,
@@ -28,20 +27,56 @@ the mask), then converges the store to it:
   2. **tuple backfill** — for shards whose placement changed, every member
      of the new replica set that does not hold the shard's tuples (edges
      *added* by re-placement, or retained replicas whose own ring already
-     overwrote the copy) receives them from the first surviving replica
-     that still does (appended through the normal ring-buffer cursor, with
-     overwrite telemetry). Shards whose placement is unchanged are left
-     alone by design: re-verifying every copy of every shard on every sweep
-     would resurrect retention-aged copies wholesale, fighting the ring's
-     sliding window — repair converges *outage-affected* shards, retention
-     owns the rest. Edges dropped by re-placement keep their now-stale
-     copies — harmless, because sub-query OR-lists only ever name shards
-     assigned from index entries, and ring retention reclaims the slots;
-  3. **index backfill** — every edge that should hold a shard's entry under
-     the slicing contract (slice owners + replica edges, ``_index_edge_mask``)
-     but does not, gets the entry appended — this is what plugs the
-     recovered edge's lookup hole, including for shards whose replicas never
-     changed.
+     overwrote the copy) receives them from the surviving replica holding
+     the most (appended through the normal ring-buffer cursor in source-
+     chronological order, clamped to the newest ``tuple_capacity`` tuples,
+     with exact overwrite telemetry);
+  3. **ring reclamation** — alive edges *outside* the new replica set of a
+     re-placed shard hold copies no index entry will ever name again; their
+     slots are retired eagerly (the ring is re-packed in chronological
+     order, freed slots reset to the never-written sentinel) instead of
+     bleeding capacity until wraparound. The re-pack rewinds ``tup_count``
+     below ``tuple_capacity``, so that edge's retention watermark reads
+     ``-inf`` until its ring re-wraps — retention pauses rather than
+     over-retiring. Copies stranded on an edge that was *dead* at
+     re-placement time are reclaimed the next time the shard re-places (or
+     by wraparound) — repair never touches dead edges, whose frozen rings
+     may be the only surviving source;
+  4. **index backfill** — every edge that should hold a swept shard's entry
+     under the slicing contract (slice owners + replica edges,
+     ``_index_edge_mask``) but does not, gets the entry appended — this is
+     what plugs the recovered edge's lookup hole, including for shards
+     whose replicas never changed.
+
+Outage epochs — the O(outage) sweep contract
+--------------------------------------------
+
+Every index entry records the ingest step that wrote it (``ent_step``); the
+session facade keeps a host-side ledger of failure events, each an epoch
+window ``(fail_step, recover_step]`` plus the dead edge set. Passing that
+ledger as ``outage=OutageLog(...)`` turns the sweep incremental: a tracked
+shard is swept iff
+
+* one of its entries was written inside a closed outage window
+  (``fail_step < ent_step <= recover_step`` — it was placed around the dead
+  edges and must be re-placed / re-indexed now that they are back), or
+* its stored replica set intersects the affected (still-dead) edge set —
+  it must be re-placed around the edges that are down right now, or
+* its sid is in ``pending_sids`` — swept by an earlier repair that ran
+  while some edges were still dead, so it was normalized to a *degraded*
+  canonical placement and must be revisited once the mask changes again.
+
+Everything else is provably untouched by the full sweep — placement is
+deterministic, so a shard ingested under the current mask with entries on
+every slice-owner edge is already canonical — and is skipped without
+computing its placement, which is what makes repair cost scale with the
+outage, not the store. The incremental sweep is bitwise-identical to the
+full sweep (property-tested in ``tests/test_repair_incremental.py``), with
+one scoped exception: entries dropped at ingest because an index table was
+momentarily full (``index.dropped``) are re-attempted by a full sweep for
+*any* shard but only for swept shards under an incremental one — overflow
+drop is a capacity-sizing pathology, not an outage, and retention owns
+reclaiming that table space. ``outage=None`` always runs the full sweep.
 
 The sweep is **host-side numpy** by design: repair is a rare, metadata-scale
 control-plane event (like an operator-triggered rebalance), not a hot path.
@@ -58,12 +93,14 @@ full copy next to the remnant would double-count in scans, and per-tuple
 dedup is not worth a control-plane path; this is the same replica retention
 skew the query-exactness notes in ``datastore.py`` already scope); a shard
 whose live replicas ALL died before repair is unrepairable until one of
-them recovers (counted in the info dict).
+them recovers (counted in the info dict, and surfaced per query as the
+``completeness_bound`` / ``replicas_lost`` keys every ``QueryResult.view``
+now carries).
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -73,7 +110,37 @@ from repro.core.datastore import (StoreConfig, StoreState, _COUNT_SAT,
 from repro.core.index import IndexState
 from repro.core.placement import ShardMeta, place_replicas
 
-__all__ = ["repair_state"]
+__all__ = ["OutageLog", "repair_state", "sid_key"]
+
+
+def sid_key(hi, lo) -> int:
+    """Pack a (sid_hi, sid_lo) pair into the sweep's 64-bit shard key."""
+    return (int(hi) << 32) | (int(lo) & 0xFFFFFFFF)
+
+
+class OutageLog(NamedTuple):
+    """Host-side outage ledger driving the incremental sweep (see module
+    docstring). Built by ``AerialDB`` from its fail/recover call history;
+    hand-construct one only for direct ``repair_state`` experiments.
+
+    windows:        closed epoch windows ``(fail_step, recover_step)`` —
+                    membership is ``fail_step < ent_step <= recover_step``.
+                    A window with ``fail_step == -1`` covers every entry
+                    (used for adopted states with unknown outage history).
+    affected_edges: union of the dead edge sets of the outages still OPEN
+                    (edges dead right now) — shards whose stored replicas
+                    intersect it must be re-placed around them. Edges that
+                    already recovered do NOT belong here: shards placed
+                    before their outage are full-sweep no-ops under the
+                    restored mask, and shards placed during it are selected
+                    by the closed window instead.
+    pending_sids:   64-bit shard keys swept by an earlier repair that ran
+                    under a degraded mask; re-swept until a repair completes
+                    with every edge alive.
+    """
+    windows: Tuple[Tuple[int, int], ...] = ()
+    affected_edges: Tuple[int, ...] = ()
+    pending_sids: Tuple[int, ...] = ()
 
 
 def _shard_table(ent_i, ent_f, valid):
@@ -91,41 +158,84 @@ def _shard_table(ent_i, ent_f, valid):
     return ev, ec, key, uniq, first
 
 
-def repair_state(cfg: StoreConfig, state: StoreState,
-                 alive) -> Tuple[StoreState, dict]:
+def _chrono_order(slots: np.ndarray, count: int, pos: int, cap: int):
+    """Sort ring slot indices into write-chronological (oldest-first) order.
+
+    Unwrapped rings (``count <= cap``) fill slots 0..count-1 in write order,
+    so ascending slot IS chronological; wrapped rings start their window at
+    ``pos`` (the next-overwrite = oldest slot)."""
+    if count <= cap:
+        return np.sort(slots)
+    return slots[np.argsort((slots - pos) % cap, kind="stable")]
+
+
+def _backfill_copy(tup_f, tup_sid, tup_count, tup_pos, tup_over,
+                   src, dst, hit_chrono, hi, lo, cap: int) -> int:
+    """Append shard (hi, lo)'s tuples from ``src``'s ring slots
+    ``hit_chrono`` (chronological order) onto ``dst``'s ring through the
+    normal cursor. Copies are clamped to the NEWEST ``cap`` tuples: a hit
+    larger than the destination ring would scatter onto itself (duplicate
+    slot ids — last write wins nondeterministically by position) and inflate
+    ``tup_count`` / ``tup_overwritten`` past what the ring actually holds.
+    Returns the number of tuples copied; telemetry counters are exact for
+    any hit size, including ``hit == cap`` (full-ring overwrite) and
+    ``hit > cap``."""
+    n_copy = min(int(hit_chrono.size), cap)
+    take = hit_chrono[hit_chrono.size - n_copy:]
+    slots = (int(tup_pos[dst]) + np.arange(n_copy)) % cap
+    tup_f[dst][:, slots] = tup_f[src][:, take]
+    tup_sid[dst][0, slots] = hi
+    tup_sid[dst][1, slots] = lo
+    before = min(int(tup_count[dst]), cap)
+    tup_count[dst] = min(int(tup_count[dst]) + n_copy, _COUNT_SAT)
+    after = min(int(tup_count[dst]), cap)
+    tup_over[dst] = min(int(tup_over[dst]) + before + n_copy - after,
+                        _COUNT_SAT)
+    tup_pos[dst] = (int(tup_pos[dst]) + n_copy) % cap
+    return n_copy
+
+
+def repair_state(cfg: StoreConfig, state: StoreState, alive,
+                 outage: Optional[OutageLog] = None
+                 ) -> Tuple[StoreState, dict]:
     """Run the anti-entropy sweep (module docstring) against ``state``.
 
     Args:
-      cfg:   deployment config (placement + slicing geometry).
-      state: StoreState — may be sharded; leaves are pulled to host.
-      alive: (E,) bool — the CURRENT availability mask (recovered edges
-             already alive; still-dead edges never receive copies/entries).
+      cfg:    deployment config (placement + slicing geometry).
+      state:  StoreState — may be sharded; leaves are pulled to host.
+      alive:  (E,) bool — the CURRENT availability mask (recovered edges
+              already alive; still-dead edges never receive copies/entries
+              and are never mutated — their frozen rings may be the only
+              surviving source).
+      outage: optional ``OutageLog``. ``None`` sweeps every tracked shard
+              (the full sweep); a ledger restricts the sweep to shards the
+              outage could have touched — O(outage), not O(store).
 
     Returns (new_state, info): a host-materialized StoreState (callers on a
     mesh re-shard it) and a telemetry dict — ``shards_tracked``,
-    ``shards_replaced`` (replica set rewritten), ``shards_unrepairable``
-    (no surviving source), ``tuples_copied``, ``entries_rewritten``,
-    ``entries_backfilled``, ``entries_dropped`` (backfill hit a full table).
+    ``shards_swept`` (placement re-derived), ``shards_replaced`` (replica
+    set rewritten), ``shards_unrepairable`` (no surviving source),
+    ``tuples_copied``, ``slots_reclaimed`` (stale copies retired by ring
+    reclamation), ``entries_rewritten``, ``entries_backfilled``,
+    ``entries_dropped`` (backfill hit a full table), ``mode``
+    (``full``/``incremental``), and ``_swept_keys`` — the swept shards' sid
+    keys, consumed by the session facade's pending-sweep bookkeeping (not
+    part of the stable telemetry surface).
     """
-    e, cap_l = state.tup_f.shape[0], state.tup_f.shape[2]
+    e = state.tup_f.shape[0]
     cap = cfg.tuple_capacity
     alive_np = np.asarray(alive, bool)
+
+    info = {"shards_tracked": 0, "shards_swept": 0, "shards_replaced": 0,
+            "shards_unrepairable": 0, "tuples_copied": 0,
+            "slots_reclaimed": 0, "entries_rewritten": 0,
+            "entries_backfilled": 0, "entries_dropped": 0,
+            "mode": "full" if outage is None else "incremental",
+            "_swept_keys": ()}
 
     ent_f = np.array(state.index.ent_f)
     ent_i = np.array(state.index.ent_i)
     valid = np.array(state.index.valid)
-    cursor = np.array(state.index.cursor)
-    dropped = np.array(state.index.dropped)
-    tup_f = np.array(state.tup_f)
-    tup_sid = np.array(state.tup_sid)
-    tup_count = np.array(state.tup_count)
-    tup_pos = np.array(state.tup_pos)
-    tup_over = np.array(state.tup_overwritten)
-
-    info = {"shards_tracked": 0, "shards_replaced": 0,
-            "shards_unrepairable": 0, "tuples_copied": 0,
-            "entries_rewritten": 0, "entries_backfilled": 0,
-            "entries_dropped": 0}
 
     ev, ec, key, uniq, first = _shard_table(ent_i, ent_f, valid)
     n = uniq.shape[0]
@@ -133,28 +243,67 @@ def repair_state(cfg: StoreConfig, state: StoreState,
     if n == 0:
         return state, info
 
-    # Representative meta + stored replicas per tracked shard.
+    # Representative meta + stored replicas per tracked shard (cheap O(N)
+    # gathers — placement itself is only derived for the swept subset).
     f0 = ent_f[ev[first], ec[first]]                       # (N, 6)
     old3 = ent_i[ev[first], ec[first], 2:5]                # (N, 3)
-    meta = ShardMeta(
-        sid_hi=jnp.asarray(ent_i[ev[first], ec[first], 0]),
-        sid_lo=jnp.asarray(ent_i[ev[first], ec[first], 1]),
-        lat0=jnp.asarray(f0[:, 0]), lat1=jnp.asarray(f0[:, 1]),
-        lon0=jnp.asarray(f0[:, 2]), lon1=jnp.asarray(f0[:, 3]),
-        t0=jnp.asarray(f0[:, 4]), t1=jnp.asarray(f0[:, 5]))
+
+    # --- sweep selection: the O(outage) filter -------------------------
+    if outage is None:
+        sel = np.ones(n, bool)
+    else:
+        inv = np.searchsorted(uniq, key)                   # entry -> shard
+        ent_step = np.asarray(state.index.ent_step)[ev, ec]
+        in_win = np.zeros(ev.shape[0], bool)
+        for fail_step, recover_step in outage.windows:
+            in_win |= (ent_step > fail_step) & (ent_step <= recover_step)
+        win_sel = np.zeros(n, bool)
+        np.logical_or.at(win_sel, inv, in_win)
+        aff = np.zeros(e, bool)
+        if len(outage.affected_edges):
+            aff[np.asarray(outage.affected_edges, int)] = True
+        rep_sel = np.any((old3 >= 0) & aff[np.clip(old3, 0, e - 1)], axis=1)
+        pend_sel = np.isin(
+            uniq, np.asarray(outage.pending_sids, np.int64))
+        sel = win_sel | rep_sel | pend_sel
+    sel_idx = np.nonzero(sel)[0]
+    info["shards_swept"] = int(sel_idx.size)
+    info["_swept_keys"] = tuple(int(k) for k in uniq[sel_idx])
+    if sel_idx.size == 0:
+        # Nothing the outage could have touched — telemetry-only no-op.
+        return state, info
+
+    cursor = np.array(state.index.cursor)
+    dropped = np.array(state.index.dropped)
+    ent_step_tab = np.array(state.index.ent_step)
+    tup_f = np.array(state.tup_f)
+    tup_sid = np.array(state.tup_sid)
+    tup_count = np.array(state.tup_count)
+    tup_pos = np.array(state.tup_pos)
+    tup_over = np.array(state.tup_overwritten)
+    step_now = int(state.steps)
 
     # Canonical placement under the current mask (deterministic — equals the
-    # never-failed placement once every edge is back).
+    # never-failed placement once every edge is back). ``place_replicas`` is
+    # row-independent, so deriving it for the swept subset yields exactly the
+    # rows a full-store batch would.
+    meta = ShardMeta(
+        sid_hi=jnp.asarray(ent_i[ev[first[sel_idx]], ec[first[sel_idx]], 0]),
+        sid_lo=jnp.asarray(ent_i[ev[first[sel_idx]], ec[first[sel_idx]], 1]),
+        lat0=jnp.asarray(f0[sel_idx, 0]), lat1=jnp.asarray(f0[sel_idx, 1]),
+        lon0=jnp.asarray(f0[sel_idx, 2]), lon1=jnp.asarray(f0[sel_idx, 3]),
+        t0=jnp.asarray(f0[sel_idx, 4]), t1=jnp.asarray(f0[sel_idx, 5]))
     new = np.asarray(place_replicas(meta, cfg.sites_array(),
                                     jnp.asarray(alive_np), cfg.tau,
                                     n_domains=cfg.n_failure_domains))
-    new3 = np.full((n, 3), -1, np.int32)
+    new3 = np.full((sel_idx.size, 3), -1, np.int32)
     new3[:, : cfg.replication] = new[:, : cfg.replication]
 
-    # Where every edge should hold the entry: slice owners + new replicas.
+    # Where every edge should hold the swept entries: slice owners + new
+    # replicas, restricted to alive edges.
     want = np.asarray(_index_edge_mask(cfg, meta, jnp.asarray(new3),
                                        cfg.sites_array(),
-                                       jnp.asarray(alive_np)))   # (N, E)
+                                       jnp.asarray(alive_np)))  # (n_sel, E)
     # Where entries currently exist, per shard x edge.
     present = np.zeros((n, e), bool)
     present[np.searchsorted(uniq, key), ev] = True
@@ -174,9 +323,11 @@ def repair_state(cfg: StoreConfig, state: StoreState,
         return bool(np.any((tup_sid[edge, 0, :w] == hi)
                            & (tup_sid[edge, 1, :w] == lo)))
 
-    for i in range(n):
+    reclaim = {}   # edge -> set of 64-bit sid keys to retire from its ring
+
+    for j, i in enumerate(sel_idx):
         old_set = {int(r) for r in old3[i] if r >= 0}
-        new_set = {int(r) for r in new3[i] if r >= 0}
+        new_set = {int(r) for r in new3[j] if r >= 0}
         hi = int(ent_i[ev[first[i]], ec[first[i]], 0])
         lo = int(ent_i[ev[first[i]], ec[first[i]], 1])
 
@@ -203,15 +354,17 @@ def repair_state(cfg: StoreConfig, state: StoreState,
                 # query accounting (replicas_lost / completeness_bound) to a
                 # fabricated all-clear. Keep the stored set so queries keep
                 # reporting the shard as unreachable until a copy returns
-                # (step 3 below still backfills missing entries — naming the
+                # (step 4 below still backfills missing entries — naming the
                 # dead replicas — so the loss stays VISIBLE on recovered
                 # lookup edges too, instead of vanishing from their index).
                 info["shards_unrepairable"] += 1
-                new3[i] = old3[i]
+                new3[j] = old3[i]
             else:
-                # 1. rewrite every entry of this shard to the canonical set.
+                # 1. rewrite every entry of this shard to the canonical set
+                # (the entry's write epoch is preserved — it still dates the
+                # shard's ingest, which is what outage windows test).
                 idx = order[starts[i]:ends[i]]
-                ent_i[ev[idx], ec[idx], 2:5] = new3[i]
+                ent_i[ev[idx], ec[idx], 2:5] = new3[j]
                 info["entries_rewritten"] += int(idx.size)
                 info["shards_replaced"] += 1
 
@@ -220,28 +373,27 @@ def repair_state(cfg: StoreConfig, state: StoreState,
                 # replicas *added* by re-placement, and retained replicas
                 # whose own ring already overwrote the copy (verified via
                 # holds_tuples, so replicas with the data are never touched).
-                cols_f = tup_f[src][:, hit]                # (3+V, n_hit)
+                chrono = _chrono_order(hit, int(tup_count[src]),
+                                       int(tup_pos[src]), cap)
                 for dst in sorted(new_set):
                     if not alive_np[dst] or holds_tuples(dst, hi, lo):
                         continue
-                    slots = (tup_pos[dst] + np.arange(hit.size)) % cap
-                    tup_f[dst][:, slots] = cols_f
-                    tup_sid[dst][0, slots] = hi
-                    tup_sid[dst][1, slots] = lo
-                    before = min(int(tup_count[dst]), cap)
-                    tup_count[dst] = min(int(tup_count[dst]) + hit.size,
-                                         _COUNT_SAT)
-                    after = min(int(tup_count[dst]), cap)
-                    tup_over[dst] = min(
-                        int(tup_over[dst]) + before + hit.size - after,
-                        _COUNT_SAT)
-                    tup_pos[dst] = (int(tup_pos[dst]) + hit.size) % cap
-                    info["tuples_copied"] += int(hit.size)
+                    info["tuples_copied"] += _backfill_copy(
+                        tup_f, tup_sid, tup_count, tup_pos, tup_over,
+                        src, dst, chrono, hi, lo, cap)
 
-        # 3. backfill missing index entries (slice owners + replicas) — this
+                # 3. ring reclamation: alive edges outside the canonical set
+                # hold copies no entry names anymore — retire their slots
+                # eagerly (batched per edge after the sweep; keyed by sid so
+                # interleaved backfill wraps can never be mis-dropped).
+                for dst in range(e):
+                    if alive_np[dst] and dst not in new_set:
+                        reclaim.setdefault(dst, set()).add(sid_key(hi, lo))
+
+        # 4. backfill missing index entries (slice owners + replicas) — this
         # runs for unchanged shards too: the recovered edge missed every
         # entry written while it was down, replicas moved or not.
-        for dst in np.nonzero(want[i] & ~present[i])[0]:
+        for dst in np.nonzero(want[j] & ~present[i])[0]:
             c = int(cursor[dst])
             if c >= valid.shape[1]:
                 dropped[dst] += 1
@@ -250,15 +402,46 @@ def repair_state(cfg: StoreConfig, state: StoreState,
             ent_f[dst, c] = f0[i]
             ent_i[dst, c, 0] = hi
             ent_i[dst, c, 1] = lo
-            ent_i[dst, c, 2:5] = new3[i]
+            ent_i[dst, c, 2:5] = new3[j]
             valid[dst, c] = True
+            ent_step_tab[dst, c] = step_now
             cursor[dst] = c + 1
             info["entries_backfilled"] += 1
+
+    # Ring reclamation re-pack (step 3, batched per edge): drop every live
+    # slot whose sid was retired from this edge, squash survivors to the
+    # front in chronological order, reset freed slots to the never-written
+    # sentinel. Rewinding tup_count below cap flips the edge's retention
+    # watermark to -inf until its ring re-wraps (see module docstring).
+    for dst in sorted(reclaim):
+        w = live_window(dst)
+        if w == 0:
+            continue
+        chrono = _chrono_order(np.arange(w, dtype=np.int64),
+                               int(tup_count[dst]), int(tup_pos[dst]), cap)
+        k = ((tup_sid[dst, 0, chrono].astype(np.int64) << 32)
+             | (tup_sid[dst, 1, chrono].astype(np.int64) & 0xFFFFFFFF))
+        drop = np.isin(k, np.fromiter(reclaim[dst], np.int64,
+                                      len(reclaim[dst])))
+        n_drop = int(np.sum(drop))
+        if n_drop == 0:
+            continue
+        keep = chrono[~drop]
+        n_keep = keep.size
+        tup_f[dst][:, :n_keep] = tup_f[dst][:, keep]
+        tup_sid[dst][:, :n_keep] = tup_sid[dst][:, keep]
+        tup_f[dst][:, n_keep:] = 0.0
+        tup_sid[dst][:, n_keep:] = -1
+        tup_count[dst] = n_keep
+        tup_pos[dst] = n_keep % cap
+        tup_over[dst] = min(int(tup_over[dst]) + n_drop, _COUNT_SAT)
+        info["slots_reclaimed"] += n_drop
 
     index = IndexState(
         ent_f=jnp.asarray(ent_f), ent_i=jnp.asarray(ent_i),
         valid=jnp.asarray(valid), cursor=jnp.asarray(cursor),
-        dropped=jnp.asarray(dropped), retired=state.index.retired)
+        dropped=jnp.asarray(dropped), retired=state.index.retired,
+        ent_step=jnp.asarray(ent_step_tab))
     new_state = StoreState(
         index=index, tup_f=jnp.asarray(tup_f), tup_sid=jnp.asarray(tup_sid),
         tup_count=jnp.asarray(tup_count), tup_pos=jnp.asarray(tup_pos),

@@ -99,7 +99,7 @@ def store_partition_specs(edge_axes=(EDGE_AXIS,)):
     edge = P(edge_axes)
     return StoreState(
         index=IndexState(ent_f=edge, ent_i=edge, valid=edge, cursor=edge,
-                         dropped=edge, retired=edge),
+                         dropped=edge, retired=edge, ent_step=edge),
         tup_f=edge, tup_sid=edge, tup_count=edge, tup_pos=edge,
         tup_overwritten=edge, tup_dropped=edge, steps=P())
 

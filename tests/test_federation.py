@@ -291,7 +291,8 @@ def test_facade_builder_query_identical(loaded_facades):
     r1, i1 = db_ref.query((pred, spec), key=key)
     r2, i2 = db_fed.query((pred, spec), key=key)
     assert_queries_identical(r1, i1, r2, i2)
-    assert set(r1.view(spec)) == {"count", "mean"}
+    assert set(r1.view(spec)) == {"count", "mean",
+                                  "completeness_bound", "replicas_lost"}
 
 
 def test_facade_ingest_and_failures_identical(mesh):

@@ -235,9 +235,13 @@ def test_aggregates_match_numpy_oracle(loaded_db, channel):
     np.testing.assert_allclose(float(res.vmax[0]), v.max(), rtol=1e-5)
     np.testing.assert_allclose(float(res.vmean[0]), v.mean(), rtol=1e-4)
     view = res.view(q.spec)
-    assert set(view) == set(AGG_OPS)
+    assert set(view) == set(AGG_OPS) | {"completeness_bound",
+                                        "replicas_lost"}
     np.testing.assert_array_equal(np.asarray(view["count"]),
                                   np.asarray(res.count))
+    # Degradation telemetry rides in every view: fully-served query here.
+    np.testing.assert_array_equal(np.asarray(view["completeness_bound"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(view["replicas_lost"]), 0)
 
 
 def test_mean_of_empty_window_is_nan(loaded_db):
@@ -304,7 +308,8 @@ def test_multi_channel_query_equals_k_single_channel_queries(loaded_db):
     spec = AggSpec(channels=channels, ops=("count", "mean"))
     res, _ = db.query(pred, agg=spec, key=key)
     view = res.view(spec)
-    assert set(view) == {"count", "mean"}
+    assert set(view) == {"count", "mean",
+                         "completeness_bound", "replicas_lost"}
     assert view["mean"].shape == (2, len(channels))
 
 

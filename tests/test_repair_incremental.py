@@ -1,0 +1,450 @@
+"""Churn-safe incremental repair (paper §4.5.3 sustained churn).
+
+The contract under test: the outage-epoch ledger the session keeps (one
+record per failure event, closed at recovery) lets ``repair_state`` sweep
+ONLY the shards an outage could have touched, and that incremental sweep is
+**bitwise identical** to the classic full sweep — property-tested under
+random fail/ingest/recover interleavings (including retention wrap during
+the outage) and differentially on both mesh layouts. Plus the satellite
+regressions: the backfill clamp corners (``hit == cap`` / ``hit > cap``),
+the empty-ledger telemetry-only no-op, the multi-process repair guard, ring
+reclamation of stale copies, and the O(outage)-not-O(store) sweep scaling.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import AerialDB, AggSpec
+from repro.core.datastore import StoreConfig, make_pred
+from repro.core.repair import (OutageLog, _backfill_copy, _chrono_order,
+                               repair_state, sid_key)
+from repro.data.synthetic import CityConfig, DroneFleet, make_sites
+from repro.launch.mesh import make_edge_mesh, make_fleet_mesh
+
+E = 8
+N_DEV = 4
+CAP = 256          # small ring: sustained ingest wraps it mid-outage
+CATCH_ALL = make_pred(q=1, t0=0.0, t1=1e9, has_temporal=True, is_and=True)
+
+
+def _cfg(**overrides):
+    sites = make_sites(E, CityConfig(), seed=3)
+    kw = dict(n_edges=E, sites=tuple(map(tuple, sites.tolist())),
+              tuple_capacity=CAP, index_capacity=512,
+              max_shards_per_query=64, records_per_shard=8,
+              retention_every=2, n_failure_domains=4)
+    kw.update(overrides)
+    return StoreConfig(**kw)
+
+
+CFG = _cfg()
+
+
+def _assert_states_identical(ref, fed, msg=""):
+    names = [jax.tree_util.keystr(p) for p, _
+             in jax.tree_util.tree_flatten_with_path(ref)[0]]
+    for name, a, b in zip(names, jax.tree.leaves(ref), jax.tree.leaves(fed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{msg}{name}")
+
+
+def _ingest(db, fleet, rounds=1):
+    for _ in range(rounds):
+        p, m = fleet.next_shards()
+        db.insert(p, m)
+    return p, m
+
+
+def _total_count(db):
+    res, _ = db.query(CATCH_ALL, key=jax.random.key(0))
+    return int(res.count[0])
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: incremental sweep == full sweep, bitwise
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 1 << 30))
+@settings(deadline=None, max_examples=8)
+def test_incremental_repair_matches_full_sweep_property(seed):
+    """Random fail/ingest/recover interleavings: at every repair point the
+    ledger-driven incremental sweep must land on the bitwise-identical state
+    the full sweep produces from the same pre-state, while sweeping no more
+    shards than it. Small rings (CAP tuples) make sustained schedules wrap
+    retention mid-outage; partial recoveries exercise the pending-sweep
+    bookkeeping."""
+    rng = np.random.default_rng(seed)
+    db = AerialDB.open(CFG, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=int(rng.integers(1 << 20)))
+    dead = set()
+    _ingest(db, fleet, 2)
+    repairs = 0
+    for _ in range(int(rng.integers(8, 14))):
+        op = rng.choice(["ingest", "fail", "recover"], p=[0.5, 0.25, 0.25])
+        if op == "ingest":
+            _ingest(db, fleet, int(rng.integers(1, 3)))
+        elif op == "fail":
+            candidates = sorted(set(range(E)) - dead)
+            if len(candidates) <= 3:
+                continue
+            k = min(int(rng.integers(1, 3)), len(candidates) - 3)
+            edges = [int(e) for e in rng.choice(candidates, size=k,
+                                                replace=False)]
+            db.fail_edges(edges)
+            dead |= set(edges)
+        else:
+            if not dead:
+                continue
+            k = int(rng.integers(1, len(dead) + 1))
+            edges = [int(e) for e in rng.choice(sorted(dead), size=k,
+                                                replace=False)]
+            db.recover_edges(edges, repair=False)
+            dead -= set(edges)
+            pre = db.state
+            full_state, full_info = repair_state(CFG, pre, db.alive,
+                                                 outage=None)
+            inc_info = db.repair()          # incremental, consumes the ledger
+            _assert_states_identical(full_state, db.state,
+                                     msg=f"seed={seed}: ")
+            assert inc_info["mode"] == "incremental"
+            assert inc_info["shards_swept"] <= full_info["shards_swept"]
+            repairs += 1
+    # Drain: recover everything and repair once more against the oracle.
+    if dead:
+        db.recover_edges(sorted(dead), repair=False)
+        full_state, _ = repair_state(CFG, db.state, db.alive, outage=None)
+        db.repair()
+        _assert_states_identical(full_state, db.state, msg=f"seed={seed}: ")
+        repairs += 1
+    assert repairs > 0 or not dead
+
+
+def test_incremental_repair_retention_wrap_during_outage():
+    """Deterministic wrap coverage: enough sustained ingest during the
+    outage to wrap rings (tup_count > CAP) and run retention sweeps, then
+    recover — incremental must still equal the full sweep bitwise and the
+    catch-all query must return to full completeness."""
+    db = AerialDB.open(CFG, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=7)
+    _ingest(db, fleet, 2)
+    db.fail_device(1)
+    _, m_last = _ingest(db, fleet, 8)
+    assert int(np.asarray(db.state.tup_count).max()) > CAP   # wrapped
+    db.recover_device(1, repair=False)
+    full_state, _ = repair_state(CFG, db.state, db.alive, outage=None)
+    info = db.repair()
+    _assert_states_identical(full_state, db.state)
+    assert info["shards_replaced"] > 0
+    # The freshest (retention-safe) shards answer completely after repair,
+    # and the degradation keys ride in the result view (tentpole c).
+    hi = np.asarray(m_last.sid_hi).reshape(-1)
+    lo = np.asarray(m_last.sid_lo).reshape(-1)
+    pred = make_pred(q=hi.size, sid_hi=hi, sid_lo=lo, has_sid=True)
+    res, qi = db.query(pred, key=jax.random.key(1))
+    np.testing.assert_array_equal(np.asarray(res.count), 8)
+    view = res.view(AggSpec())
+    np.testing.assert_array_equal(np.asarray(view["completeness_bound"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(view["replicas_lost"]), 0)
+
+
+@pytest.fixture(params=["edge4", "fleet2x2"])
+def mesh(request):
+    if jax.device_count() < N_DEV:
+        pytest.skip(f"needs {N_DEV} host devices")
+    if request.param == "edge4":
+        return make_edge_mesh(N_DEV)
+    return make_fleet_mesh(2, N_DEV // 2)
+
+
+def test_incremental_repair_differential_mesh(mesh):
+    """The existing differential harness shape, with churn: the same scripted
+    fail/ingest/recover/repair sequence through the single-device facade and
+    the sharded facade must keep states bitwise identical and report the
+    same (incremental) repair telemetry — and both must equal the full-sweep
+    oracle at every repair point."""
+    db_ref = AerialDB.open(CFG, seed=0)
+    db_fed = AerialDB.open(CFG, mesh=mesh, seed=0)
+    fleets = [DroneFleet(12, records_per_shard=8, seed=11) for _ in range(2)]
+
+    def both(fn):
+        for db, fleet in zip((db_ref, db_fed), fleets):
+            fn(db, fleet)
+
+    def repair_and_check():
+        full_state, _ = repair_state(CFG, db_ref.state, db_ref.alive,
+                                     outage=None)
+        i_ref = db_ref.repair()
+        i_fed = db_fed.repair()
+        assert i_ref == i_fed
+        assert i_ref["mode"] == "incremental"
+        _assert_states_identical(full_state, db_ref.state, msg="ref vs full: ")
+        _assert_states_identical(db_ref.state, db_fed.state,
+                                 msg="ref vs fed: ")
+
+    both(lambda db, f: _ingest(db, f, 2))
+    both(lambda db, f: db.fail_device(1))
+    both(lambda db, f: _ingest(db, f, 2))
+    both(lambda db, f: db.recover_device(1, repair=False))
+    repair_and_check()
+    # Overlapping outages with a partial recovery: pending-sweep path.
+    both(lambda db, f: db.fail_edges(0))
+    both(lambda db, f: _ingest(db, f, 1))
+    both(lambda db, f: db.fail_edges(5))
+    both(lambda db, f: _ingest(db, f, 1))
+    both(lambda db, f: db.recover_edges(0, repair=False))
+    repair_and_check()                       # edge 5 still dead: pending set
+    both(lambda db, f: _ingest(db, f, 1))
+    both(lambda db, f: db.recover_edges(5, repair=False))
+    repair_and_check()
+    assert _total_count(db_ref) == _total_count(db_fed)
+
+
+# ---------------------------------------------------------------------------
+# O(outage) scaling + ring reclamation
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_scales_with_outage_not_store():
+    """A short outage in a long-lived store: the sweep must select roughly
+    the outage window's shards, not every tracked shard."""
+    db = AerialDB.open(CFG, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=13)
+    _ingest(db, fleet, 8)                    # long history, all-alive
+    db.fail_edges(1)
+    _ingest(db, fleet, 1)                    # one round during the outage
+    db.recover_edges(1)                      # incremental repair
+    rep = db.last_repair
+    assert rep["shards_swept"] > 0
+    assert rep["shards_tracked"] >= 3 * rep["shards_swept"], rep
+
+
+def test_repair_reclaims_stale_copies_on_dropped_edges():
+    """Shards placed around an outage move back onto the recovered edges at
+    repair; the edges dropped by that re-placement must have their stale
+    slots retired eagerly — every tracked shard's tuple holders equal its
+    index replica set afterwards, with no count lost."""
+    db = AerialDB.open(CFG, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=17)
+    _ingest(db, fleet, 1)
+    db.fail_device(1)
+    _ingest(db, fleet, 2)
+    before = _total_count(db)
+    db.recover_device(1)                     # repair w/ reclamation
+    rep = db.last_repair
+    assert rep["shards_replaced"] > 0
+    assert rep["slots_reclaimed"] > 0, rep
+    assert _total_count(db) == before        # reclamation lost no data
+    # Holder sets now match the (rewritten) index exactly: no stale copies.
+    ent_i = np.asarray(db.state.index.ent_i)
+    valid = np.asarray(db.state.index.valid)
+    tup_sid = np.asarray(db.state.tup_sid)
+    windows = np.minimum(np.asarray(db.state.tup_count), CAP)
+    ev, ec = np.nonzero(valid)
+    shard_reps = {}
+    for v, c in zip(ev, ec):
+        k = sid_key(ent_i[v, c, 0], ent_i[v, c, 1])
+        shard_reps[k] = {int(r) for r in ent_i[v, c, 2:5] if r >= 0}
+    for k, reps in shard_reps.items():
+        hi, lo = np.int32(k >> 32), np.int32(k & 0xFFFFFFFF)
+        holders = {int(e) for e in range(E)
+                   if np.any((tup_sid[e, 0, :windows[e]] == hi)
+                             & (tup_sid[e, 1, :windows[e]] == lo))}
+        assert holders == reps, (k, holders, reps)
+
+
+def test_reclaimed_ring_slots_are_reset():
+    """Freed slots read as never-written (sid -1, zero payload) and the ring
+    cursor/count rewind consistently (count == live tuples, pos == count %
+    cap) so subsequent ingest through the normal cursor stays sound."""
+    db = AerialDB.open(CFG, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=19)
+    db.fail_device(1)
+    _ingest(db, fleet, 2)
+    db.recover_device(1)
+    assert db.last_repair["slots_reclaimed"] > 0
+    tup_sid = np.asarray(db.state.tup_sid)
+    tup_f = np.asarray(db.state.tup_f)
+    count = np.asarray(db.state.tup_count)
+    pos = np.asarray(db.state.tup_pos)
+    for e in range(E):
+        w = min(int(count[e]), CAP)
+        assert (tup_sid[e, 0, w:] == -1).all(), e
+        assert (tup_f[e, :, w:] == 0).all(), e
+        if int(count[e]) <= CAP:
+            assert int(pos[e]) == int(count[e]) % CAP, e
+    # The store keeps ingesting and answering exactly after reclamation.
+    before = _total_count(db)
+    p, m = fleet.next_shards()
+    db.insert(p, m)
+    assert _total_count(db) == before + 12 * 8
+
+
+# ---------------------------------------------------------------------------
+# Satellite: backfill clamp corners
+# ---------------------------------------------------------------------------
+
+
+def _ring_fixture(cap, width=4, n_edges=2):
+    tup_f = np.zeros((n_edges, width, cap * 2), np.float32)
+    tup_sid = np.full((n_edges, 2, cap * 2), -1, np.int32)
+    tup_count = np.zeros(n_edges, np.int64)
+    tup_pos = np.zeros(n_edges, np.int64)
+    tup_over = np.zeros(n_edges, np.int64)
+    return tup_f, tup_sid, tup_count, tup_pos, tup_over
+
+
+def test_backfill_full_ring_hit_exact_telemetry():
+    """hit == cap: the copy fills the destination ring exactly once (no slot
+    written twice) and the overwrite telemetry counts exactly the slots that
+    held prior data."""
+    cap = 8
+    tup_f, tup_sid, tup_count, tup_pos, tup_over = _ring_fixture(cap)
+    src, dst, hi, lo = 0, 1, 7, 1
+    tup_f[src, :, :cap] = np.arange(cap, dtype=np.float32)[None, :]
+    tup_sid[src, 0, :cap] = hi
+    tup_sid[src, 1, :cap] = lo
+    tup_count[src] = cap
+    tup_count[dst], tup_pos[dst] = 3, 3          # 3 pre-existing tuples
+    hit = np.arange(cap, dtype=np.int64)
+    n = _backfill_copy(tup_f, tup_sid, tup_count, tup_pos, tup_over,
+                       src, dst, hit, hi, lo, cap)
+    assert n == cap
+    assert int(tup_count[dst]) == 3 + cap
+    assert int(tup_over[dst]) == 3               # exactly the prior tuples
+    assert int(tup_pos[dst]) == (3 + cap) % cap
+    # every ring slot written exactly once, in chronological order
+    want = np.roll(np.arange(cap, dtype=np.float32), 3)
+    np.testing.assert_array_equal(tup_f[dst, 0, :cap], want)
+    assert (tup_sid[dst, 0, :cap] == hi).all()
+
+
+def test_backfill_oversized_hit_clamps_to_newest():
+    """hit > cap (a self-overwriting scatter in the old code): the copy is
+    clamped to the NEWEST cap tuples, tup_count grows by at most cap, and
+    tup_overwritten never exceeds what the ring physically recycled."""
+    cap = 8
+    tup_f, tup_sid, tup_count, tup_pos, tup_over = _ring_fixture(cap)
+    src, dst, hi, lo = 0, 1, 9, 2
+    n_hit = 12
+    tup_f[src, :, :n_hit] = np.arange(n_hit, dtype=np.float32)[None, :]
+    tup_sid[src, 0, :n_hit] = hi
+    tup_sid[src, 1, :n_hit] = lo
+    tup_count[src] = n_hit                        # chronological == slot order
+    hit = np.arange(n_hit, dtype=np.int64)
+    n = _backfill_copy(tup_f, tup_sid, tup_count, tup_pos, tup_over,
+                       src, dst, hit, hi, lo, cap)
+    assert n == cap                               # clamped
+    assert int(tup_count[dst]) == cap             # not inflated to 12
+    assert int(tup_over[dst]) == 0                # ring was empty: recycled 0
+    assert int(tup_pos[dst]) == 0
+    # the NEWEST cap tuples survive (4..11), oldest 4 dropped
+    np.testing.assert_array_equal(tup_f[dst, 0, :cap],
+                                  np.arange(n_hit - cap, n_hit,
+                                            dtype=np.float32))
+
+
+def test_chrono_order_wrapped_ring():
+    """Wrapped rings order slots oldest-first starting at tup_pos."""
+    cap = 8
+    slots = np.array([0, 1, 5, 7], np.int64)
+    # unwrapped: ascending slots
+    np.testing.assert_array_equal(_chrono_order(slots, 6, 6, cap),
+                                  [0, 1, 5, 7])
+    # wrapped at pos=6: chronological = 7, 0, 1, 5
+    np.testing.assert_array_equal(_chrono_order(slots, 20, 6, cap),
+                                  [7, 0, 1, 5])
+
+
+# ---------------------------------------------------------------------------
+# Satellite: no-op repair, multi-process guard, ledger honesty
+# ---------------------------------------------------------------------------
+
+
+def test_empty_ledger_repair_is_telemetry_only_noop():
+    """No recorded outages: repair() must not sweep anything, and
+    last_repair still reports honestly (tracked count, zeroed work)."""
+    db = AerialDB.open(CFG, seed=0)
+    _ingest(db, DroneFleet(12, records_per_shard=8, seed=23), 2)
+    before = db.state
+    info = db.repair()
+    assert info["mode"] == "incremental"
+    assert info["shards_tracked"] > 0
+    assert info["shards_swept"] == 0
+    for k in ("shards_replaced", "shards_unrepairable", "tuples_copied",
+              "slots_reclaimed", "entries_rewritten", "entries_backfilled",
+              "entries_dropped"):
+        assert info[k] == 0, k
+    assert db.last_repair == info
+    assert "_swept_keys" not in info             # facade-internal, popped
+    _assert_states_identical(before, db.state)   # literally untouched
+
+
+def test_fail_recover_without_ingest_repairs_nothing():
+    """An outage with no ingest during it closes an EMPTY epoch window
+    (fail_step == recover_step) and leaves no still-dead edges — nothing
+    could have changed, so recovery's repair is the telemetry-only no-op
+    and the state is bitwise unchanged."""
+    db = AerialDB.open(CFG, seed=0)
+    _ingest(db, DroneFleet(12, records_per_shard=8, seed=29), 2)
+    before = db.state
+    db.fail_edges(2, 6)
+    db.recover_edges(2, 6)                       # repair=True default
+    info = db.last_repair
+    assert info["shards_swept"] == 0             # empty window: no suspects
+    assert info["shards_tracked"] > 0            # ...reported honestly
+    for k in ("shards_replaced", "tuples_copied", "slots_reclaimed",
+              "entries_rewritten", "entries_backfilled"):
+        assert info[k] == 0, k
+    _assert_states_identical(before, db.state)
+    # the full sweep agrees there was nothing to do
+    full_state, _ = repair_state(CFG, before, db.alive, outage=None)
+    _assert_states_identical(full_state, db.state)
+
+
+def test_repair_full_flag_sweeps_everything():
+    db = AerialDB.open(CFG, seed=0)
+    _ingest(db, DroneFleet(12, records_per_shard=8, seed=31), 2)
+    info = db.repair(full=True)
+    assert info["mode"] == "full"
+    assert info["shards_swept"] == info["shards_tracked"] > 0
+
+
+def test_repair_multiprocess_guard(monkeypatch):
+    """repair() host-gathers the full store — single-process only (ROADMAP
+    cross-host contract). Under process_count > 1 it must refuse loudly
+    instead of silently repairing divergent per-process slices."""
+    db = AerialDB.open(CFG, seed=0)
+    _ingest(db, DroneFleet(12, records_per_shard=8, seed=37), 1)
+    monkeypatch.setattr(jax, "process_count", lambda: 2)
+    with pytest.raises(NotImplementedError, match="single-process"):
+        db.repair()
+    db.fail_edges(1)
+    with pytest.raises(NotImplementedError, match="single-process"):
+        db.recover_edges(1)                      # default repair path too
+    # the documented escape hatch stays available
+    db.recover_edges(1, repair=False)
+    assert bool(db.alive.all())
+
+
+def test_adopted_degraded_state_gets_conservative_ledger():
+    """A session adopting a state with dead edges has no outage history:
+    its first repair after recovery must cover every entry (fail_step -1
+    window) rather than assuming the mask was always whole."""
+    db = AerialDB.open(CFG, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=41)
+    db.fail_edges(3)
+    _ingest(db, fleet, 2)                        # placed around edge 3
+    # Adopt the raw parts into a fresh session: ledger knowledge is lost.
+    db2 = AerialDB(db.cfg, db.state, db.alive, jax.random.key(0))
+    db2.recover_edges(3, repair=False)
+    full_state, _ = repair_state(CFG, db2.state, db2.alive, outage=None)
+    info = db2.repair()
+    assert info["shards_swept"] > 0
+    _assert_states_identical(full_state, db2.state)
