@@ -29,9 +29,10 @@ the same bodies.
 
 from repro.api.query import Query
 from repro.api.session import AerialDB
-from repro.core.datastore import (AGG_OPS, AggSpec, QueryInfo, QueryResult,
-                                  StoreConfig, make_pred)
+from repro.core.datastore import (AGG_OPS, AggSpec, LatestResult, QueryInfo,
+                                  QueryResult, StoreConfig, make_pred)
 from repro.core.index import QueryPred
 
 __all__ = ["AerialDB", "Query", "AggSpec", "AGG_OPS", "QueryPred",
-           "QueryResult", "QueryInfo", "StoreConfig", "make_pred"]
+           "QueryResult", "QueryInfo", "LatestResult", "StoreConfig",
+           "make_pred"]

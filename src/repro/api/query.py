@@ -60,13 +60,23 @@ class Query:
     sid: Optional[Tuple[int, int]] = None
     mode: Optional[str] = None          # "and" | "or"; None until fixed
     spec: Optional[AggSpec] = None      # None -> AggSpec() at build time
+    want_latest: bool = False           # latest-per-drone hot-cache read
 
     # -- clauses ------------------------------------------------------------
 
     def _n_clauses(self) -> int:
         return sum(getattr(self, c) is not None for c in _CLAUSES)
 
+    def _no_latest(self, what: str) -> None:
+        if self.want_latest:
+            raise ValueError(
+                f"cannot add {what} to a latest() query: the latest-per-drone "
+                "read is a whole-cache O(drones) fast path with no predicate "
+                "or aggregation — filter the returned (D, 3+V) records on the "
+                "host, or issue a separate range query.")
+
     def _with_clause(self, kind: str, value) -> "Query":
+        self._no_latest(f"a {kind} clause")
         if getattr(self, kind) is not None:
             raise ValueError(
                 f"query already has a {kind} clause: the engine evaluates at "
@@ -109,6 +119,21 @@ class Query:
         return self._with_clause(
             "sid", (int(sid_hi), int(sid_lo)))
 
+    def latest(self) -> "Query":
+        """Latest-per-drone hot-cache read (paper §4.4 near-real-time path):
+        ``AerialDB.query(Query().latest())`` returns the O(drones)
+        ``LatestResult`` — last (max-t) record + last-seen step per drone —
+        straight from the replicated cache, bypassing the log scan, the
+        index, and the planner entirely. Terminal: takes no clauses and no
+        aggregation (requires ``StoreConfig.max_drones > 0``)."""
+        if self._n_clauses() or self.spec is not None:
+            raise ValueError(
+                "latest() is a whole-cache read and cannot be combined with "
+                "clauses or aggregation: the hot path answers 'newest record "
+                "per drone' only — filter the returned records on the host, "
+                "or issue a separate range query for historical windows.")
+        return dataclasses.replace(self, want_latest=True)
+
     # -- aggregation --------------------------------------------------------
 
     def agg(self, *ops: str, channel: Optional[int] = None,
@@ -119,6 +144,7 @@ class Query:
         in the SAME single scan (multi-channel results are (Q, K)-shaped,
         one column per channel). Calls accumulate ops, but the channel set
         is fixed once chosen — it is compiled into the scan."""
+        self._no_latest("aggregation")
         if channel is not None and channels is not None:
             raise ValueError(
                 "pass channel= (single) OR channels= (batched), not both.")
@@ -146,6 +172,8 @@ class Query:
         if not isinstance(other, Query):
             return NotImplemented
         sym = "&" if mode == "and" else "|"
+        for side in (self, other):
+            side._no_latest(f"the {sym} combinator")
         for side in (self, other):
             if side.mode is not None and side.mode != mode \
                     and side._n_clauses() >= 2:
@@ -198,6 +226,11 @@ class Query:
 
     def build(self) -> Tuple[QueryPred, AggSpec]:
         """Compile to the engine's ``(QueryPred, AggSpec)`` (q=1)."""
+        if self.want_latest:
+            raise ValueError(
+                "a latest() query does not compile to a QueryPred: it never "
+                "touches the scan engine. Run it through AerialDB.query(...) "
+                "(or AerialDB.latest() directly) to read the hot cache.")
         if self._n_clauses() == 0:
             raise ValueError(
                 "empty query: add at least one clause (bbox / time / shard). "

@@ -50,8 +50,9 @@ import numpy as np
 from repro.api.query import Query
 from repro.core import datastore as _ds
 from repro.core import repair as _repair
-from repro.core.datastore import (AggSpec, QueryInfo, QueryResult, StoreConfig,
-                                  StoreState, init_store)
+from repro.core.datastore import (AggSpec, LatestResult, QueryInfo,
+                                  QueryResult, StoreConfig, StoreState,
+                                  init_store)
 from repro.core.index import QueryPred
 from repro.core.placement import ShardMeta
 from repro.distributed import federation as _fed
@@ -91,6 +92,17 @@ class AerialDB:
         self._open_outages: list = []
         self._closed_outages: list = []
         self._pending_sids: set = set()
+        # Ingest-time index-capacity drop watch: each insert's
+        # (sid arrays, per-edge index_entries_dropped DEVICE array) is
+        # recorded WITHOUT reading the array — reading would force a device
+        # sync and break the ingest pipeline's double-buffering. The watch is
+        # drained (arrays finally read, affected batches' sids folded into
+        # ``_dropped_sids``) lazily: at repair/ledger-snapshot time, or once
+        # the backlog passes a bound. ``_dropped_sids`` ride the OutageLog's
+        # pending set so an INCREMENTAL repair re-attempts the dropped
+        # entries exactly like a full sweep would.
+        self._drop_watch: list = []
+        self._dropped_sids: set = set()
         dead = np.nonzero(~np.asarray(self._alive, bool))[0]
         if dead.size:
             # Adopted state with unknown outage history: a fail_step of -1
@@ -150,10 +162,38 @@ class AerialDB:
 
     # -- ingest -------------------------------------------------------------
 
+    # Drop-watch backlog bound: past this many unread insert telemetry
+    # records, the next ingest drains them (each is months stale by then —
+    # its compute long finished — so reading does not stall the device).
+    _DROP_WATCH_MAX = 64
+
+    def _watch_drops(self, sid_hi, sid_lo, dropped) -> None:
+        """Record one ingest's (sids, device drop-count array) for lazy
+        draining. ``sid_hi``/``sid_lo`` are host-side (N, B); ``dropped`` is
+        the un-synced (N, E) device array from the insert info."""
+        self._drop_watch.append((sid_hi, sid_lo, dropped))
+        if len(self._drop_watch) > self._DROP_WATCH_MAX:
+            self._drain_drop_watch()
+
+    def _drain_drop_watch(self) -> None:
+        """Read the watched drop counters (device sync point) and fold the
+        sids of every round that dropped index entries into
+        ``_dropped_sids``. Superset semantics are fine: sweeping a batch-mate
+        whose entry landed is a canonical-placement no-op."""
+        for hi, lo, dropped in self._drop_watch:
+            d = np.asarray(dropped)
+            for rnd in np.nonzero(d.sum(axis=1) > 0)[0]:
+                self._dropped_sids.update(
+                    _repair.sid_key(int(h), int(l))
+                    for h, l in zip(hi[rnd], lo[rnd]))
+        self._drop_watch = []
+
     def insert(self, payload, meta: ShardMeta) -> dict:
         """Insert one batch of B shards (R tuples each); returns the info
         dict (replicas, per-edge intake/index telemetry)."""
         payload = jnp.asarray(payload)
+        sid_hi = np.asarray(meta.sid_hi)[None]       # host copies of INPUTS —
+        sid_lo = np.asarray(meta.sid_lo)[None]       # no device-sync hazard
         meta = ShardMeta(*[jnp.asarray(f) for f in meta])
         if self._mesh is None:
             self._state, info = _ds._insert(self._cfg, self._state, payload,
@@ -162,14 +202,19 @@ class AerialDB:
             self._state, info = _fed.federated_insert_step(
                 self._cfg, self._state, payload, meta, self._alive,
                 self._mesh)
+        self._watch_drops(sid_hi, sid_lo,
+                          info["index_entries_dropped"][None])
         return info
 
     def ingest_rounds(self, payloads, metas) -> dict:
         """Fused multi-round ingest (one ``lax.scan`` dispatch, donated
         state); returns the info dict stacked over rounds."""
+        sid_hi = np.asarray(metas.sid_hi)            # (N, B) host copies
+        sid_lo = np.asarray(metas.sid_lo)
         self._state, info = _fed.ingest_rounds(
             self._cfg, self._state, payloads, metas, self._alive,
             mesh=self._mesh)
+        self._watch_drops(sid_hi, sid_lo, info["index_entries_dropped"])
         return info
 
     # -- query --------------------------------------------------------------
@@ -211,8 +256,16 @@ class AerialDB:
                 (each query consumes a fresh split).
 
         Returns ``(QueryResult, QueryInfo)``; project the requested
-        aggregates with ``result.view(agg_spec)``.
+        aggregates with ``result.view(agg_spec)``. A ``Query().latest()``
+        builder short-circuits to :meth:`latest` and returns its
+        ``LatestResult`` directly (no scan, no planner, no ``QueryInfo``).
         """
+        if isinstance(q, Query) and q.want_latest:
+            if agg is not None:
+                raise ValueError(
+                    "latest() queries take no AggSpec: the hot-cache read "
+                    "returns raw (D, 3+V) records, not aggregates.")
+            return self.latest()
         pred, spec = self._compile(q, agg)
         spec.validate_for(self._cfg)
         if key is None:
@@ -223,6 +276,26 @@ class AerialDB:
         return _fed.federated_query_step(
             self._cfg, self._state, pred, self._alive, key, self._mesh,
             use_kernel=self._use_kernel, interpret=self._interpret, agg=spec)
+
+    def latest(self) -> LatestResult:
+        """Latest-per-drone hot-cache read (paper §4.4 near-real-time path):
+        the O(drones) ``LatestResult`` — newest (max-t) record, last-seen
+        ingest step, and validity per drone id — straight from the
+        replicated cache state, bypassing the log scan, the index, and the
+        planner. Identical on both runtimes (the cache is replicated across
+        the mesh and updated identically on every device — differential
+        harness coverage in ``tests/test_federation.py``); staleness bound:
+        exact up to the last *completed* insert (records still in an ingest
+        pipeline's pending buffer are overlaid by
+        ``IngestPipeline.latest()``)."""
+        if self._cfg.max_drones == 0:
+            raise ValueError(
+                "the latest-per-drone cache is disabled: open the session "
+                "with StoreConfig.max_drones >= the fleet's highest drone id "
+                "+ 1 to track an O(drones) hot cache (drone id = sid_hi).")
+        seen = self._state.latest_seen
+        return LatestResult(record=self._state.latest_f, last_seen=seen,
+                            valid=seen >= 0)
 
     # -- membership / failure domains ---------------------------------------
 
@@ -342,7 +415,11 @@ class AerialDB:
         failed AND already recovered is a full-sweep no-op (its stored
         placement equals the canonical one under the restored mask), so
         selecting it would make the sweep O(store) again. Shards *ingested*
-        while that edge was away are what its closed window selects."""
+        while that edge was away are what its closed window selects. The
+        pending set folds in ``_dropped_sids`` (batches whose index entries
+        were dropped at ingest by a momentarily-full table) so the
+        incremental sweep re-attempts them like ``repair(full=True)``."""
+        self._drain_drop_watch()
         affected = set()
         for rec in self._open_outages:
             affected |= rec[0]
@@ -350,7 +427,8 @@ class AerialDB:
             windows=tuple(sorted((int(f), int(r))
                                  for _eds, f, r in self._closed_outages)),
             affected_edges=tuple(sorted(affected)),
-            pending_sids=tuple(sorted(self._pending_sids)))
+            pending_sids=tuple(sorted(self._pending_sids
+                                      | self._dropped_sids)))
 
     def repair(self, *, full: bool = False) -> dict:
         """Anti-entropy re-replication sweep (``core.repair.repair_state``):
@@ -393,6 +471,12 @@ class AerialDB:
             self._pending_sids = set()
         else:
             self._pending_sids |= set(swept_keys)
+        # Dropped-entry ledger: a sweep that re-attempted every watched sid
+        # without re-dropping (tables have room again) settles the debt; a
+        # sweep that dropped again keeps them pending for the next repair.
+        self._drain_drop_watch()
+        if info.get("entries_dropped", 0) == 0:
+            self._dropped_sids = set()
         self._last_repair = info
         return info
 

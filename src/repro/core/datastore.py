@@ -155,6 +155,8 @@ class StoreConfig:
     retention_every: int = 4                      # insert steps between index sweeps
     n_failure_domains: int = 1                    # contiguous device blocks to spread
                                                   # each shard's replicas across
+    max_drones: int = 0                           # latest-per-drone hot-cache rows
+                                                  # (0 disables the cache)
 
     def __post_init__(self):
         if not (1 <= self.replication <= 3):
@@ -173,6 +175,11 @@ class StoreConfig:
             raise ValueError(
                 f"retention_every={self.retention_every} must be >= 1 (index "
                 "retention sweeps run every retention_every insert steps).")
+        if self.max_drones < 0:
+            raise ValueError(
+                f"max_drones={self.max_drones} must be >= 0: it sizes the "
+                "latest-per-drone hot cache (0 disables it; drone ids >= "
+                "max_drones are not cached).")
         if self.n_failure_domains < 1 or self.n_edges % self.n_failure_domains:
             raise ValueError(
                 f"n_failure_domains={self.n_failure_domains} must be >= 1 and "
@@ -213,6 +220,33 @@ class StoreState(NamedTuple):
     tup_overwritten: jnp.ndarray  # (E,) tuples aged out by ring retention
     tup_dropped: jnp.ndarray      # (E,) tuples actually lost (0 by design)
     steps: jnp.ndarray            # () insert steps executed (retention cadence)
+    latest_f: jnp.ndarray         # (D, 3+V) latest-per-drone hot cache —
+                                  #      max-t record per drone id, REPLICATED
+                                  #      across the mesh (D = cfg.max_drones)
+    latest_seen: jnp.ndarray      # (D,) insert step that last updated each
+                                  #      drone's cache row; -1 = never seen
+
+
+class LatestResult(NamedTuple):
+    """``AerialDB.latest()`` / ``Query().latest()`` answer: the O(drones)
+    hot-cache read (paper §4.4 near-real-time shape — Wingxtra's "latest
+    position matters more than history" rule), bypassing the log scan and
+    the index entirely.
+
+      record:    (D, 3+V) last (max-t) record per drone id; rows of drones
+                 never seen are zeros. Channels a partial payload never
+                 filled are NaN (the validity mask is ``isfinite``).
+      last_seen: (D,) insert step that wrote each row (-1 = never seen).
+      valid:     (D,) ``last_seen >= 0``.
+
+    Staleness bound: the cache never forgets — each row is the max-t record
+    ever *inserted* for that drone, even after ring retention has aged the
+    tuple itself out of the log, and is exact the moment the insert that
+    carried it completes (no scan, no index lookup, no planner).
+    """
+    record: jnp.ndarray
+    last_seen: jnp.ndarray
+    valid: jnp.ndarray
 
 
 # The monotonic counter saturates here instead of wrapping int32 negative
@@ -440,6 +474,8 @@ def init_store(cfg: StoreConfig) -> StoreState:
         tup_overwritten=jnp.zeros((e,), jnp.int32),
         tup_dropped=jnp.zeros((e,), jnp.int32),
         steps=jnp.zeros((), jnp.int32),
+        latest_f=jnp.zeros((cfg.max_drones, cfg.tuple_width), jnp.float32),
+        latest_seen=jnp.full((cfg.max_drones,), -1, jnp.int32),
     )
 
 
@@ -461,6 +497,47 @@ def _index_edge_mask(cfg: StoreConfig, meta: ShardMeta, replicas: jnp.ndarray,
     mask = sm | tm | rep_mask
     mask = jnp.where((s_ovf | t_ovf)[:, None], jnp.ones_like(mask), mask)
     return mask & alive[None, :]
+
+
+def _update_latest(latest_f: jnp.ndarray, latest_seen: jnp.ndarray,
+                   payload: jnp.ndarray, sid_hi: jnp.ndarray,
+                   steps: jnp.ndarray):
+    """Latest-per-drone hot-cache update (the §4.4 near-real-time fast path).
+
+    Deterministic under duplicate drone ids: ``.at[].set`` with duplicate
+    scatter indices has unspecified winner order in XLA, so the per-drone
+    argmax is built from two COMMUTATIVE ``.at[].max`` scatters instead —
+    (1) max-t per drone, (2) max flat index among the records achieving that
+    t (so t ties resolve to the last record in the batch, matching the host
+    oracle's "latest arrival wins" rule). Records with non-finite t are
+    excluded; drone ids outside [0, D) fall off via mode="drop".
+
+    Inputs are replicated under shard_map (payload/meta/steps plus the
+    previous replicated cache), so every device computes the identical new
+    cache and the P() out-spec is sound without a collective.
+    """
+    d = latest_f.shape[0]
+    b, r, w = payload.shape
+    flat = payload.reshape(b * r, w)                              # (N, W)
+    did = jnp.broadcast_to(sid_hi[:, None], (b, r)).reshape(-1)   # (N,)
+    t = flat[:, 0]
+    # Negative ids would WRAP under .at[] scatter semantics (mode="drop" only
+    # guards the high side) — neutralise them alongside non-finite t.
+    vmask = jnp.isfinite(t) & (did >= 0)
+    t_clean = jnp.where(vmask, t, -jnp.inf)
+    cand_t = jnp.full((d,), -jnp.inf, jnp.float32).at[did].max(
+        t_clean, mode="drop")                                     # (D,)
+    hit = vmask & (t_clean == jnp.take(cand_t, did, mode="fill",
+                                       fill_value=jnp.inf))
+    idx = jnp.where(hit, jnp.arange(b * r, dtype=jnp.int32), -1)
+    best = jnp.full((d,), -1, jnp.int32).at[did].max(idx, mode="drop")
+    cur_t = jnp.where(latest_seen >= 0, latest_f[:, 0], -jnp.inf)
+    newer = (best >= 0) & (cand_t >= cur_t)
+    latest_f = jnp.where(newer[:, None],
+                         jnp.take(flat, jnp.maximum(best, 0), axis=0),
+                         latest_f)
+    latest_seen = jnp.where(newer, steps, latest_seen)
+    return latest_f, latest_seen
 
 
 def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
@@ -529,9 +606,12 @@ def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
     # --- index retention (cadenced): retire entries whose data has aged out
     # of every replica edge's ring, then compact so the cursor is reusable.
     # Runs BEFORE this batch's index writes so freed slots host the fresh
-    # entries. Watermarks (oldest retained timestamp; -inf until the ring
-    # wraps) are only computed on sweep steps — the (E, CAP) reduction stays
-    # off the ingest hot path. The watermark gather sits OUTSIDE the cond so
+    # entries. Watermarks (oldest retained timestamp; -inf until the edge
+    # has ever aged out a tuple — wrap OR repair-time ring reclamation, i.e.
+    # tup_overwritten > 0, so retention resumes after a reclaimed ring is
+    # rewound below cap) are only computed on sweep steps — the (E, CAP)
+    # reduction stays off the ingest hot path. The watermark gather sits
+    # OUTSIDE the cond so
     # every device executes the same collective schedule regardless of how
     # rep-checking handles conditional branches. ---
     steps = state.steps + 1
@@ -542,7 +622,12 @@ def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
                     < valid_after[:, None])                      # (E_loc, CAP_L)
         t_oldest = jnp.min(jnp.where(retained, tup_f[:, 0, :], jnp.inf),
                            axis=1)                               # t row
-        return jnp.where(tup_count > cap, t_oldest,
+        # Epoch-aware: after repair's ring reclamation rewinds tup_count
+        # below cap, tup_overwritten > 0 still marks the edge as having
+        # lost tuples — without it the watermark would read -inf and
+        # retention would silently pause until the ring re-wrapped.
+        lossy = (tup_count > cap) | (tup_overwritten > 0)
+        return jnp.where(lossy, t_oldest,
                          -jnp.inf).astype(jnp.float32)           # (E_loc,)
 
     wm_local = jax.lax.cond(
@@ -561,14 +646,28 @@ def insert_local(cfg: StoreConfig, state: StoreState, payload: jnp.ndarray,
                                    constant_values=-1),
                            idx_mask, step=steps)
 
+    # --- latest-per-drone hot cache: replicated O(D) state, updated on the
+    # ingest path from the same replicated payload (statically compiled out
+    # when the cache is disabled so existing graphs are untouched). ---
+    latest_f, latest_seen = state.latest_f, state.latest_seen
+    if cfg.max_drones:
+        latest_f, latest_seen = _update_latest(
+            latest_f, latest_seen, payload, meta.sid_hi, steps)
+
     new_state = StoreState(index, tup_f, tup_sid, tup_count, tup_pos,
-                           tup_overwritten, state.tup_dropped, steps)
+                           tup_overwritten, state.tup_dropped, steps,
+                           latest_f, latest_seen)
     info = {
         "replicas": replicas,
         "intake_per_edge": n_in,
         "index_writes_per_edge": jnp.sum(idx_mask, axis=0),
         "tuples_overwritten": overwritten_now,
         "tuples_dropped": jnp.zeros_like(n_in),
+        # Ingest-time index-capacity drops (per-edge delta this step): the
+        # session ledger folds the batch's sids into the incremental-repair
+        # pending set whenever this is nonzero, closing the repair() vs
+        # repair(full=True) gap for drops outside swept shards.
+        "index_entries_dropped": index.dropped - state.index.dropped,
         "index_entries_retired": index.retired - state.index.retired,
         "retention_watermark": watermark,
     }

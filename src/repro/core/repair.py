@@ -36,9 +36,11 @@ given the mask) and converges the store to it, one swept shard at a time:
      slots are retired eagerly (the ring is re-packed in chronological
      order, freed slots reset to the never-written sentinel) instead of
      bleeding capacity until wraparound. The re-pack rewinds ``tup_count``
-     below ``tuple_capacity``, so that edge's retention watermark reads
-     ``-inf`` until its ring re-wraps — retention pauses rather than
-     over-retiring. Copies stranded on an edge that was *dead* at
+     below ``tuple_capacity``; the retention watermark stays live anyway —
+     ``tup_overwritten > 0`` marks the edge as having aged out tuples, so
+     the epoch-aware watermark keeps retiring from the re-packed
+     (chronologically ordered) ring instead of pausing until re-wrap.
+     Copies stranded on an edge that was *dead* at
      re-placement time are reclaimed the next time the shard re-places (or
      by wraparound) — repair never touches dead edges, whose frozen rings
      may be the only surviving source;
@@ -71,12 +73,13 @@ deterministic, so a shard ingested under the current mask with entries on
 every slice-owner edge is already canonical — and is skipped without
 computing its placement, which is what makes repair cost scale with the
 outage, not the store. The incremental sweep is bitwise-identical to the
-full sweep (property-tested in ``tests/test_repair_incremental.py``), with
-one scoped exception: entries dropped at ingest because an index table was
-momentarily full (``index.dropped``) are re-attempted by a full sweep for
-*any* shard but only for swept shards under an incremental one — overflow
-drop is a capacity-sizing pathology, not an outage, and retention owns
-reclaiming that table space. ``outage=None`` always runs the full sweep.
+full sweep (property-tested in ``tests/test_repair_incremental.py``).
+Entries dropped at ingest because an index table was momentarily full
+(``index.dropped``) are covered too: the session facade watches the
+per-insert ``index_entries_dropped`` telemetry and folds the affected
+batches' sids into ``pending_sids``, so an incremental sweep re-attempts
+them exactly like ``repair(full=True)`` would. ``outage=None`` always runs
+the full sweep.
 
 The sweep is **host-side numpy** by design: repair is a rare, metadata-scale
 control-plane event (like an operator-triggered rebalance), not a hot path.
@@ -411,8 +414,9 @@ def repair_state(cfg: StoreConfig, state: StoreState, alive,
     # Ring reclamation re-pack (step 3, batched per edge): drop every live
     # slot whose sid was retired from this edge, squash survivors to the
     # front in chronological order, reset freed slots to the never-written
-    # sentinel. Rewinding tup_count below cap flips the edge's retention
-    # watermark to -inf until its ring re-wraps (see module docstring).
+    # sentinel. Rewinding tup_count below cap is watermark-safe: the bumped
+    # tup_overwritten keeps the epoch-aware retention watermark live on the
+    # re-packed ring (see module docstring).
     for dst in sorted(reclaim):
         w = live_window(dst)
         if w == 0:
@@ -446,5 +450,6 @@ def repair_state(cfg: StoreConfig, state: StoreState, alive,
         index=index, tup_f=jnp.asarray(tup_f), tup_sid=jnp.asarray(tup_sid),
         tup_count=jnp.asarray(tup_count), tup_pos=jnp.asarray(tup_pos),
         tup_overwritten=jnp.asarray(tup_over), tup_dropped=state.tup_dropped,
-        steps=state.steps)
+        steps=state.steps, latest_f=state.latest_f,
+        latest_seen=state.latest_seen)
     return new_state, info

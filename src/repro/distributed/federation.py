@@ -108,6 +108,7 @@ def _insert_info_specs(scanned: bool, axes: tuple):
         "index_writes_per_edge": per_edge,
         "tuples_overwritten": per_edge,
         "tuples_dropped": per_edge,
+        "index_entries_dropped": per_edge,
         "index_entries_retired": per_edge,
         "retention_watermark": P(),
     }

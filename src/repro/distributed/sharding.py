@@ -101,7 +101,11 @@ def store_partition_specs(edge_axes=(EDGE_AXIS,)):
         index=IndexState(ent_f=edge, ent_i=edge, valid=edge, cursor=edge,
                          dropped=edge, retired=edge, ent_step=edge),
         tup_f=edge, tup_sid=edge, tup_count=edge, tup_pos=edge,
-        tup_overwritten=edge, tup_dropped=edge, steps=P())
+        tup_overwritten=edge, tup_dropped=edge, steps=P(),
+        # Latest-per-drone hot cache: leading dim is DRONES, not edges —
+        # replicated on every device (each computes the identical update
+        # from the replicated payload; AerialDB.latest() reads any copy).
+        latest_f=P(), latest_seen=P())
 
 
 def device_edge_block(n_edges: int, n_devices: int, device: int) -> range:

@@ -1,0 +1,26 @@
+"""Streaming ingest subsystem (PR 8): the host-side front door that turns
+ragged, unreliable per-drone telemetry into the store's device-shaped shard
+batches — async submit queue with (drone, seq) dedup and backpressure,
+double-buffered batch coalescing over ``AerialDB.insert``/``ingest_rounds``,
+and the latest-per-drone overlay completing the O(drones) hot path.
+
+Layering contract: this package sits strictly ABOVE ``repro.api`` (it only
+ever drives the facade) and is pure host-side numpy + dispatch — no jit
+bodies of its own, so the differential harness covering the facade covers
+every pipeline flush too.
+
+    from repro.api import AerialDB
+    from repro.ingest import IngestPipeline
+
+    pipe = IngestPipeline(AerialDB.open(cfg, max_drones=D))
+    pipe.submit([(drone_id, seq, t, lat, lon, *values), ...])
+    pipe.flush()                       # full shards -> device, async
+    record, valid = pipe.latest()      # store cache ∪ in-flight records
+"""
+
+from repro.ingest.coalesce import group_shards, plan_chunks
+from repro.ingest.latest import latest_oracle, overlay_latest
+from repro.ingest.pipeline import IngestPipeline
+
+__all__ = ["IngestPipeline", "group_shards", "plan_chunks", "latest_oracle",
+           "overlay_latest"]

@@ -1,0 +1,67 @@
+"""Host-side latest-per-drone oracle + overlay for the streaming pipeline.
+
+The device-side hot cache (``core.datastore._update_latest``, served by
+``AerialDB.latest()``) answers "newest record per drone" in O(drones) from
+replicated state. This module is its *specification*: a brute-force numpy
+oracle over an explicit record set, used by the property tests to prove the
+cache equals "max-t tuple per drone over the retained window ∪ in-flight
+records", and by ``IngestPipeline.latest()`` to overlay still-pending
+(in-flight) records onto the store's cache answer.
+
+Tie rule (shared with the device cache): among records of one drone with the
+same maximal ``t``, the **latest arrival wins** — last position in the
+record stream for the oracle, highest flat batch index for the device
+scatter, pending-over-stored for the overlay.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["latest_oracle", "overlay_latest"]
+
+
+def latest_oracle(drone_ids, t, rows, max_drones: int):
+    """Brute-force latest-per-drone over an explicit record set.
+
+    Args:
+      drone_ids: (N,) int drone id per record.
+      t:         (N,) float timestamp per record.
+      rows:      (N, W) float full records (t, lat, lon, values...).
+      max_drones: cache size D; ids outside [0, D) are ignored.
+
+    Returns ``(record (D, W) float32, valid (D,) bool)`` — for each drone,
+    the max-t record (later stream position wins t ties; non-finite t
+    excluded), zeros where the drone never appears.
+    """
+    drone_ids = np.asarray(drone_ids).reshape(-1)
+    t = np.asarray(t, np.float32).reshape(-1)
+    rows = np.asarray(rows, np.float32).reshape(t.shape[0], -1)
+    record = np.zeros((max_drones, rows.shape[1]), np.float32)
+    valid = np.zeros((max_drones,), bool)
+    best_t = np.full((max_drones,), -np.inf, np.float32)
+    ok = np.isfinite(t) & (drone_ids >= 0) & (drone_ids < max_drones)
+    for i in np.nonzero(ok)[0]:
+        d = int(drone_ids[i])
+        if t[i] >= best_t[d]:
+            best_t[d] = t[i]
+            record[d] = rows[i]
+            valid[d] = True
+    return record, valid
+
+
+def overlay_latest(record, valid, drone_ids, t, rows):
+    """Overlay in-flight records onto a store cache answer, IN PLACE.
+
+    ``record``/``valid`` are host copies of ``LatestResult.record`` /
+    ``.valid``; pending records win ties against stored ones (they are the
+    later arrival by definition — still unflushed). Returns (record, valid).
+    """
+    d_max = record.shape[0]
+    pend_rec, pend_valid = latest_oracle(drone_ids, t, rows, d_max)
+    stored_t = np.where(valid, record[:, 0], -np.inf)
+    pend_t = np.where(pend_valid, pend_rec[:, 0], -np.inf)
+    win = pend_valid & (pend_t >= stored_t)
+    record[win] = pend_rec[win]
+    valid |= win
+    return record, valid

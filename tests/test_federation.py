@@ -50,7 +50,10 @@ def make_cfg(**overrides):
     sites = make_sites(E, CityConfig(), seed=3)
     kw = dict(n_edges=E, sites=tuple(map(tuple, sites.tolist())),
               tuple_capacity=2048, index_capacity=512, max_shards_per_query=64,
-              records_per_shard=12, retention_every=2)
+              records_per_shard=12, retention_every=2,
+              # Latest-per-drone hot cache enabled everywhere: its replicated
+              # state rides every bitwise state comparison below for free.
+              max_drones=16)
     kw.update(overrides)
     return StoreConfig(**kw)
 
@@ -456,9 +459,55 @@ def test_partition_specs_congruent_with_state(mesh):
         if leaf.ndim == 0:
             assert spec == P(), name  # the one replicated scalar (steps)
             assert "steps" in name
+        elif "latest" in name:
+            # The latest-per-drone cache is the one replicated array family:
+            # its leading dim is DRONES, and every device holds the whole
+            # identically-updated copy.
+            assert spec == P(), name
+            assert leaf.shape[0] == cfg.max_drones, name
         else:
             assert spec == P(axes), name
             assert leaf.shape[0] == cfg.n_edges, name
+
+
+def test_facade_latest_identical(loaded_facades):
+    """AerialDB.latest() (and the Query().latest() dispatch): the replicated
+    hot cache answers bitwise identically on the single-device and sharded
+    runtimes, on both mesh layouts, and agrees with a brute-force max-t
+    oracle over everything ever inserted (nothing aged out at this scale)."""
+    db_ref, db_fed = loaded_facades
+    l_ref = db_ref.latest()
+    l_fed = db_fed.latest()
+    for f in l_ref._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(l_ref, f)),
+                                      np.asarray(getattr(l_fed, f)),
+                                      err_msg=f)
+    l_q = db_fed.query(Query().latest())
+    for f in l_ref._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(l_fed, f)),
+                                      np.asarray(getattr(l_q, f)), err_msg=f)
+    # Against the host oracle (12 drones inserted, cache sized for 16).
+    payloads, metas = fleet_rounds()
+    p = np.asarray(payloads).reshape(-1, *payloads.shape[2:])   # (N*B, R, W)
+    hi = np.asarray(metas.sid_hi).reshape(-1)
+    rec = np.asarray(l_ref.record)
+    seen = np.asarray(l_ref.valid)
+    for d in range(db_ref.cfg.max_drones):
+        rows = p[hi == d].reshape(-1, p.shape[-1])
+        if rows.size == 0:
+            assert not seen[d]
+            continue
+        assert seen[d]
+        best = rows[np.argmax(rows[:, 0])]
+        np.testing.assert_array_equal(rec[d], best)
+
+
+def test_facade_latest_disabled_raises():
+    db = AerialDB.open(make_cfg(max_drones=0))
+    with pytest.raises(ValueError, match="max_drones"):
+        db.latest()
+    with pytest.raises(ValueError, match="max_drones"):
+        db.query(Query().latest())
 
 
 def test_mesh_divisibility_rejected(mesh):

@@ -1,0 +1,368 @@
+"""Streaming ingest subsystem (PR 8): pipeline + coalescer + latest cache.
+
+Three contracts under test:
+
+1. **Adversarial-stream equivalence** (property): duplicate, out-of-order,
+   partial, and burst-interleaved record streams through ``IngestPipeline``
+   leave the store in the SAME state as the sorted/deduped synchronous
+   insert path — bitwise when the flush boundaries coincide (the coalescer
+   sorts by ``(drone, seq)``, so arrival order is irrelevant), content-level
+   (catch-all counts + latest cache) across arbitrary flush interleavings.
+2. **Latest-cache-vs-oracle**: ``AerialDB.latest()`` equals the brute-force
+   numpy oracle over everything inserted, and ``IngestPipeline.latest()``
+   equals it over everything *submitted* (store ∪ in-flight) — on the
+   single-device runtime and differentially on the ``(4,)`` and ``(2, 2)``
+   meshes.
+3. **Epoch-aware retention** (PR 7 follow-up regression): after repair's
+   ring reclamation rewinds ``tup_count`` below capacity, the retention
+   watermark must stay finite (``tup_overwritten > 0`` marks the loss
+   epoch) and aged index entries must still retire on the next sweep —
+   pre-fix the watermark read ``-inf`` and retention silently paused until
+   the ring re-wrapped.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import AerialDB, Query
+from repro.core.datastore import StoreConfig, make_pred
+from repro.data.synthetic import CityConfig, DroneFleet, make_sites
+from repro.ingest import (IngestPipeline, group_shards, latest_oracle,
+                          plan_chunks)
+from repro.launch.mesh import make_edge_mesh, make_fleet_mesh
+
+E = 8
+N_DEV = 4
+D_MAX = 16
+R = 4
+CATCH_ALL = make_pred(q=1, t0=-1e9, t1=1e9, has_temporal=True, is_and=True)
+
+
+def _cfg(**overrides):
+    sites = make_sites(E, CityConfig(), seed=3)
+    kw = dict(n_edges=E, sites=tuple(map(tuple, sites.tolist())),
+              tuple_capacity=2048, index_capacity=512,
+              max_shards_per_query=64, records_per_shard=R,
+              retention_every=2, max_drones=D_MAX)
+    kw.update(overrides)
+    return StoreConfig(**kw)
+
+
+def _assert_states_identical(a, b, msg=""):
+    names = [jax.tree_util.keystr(p) for p, _
+             in jax.tree_util.tree_flatten_with_path(a)[0]]
+    for name, x, y in zip(names, jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg}{name}")
+
+
+def _stream(seed, n_drones=10, max_seq=12):
+    """An adversarial telemetry stream + its clean reference.
+
+    Returns ``(stream, clean)`` — both ``(drone, seq, rows (N, 3+V))``
+    triples. The stream is shuffled, re-sends ~10% of records verbatim
+    (duplicates), skips ~10% of seqs (drops, i.e. seq gaps), and NaNs out
+    some value channels (partial payloads). ``clean`` is the deduped
+    ``(drone, seq)``-sorted record set the stream must be equivalent to.
+    """
+    rng = np.random.default_rng(seed)
+    drone, seq, rows = [], [], []
+    for d in range(n_drones):
+        n = int(rng.integers(1, max_seq + 1))
+        seqs = np.arange(n)[rng.random(n) > 0.1]          # ~10% dropped
+        for s in seqs:
+            t = 1000.0 * s + d                            # unique t per record
+            row = np.empty(7, np.float32)
+            row[:3] = (t, 12.9 + 0.001 * d, 77.5 + 0.0005 * s)
+            row[3:] = rng.normal(25, 5, 4)
+            if rng.random() < 0.1:                        # partial payload
+                row[3 + int(rng.integers(0, 4)):] = np.nan
+            drone.append(d), seq.append(s), rows.append(row)
+    drone, seq = np.asarray(drone), np.asarray(seq)
+    rows = np.stack(rows)
+    dup = rng.integers(0, len(drone), max(len(drone) // 10, 1))
+    order = rng.permutation(np.r_[np.arange(len(drone)), dup])
+    stream = (drone[order], seq[order], rows[order])
+    srt = np.lexsort((seq, drone))
+    clean = (drone[srt], seq[srt], rows[srt])
+    return stream, clean
+
+
+def _submit_stream(pipe, stream, rng, n_chunks):
+    d, s, rows = stream
+    for part in np.array_split(np.arange(d.shape[0]), n_chunks):
+        pipe.submit_arrays(d[part], s[part], rows[part, 0], rows[part, 1],
+                           rows[part, 2], rows[part, 3:])
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: adversarial streams == sorted/deduped synchronous path
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 1 << 30))
+@settings(deadline=None, max_examples=8)
+def test_adversarial_stream_state_bitwise_equivalent(seed):
+    """Shuffled + duplicated + partial + gappy stream, submitted in several
+    bursts, then ONE drain flush == the clean sorted/deduped stream through
+    an identical pipeline — bitwise identical StoreState (same shards, same
+    sids, same dispatch order), and counters reconcile exactly."""
+    rng = np.random.default_rng(seed + 1)
+    stream, clean = _stream(seed)
+    cfg = _cfg()
+    adv, ref = (IngestPipeline(AerialDB.open(cfg, seed=0))
+                for _ in range(2))
+    _submit_stream(adv, stream, rng, n_chunks=int(rng.integers(1, 5)))
+    _submit_stream(ref, clean, rng, n_chunks=1)
+    assert adv.counters["accepted"] == clean[0].shape[0]
+    assert adv.counters["duplicate"] == stream[0].shape[0] - clean[0].shape[0]
+    adv.flush(drain=True)
+    ref.flush(drain=True)
+    _assert_states_identical(adv.db.state, ref.db.state)
+    rec = adv.reconcile()
+    assert rec["ok"], rec
+    assert rec["pending"] == 0
+
+
+@given(st.integers(0, 1 << 30))
+@settings(deadline=None, max_examples=6)
+def test_burst_interleaved_flushes_content_equivalent(seed):
+    """Flush boundaries interleaved with submit bursts (the streaming shape):
+    step counters and batch shapes legitimately differ from the synchronous
+    path, but the CONTENT must not — catch-all count equals the deduped
+    record total, per-shard queries answer, and the latest cache equals the
+    oracle over everything submitted."""
+    rng = np.random.default_rng(seed + 2)
+    stream, clean = _stream(seed)
+    cfg = _cfg()
+    pipe = IngestPipeline(AerialDB.open(cfg, seed=0))
+    d, s, rows = stream
+    cuts = np.array_split(np.arange(d.shape[0]), int(rng.integers(2, 5)))
+    for part in cuts:
+        pipe.submit_arrays(d[part], s[part], rows[part, 0], rows[part, 1],
+                           rows[part, 2], rows[part, 3:])
+        pipe.flush()                       # full shards only; tails pend
+    pipe.flush(drain=True)
+    rec = pipe.reconcile()
+    assert rec["ok"] and rec["pending"] == 0, rec
+    res, _ = pipe.db.query(CATCH_ALL, key=jax.random.key(0))
+    assert int(np.asarray(res.count)[0]) == clean[0].shape[0]
+    # Latest cache == oracle over the deduped submitted set.
+    o_rec, o_val = latest_oracle(clean[0], clean[2][:, 0], clean[2], D_MAX)
+    got = pipe.db.latest()
+    np.testing.assert_array_equal(np.asarray(got.valid), o_val)
+    np.testing.assert_array_equal(np.asarray(got.record), o_rec)
+
+
+def test_pipeline_latest_overlays_pending():
+    """In-flight (unflushed) records are part of the latest answer: the
+    pipeline overlay equals the oracle over everything SUBMITTED, while the
+    store cache alone only covers what was flushed."""
+    pipe = IngestPipeline(AerialDB.open(_cfg(), seed=0))
+    stream, clean = _stream(7)
+    _submit_stream(pipe, stream, np.random.default_rng(0), 1)
+    pipe.flush()                           # leaves sub-shard tails pending
+    assert pipe.pending > 0
+    o_rec, o_val = latest_oracle(clean[0], clean[2][:, 0], clean[2], D_MAX)
+    rec, val = pipe.latest()
+    np.testing.assert_array_equal(val, o_val)
+    np.testing.assert_array_equal(rec, o_rec)
+    # The store alone is stale exactly on the drones with pending tails.
+    store_val = np.asarray(pipe.db.latest().valid)
+    assert store_val.sum() <= o_val.sum()
+
+
+# ---------------------------------------------------------------------------
+# Latest cache differential on both mesh layouts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(jax.device_count() < N_DEV,
+                    reason=f"needs {N_DEV} host devices")
+@pytest.mark.parametrize("mesh_name", ["edge4", "fleet2x2"])
+def test_latest_cache_identical_on_meshes(mesh_name):
+    """The same pipeline traffic against the single-device and sharded
+    runtimes: full StoreState (including the replicated latest cache)
+    bitwise identical, and both equal the oracle."""
+    mesh = (make_edge_mesh(N_DEV) if mesh_name == "edge4"
+            else make_fleet_mesh(2, N_DEV // 2))
+    cfg = _cfg()
+    stream, clean = _stream(23)
+    pipes = [IngestPipeline(AerialDB.open(cfg, seed=0)),
+             IngestPipeline(AerialDB.open(cfg, mesh=mesh, seed=0))]
+    for pipe in pipes:
+        _submit_stream(pipe, stream, np.random.default_rng(3), 2)
+        pipe.flush(drain=True)
+    _assert_states_identical(pipes[0].db.state, pipes[1].db.state,
+                             msg=mesh_name)
+    o_rec, o_val = latest_oracle(clean[0], clean[2][:, 0], clean[2], D_MAX)
+    for pipe in pipes:
+        got = pipe.db.latest()
+        np.testing.assert_array_equal(np.asarray(got.valid), o_val)
+        np.testing.assert_array_equal(np.asarray(got.record), o_rec)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline mechanics: dedup, holes, backpressure, chunk planning
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_order_and_gap_refill():
+    """A seq gap leaves holes late arrivals may fill exactly once."""
+    pipe = IngestPipeline(AerialDB.open(_cfg(), seed=0))
+    sub = lambda pairs: pipe.submit([(d, s, 10.0 * s + d, 12.9, 77.5, 1, 2, 3, 4)
+                                     for d, s in pairs])
+    c = sub([(0, 0), (0, 5)])              # gap: seqs 1..4 become holes
+    assert c["accepted"] == 2
+    c = sub([(0, 3)])                      # late arrival fills a hole
+    assert c["accepted"] == 3 and c["duplicate"] == 0
+    c = sub([(0, 3), (0, 5), (0, 0)])      # all re-sends now
+    assert c["accepted"] == 3 and c["duplicate"] == 3
+
+
+def test_malformed_and_partial_records():
+    pipe = IngestPipeline(AerialDB.open(_cfg(), seed=0))
+    c = pipe.submit([
+        (0, 0, 1.0, 12.9, 77.5, 1.0, 2.0, 3.0, 4.0),   # complete
+        (1, 0, np.nan, 12.9, 77.5, 1.0),               # malformed t
+        (-3, 0, 1.0, 12.9, 77.5),                      # malformed id
+        (2, 0, 2.0, 12.9, 77.5, 1.0),                  # partial (1 of 4)
+        (3, 0, 3.0, 12.9, 77.5),                       # partial (0 of 4)
+    ])
+    assert c["accepted"] == 3 and c["partial"] == 2
+    assert c["dropped"] == 2 and c["dropped_malformed"] == 2
+    with pytest.raises(ValueError, match="n_values"):
+        pipe.submit([(0, 1, 1.0, 12.9, 77.5, 1, 2, 3, 4, 5)])
+
+
+def test_backpressure_bounds_pending():
+    pipe = IngestPipeline(AerialDB.open(_cfg(), seed=0), max_pending=10)
+    d = np.zeros(25, np.int64)
+    s = np.arange(25)
+    c = pipe.submit_arrays(d, s, s * 1.0, d + 12.9, d + 77.5)
+    assert c["accepted"] == 10 and pipe.pending == 10
+    assert c["dropped_backpressure"] == 15
+    pipe.flush(drain=True)                 # draining frees the buffer
+    c = pipe.submit_arrays(d[:5], s[:5] + 100, s[:5] + 100.0, d[:5] + 12.9,
+                           d[:5] + 77.5)
+    assert c["accepted"] == 15 and pipe.pending == 5
+    rec = pipe.reconcile()
+    assert rec["accepted"] == rec["flushed_records"] + rec["pending"]
+
+
+@given(st.integers(0, 4096), st.integers(1, 256))
+@settings(deadline=None, max_examples=50)
+def test_plan_chunks_partition_property(n, b_max):
+    sizes = plan_chunks(n, b_max)
+    assert sum(sizes) == n
+    assert all(s == b_max or (s & (s - 1)) == 0 for s in sizes)
+    # Bounded compile cache: at most one batch per power of two in the tail.
+    tail = [s for s in sizes if s != b_max]
+    assert len(tail) == len(set(tail))
+
+
+def test_group_shards_sid_continuity():
+    """sid_lo keeps counting across flushes, per drone, so (drone, lo) is
+    unique for the session and groups follow seq order."""
+    shard_seq = {}
+    rows = np.arange(24, dtype=np.float32).reshape(8, 3)
+    rows = np.repeat(rows, 1, axis=0)
+    d = np.array([0, 0, 0, 0, 1, 1, 1, 1])
+    s = np.array([3, 2, 1, 0, 0, 1, 2, 3])
+    batches, left = group_shards(d, s, rows, 4, shard_seq, drain=False)
+    assert left.size == 0 and list(batches) == [4]
+    pay, meta, _ = batches[4]
+    np.testing.assert_array_equal(meta.sid_hi, [0, 1])
+    np.testing.assert_array_equal(meta.sid_lo, [0, 0])
+    batches, _ = group_shards(d, s + 4, rows, 4, shard_seq, drain=False)
+    np.testing.assert_array_equal(batches[4][1].sid_lo, [1, 1])
+
+
+def test_query_latest_builder_surface():
+    """Query().latest() is terminal and dispatches through AerialDB.query."""
+    db = AerialDB.open(_cfg(), seed=0)
+    p, m = DroneFleet(6, records_per_shard=R, seed=5).next_shards()
+    db.insert(p, m)
+    via_query = db.query(Query().latest())
+    direct = db.latest()
+    for f in direct._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(via_query, f)),
+                                      np.asarray(getattr(direct, f)))
+    with pytest.raises(ValueError, match="latest"):
+        Query().latest().time(0, 1)
+    with pytest.raises(ValueError, match="latest"):
+        Query().latest().agg("mean", channel=1)
+    with pytest.raises(ValueError, match="latest"):
+        Query().time(0, 1).latest()
+    with pytest.raises(ValueError, match="latest"):
+        Query().latest() & Query().time(0, 1)
+    with pytest.raises(ValueError, match="QueryPred"):
+        Query().latest().build()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: epoch-aware retention on a reclaimed-then-refilled ring
+# ---------------------------------------------------------------------------
+
+
+def test_retention_watermark_survives_ring_reclamation():
+    """PR 7 follow-up regression: repair's ring reclamation rewinds
+    ``tup_count`` below capacity; the retention watermark on that edge must
+    stay FINITE on the next sweep (``tup_overwritten > 0`` marks the loss
+    epoch) and equal the oldest retained timestamp — pre-fix it read
+    ``-inf`` and an aged index entry lingered until the ring re-wrapped."""
+    cap = 128
+    cfg = _cfg(replication=1, tuple_capacity=cap, index_capacity=512,
+               records_per_shard=8, retention_every=1, n_failure_domains=4)
+    db = AerialDB.open(cfg, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=17)
+    p, m = fleet.next_shards()
+    db.insert(p, m)                        # pre-outage placement
+    db.fail_device(1)
+    for _ in range(2):                     # placed around the dead block
+        p, m = fleet.next_shards()
+        db.insert(p, m)
+    db.recover_device(1)                   # repair re-places + RECLAIMS
+    assert db.last_repair["slots_reclaimed"] > 0
+    count = np.asarray(db.state.tup_count)
+    over = np.asarray(db.state.tup_overwritten)
+    reclaimed = np.nonzero((count > 0) & (count < cap) & (over > 0))[0]
+    assert reclaimed.size, (count, over)
+
+    # Inject the wrap-during-outage corner directly: a still-valid entry on
+    # a reclaimed edge whose data aged out entirely (t1 far below anything
+    # retained) but whose retirement sweep had not run yet.
+    e = int(reclaimed[0])
+    idx = db.state.index
+    slot = int(np.nonzero(np.asarray(idx.valid)[e])[0][0])
+    idx = idx._replace(
+        ent_f=idx.ent_f.at[e, slot, 4].set(-1e9).at[e, slot, 5].set(-1e9),
+        ent_i=idx.ent_i.at[e, slot, 2].set(e).at[e, slot, 3].set(-1)
+                       .at[e, slot, 4].set(-1))
+    db = AerialDB(cfg, db.state._replace(index=idx), db.alive,
+                  jax.random.key(1))
+
+    p, m = fleet.next_shards()
+    info = db.insert(p, m)                 # retention_every=1 -> sweep
+    wm = np.asarray(info["retention_watermark"])
+    count2 = np.asarray(db.state.tup_count)
+    still_rewound = reclaimed[count2[reclaimed] <= cap]
+    assert still_rewound.size             # the rewound regime is exercised
+    # THE regression: finite watermark on every reclaimed-not-rewrapped edge.
+    assert np.isfinite(wm[still_rewound]).all(), wm
+    # And it equals the oldest retained timestamp (the re-packed ring is
+    # chronological, so retention semantics are exact).
+    tup_f = np.asarray(db.state.tup_f)
+    for ee in still_rewound:
+        w = min(int(count2[ee]), cap)
+        assert wm[ee] == tup_f[ee, 0, :w].min(), ee
+    # The aged entry retired on this sweep instead of lingering to re-wrap
+    # (compaction moves entries, so check by content, not slot).
+    valid_e = np.asarray(db.state.index.valid)[e]
+    t1_e = np.asarray(db.state.index.ent_f)[e, :, 5]
+    assert not np.any(valid_e & (t1_e == -1e9))
+    assert int(np.asarray(info["index_entries_retired"])[e]) >= 1

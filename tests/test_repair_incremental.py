@@ -126,6 +126,29 @@ def test_incremental_repair_matches_full_sweep_property(seed):
     assert repairs > 0 or not dead
 
 
+def test_incremental_repair_reattempts_ingest_time_index_drops():
+    """PR 7's documented divergence, closed: entries dropped at ingest by a
+    momentarily-full index table are re-attempted by the INCREMENTAL sweep
+    too — the session watches per-insert ``index_entries_dropped`` telemetry
+    and folds the affected batches' sids into the ledger's pending set, so
+    ``repair()`` with an otherwise-empty ledger (no outage ever) lands on
+    the bitwise-identical state of ``repair(full=True)`` instead of being a
+    no-op that leaves the dropped entries missing."""
+    cfg = _cfg(index_capacity=32, retention_every=1 << 20)  # drops, no sweeps
+    db_inc = AerialDB.open(cfg, seed=0)
+    db_full = AerialDB.open(cfg, seed=0)
+    fleets = [DroneFleet(12, records_per_shard=8, seed=23) for _ in range(2)]
+    for db, fleet in zip((db_inc, db_full), fleets):
+        _ingest(db, fleet, 6)
+    assert int(np.asarray(db_inc.state.index.dropped).sum()) > 0
+    inc = db_inc.repair()                  # incremental, NO outage on ledger
+    full = db_full.repair(full=True)
+    assert inc["mode"] == "incremental"
+    assert inc["shards_swept"] > 0         # the gap: pre-change this was 0
+    assert inc["shards_swept"] <= full["shards_swept"]
+    _assert_states_identical(db_inc.state, db_full.state)
+
+
 def test_incremental_repair_retention_wrap_during_outage():
     """Deterministic wrap coverage: enough sustained ingest during the
     outage to wrap rings (tup_count > CAP) and run retention sweeps, then
