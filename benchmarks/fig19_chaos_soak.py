@@ -1,0 +1,216 @@
+"""Fig 19: chaos soak — seeded fault schedules against a live deployment.
+
+The PR 9 chaos engine end to end: for each seed, ``FaultPlan.random``
+generates a replayable schedule mixing edge crashes, whole-domain loss,
+fleet partitions, and transient flush-dispatch failures (every plan is
+required to contain a partition and a flush burst), and ``ChaosRunner``
+drives it against a streaming deployment (``AerialDB`` + ``IngestPipeline``
+with the bounded retry loop) while the SAME telemetry stream feeds a
+never-faulted reference. Rows per seed:
+
+* ``fig19/seed<s>/soak`` — wall time per soak step, plus the fault mix
+  (events applied, retries absorbed, give-ups) and flush totals.
+* ``fig19/seed<s>/recovery`` — the degradation/recovery trajectory:
+  catch-all ``completeness_bound`` after every repair-running event
+  (heal / recover_edges / recover_device); ``completeness`` in the derived
+  string is the MINIMUM over events where the fleet was back to full
+  health — the paper's recovery claim is that it is exactly 1.0.
+* ``fig19/seed<s>/reconcile`` — ``accepted == flushed + pending`` +
+  stored-tuple audit, ``gave_up == 0`` (bursts stay within the retry
+  budget), ring wrap-free-ness, and ``content_equal=1``: the faulted
+  store's canonical content (sorted ring windows + per-shard replica/
+  holder sets) is bit-identical to the never-faulted reference's.
+* ``fig19/crash_replay`` — the crash-durability leg: a mid-flush
+  ``PipelineCrash`` tears the pipeline after records were acked into the
+  write-ahead journal; a fresh session + pipeline + ``replay_journal``
+  recovers with ``lost=0`` and reference-equal content.
+
+In-benchmark gates (CI re-asserts all from ``BENCH_*.json``): completeness
+exactly 1.0 at every full-health event and at the end, ``gave_up == 0``,
+counter reconcile ok, content equal, crash replay ``lost == 0``.
+``FIG19_SEEDS`` overrides the seed sweep (comma-separated).
+"""
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import AerialDB
+from repro.chaos import (ChaosRunner, FaultEvent, FaultPlan,
+                         canonical_content)
+from repro.core.datastore import StoreConfig, make_pred
+from repro.data.synthetic import CityConfig, make_sites
+from repro.ingest import IngestPipeline, PipelineCrash
+from repro.launch.mesh import make_edge_mesh
+
+E = 16            # edge servers (4 per device on the 4-device mesh)
+D = 24            # drones; each emits one full shard per soak step
+RPD = 4           # records per drone per step == records_per_shard
+N_STEPS = 8
+MIN_ALIVE = 6     # alive AND reachable floor (>= replication = 3)
+_REPAIR_EVENTS = ("heal", "recover_edges", "recover_device")
+CATCH_ALL = make_pred(q=1, t0=-1e9, t1=1e9, has_temporal=True, is_and=True)
+
+
+def _cfg() -> StoreConfig:
+    # Wrap-free sizing (the content-equality precondition, see
+    # repro.chaos.audit): worst-case per-edge load is the whole volume
+    # concentrated on MIN_ALIVE edges; 2048 covers it ~3x over.
+    sites = make_sites(E, CityConfig(), seed=3)
+    return StoreConfig(
+        n_edges=E, sites=tuple(map(tuple, sites.tolist())),
+        tuple_capacity=2048, index_capacity=512,
+        max_shards_per_query=256, records_per_shard=RPD,
+        replication=3, max_drones=D, n_failure_domains=4)
+
+
+def _step_records(seed: int, step: int):
+    """Deterministic per-(seed, step) telemetry: every drone contributes
+    exactly one full shard, so faulted and reference runs coalesce
+    identically."""
+    rng = np.random.default_rng((seed, step))
+    n = D * RPD
+    drone = np.repeat(np.arange(D, dtype=np.int64), RPD)
+    seq = np.tile(np.arange(RPD, dtype=np.int64), D) + step * RPD
+    t = seq.astype(np.float64) + step * 0.25
+    lat = rng.uniform(12.90, 13.00, n)
+    lon = rng.uniform(77.50, 77.62, n)
+    vals = rng.normal(size=(n, 4))
+    return drone, seq, t, lat, lon, vals
+
+
+def _feed(pipe, seed, step):
+    pipe.submit_arrays(*_step_records(seed, step))
+    return pipe.flush()
+
+
+def _bound(db) -> float:
+    _res, qi = db.query(CATCH_ALL, key=jax.random.key(1))
+    return float(np.asarray(qi.completeness_bound)[0])
+
+
+def _content_equal(a, b) -> bool:
+    if any(ra.shape != rb.shape or not np.array_equal(ra, rb)
+           for ra, rb in zip(a["edges"], b["edges"])):
+        return False
+    return a["index"] == b["index"]
+
+
+def _soak(seed: int, mesh) -> None:
+    plan = FaultPlan.random(
+        seed, n_edges=E, n_steps=N_STEPS, n_domains=4, min_alive=MIN_ALIVE,
+        max_transient=2, require=("partition", "flush_fail"))
+    cfg = _cfg()
+    db = AerialDB.open(cfg, mesh, seed=0)
+    pipe = IngestPipeline(db, max_retries=4, sleep=lambda s: None)
+    runner = ChaosRunner(plan, db, pipe)
+    db_ref = AerialDB.open(cfg, mesh, seed=0)
+    pipe_ref = IngestPipeline(db_ref)
+
+    full_bounds, degraded_bounds = [], []
+
+    def probe(applied):
+        for entry in applied:
+            if entry["kind"] not in _REPAIR_EVENTS:
+                continue
+            b = _bound(db)
+            if bool(np.asarray(db.effective_alive).all()):
+                # Full health restored: repair must leave NOTHING degraded.
+                assert b == 1.0, (
+                    f"seed {seed}: completeness {b} after full-health "
+                    f"{entry['kind']} at step {entry['step']}")
+                full_bounds.append(b)
+            else:
+                degraded_bounds.append(b)   # telemetry, legitimately < 1.0
+
+    t0 = time.perf_counter()
+    for step in range(plan.n_steps):
+        probe(runner.advance(step))
+        _feed(pipe, seed, step)
+        _feed(pipe_ref, seed, step)
+        rec = pipe.reconcile()
+        assert rec["counters_ok"], f"seed {seed} step {step}: {rec}"
+    probe(runner.advance(plan.n_steps))     # closing heal/recover events
+    wall = time.perf_counter() - t0
+
+    c = pipe.counters
+    emit(f"fig19/seed{seed}/soak", wall / N_STEPS * 1e6,
+         f"steps={N_STEPS};events={len(runner.log)};"
+         f"kinds={'+'.join(sorted(set(plan.kinds())))};"
+         f"retries={c['retries']};gave_up={c['gave_up']};"
+         f"flushed={c['flushed_records']};duplicate={c['duplicate']}")
+
+    final = _bound(db)
+    assert final == 1.0, f"seed {seed}: final completeness {final}"
+    comp = min(full_bounds + [final])
+    emit(f"fig19/seed{seed}/recovery", 0.0,
+         f"completeness={comp:.3f};full_health_probes={len(full_bounds)};"
+         f"degraded_probes={len(degraded_bounds)};"
+         f"degraded_min={min(degraded_bounds, default=1.0):.3f}")
+
+    rec = pipe.reconcile()
+    assert rec["ok"], f"seed {seed}: reconcile failed: {rec}"
+    assert c["gave_up"] == 0, f"seed {seed}: {c['gave_up']} give-ups"
+    wrapped = int(np.asarray(db.state.tup_count).max()) > cfg.tuple_capacity
+    assert not wrapped, f"seed {seed}: ring wrapped, content gate unsound"
+    equal = _content_equal(canonical_content(db), canonical_content(db_ref))
+    assert equal, f"seed {seed}: content diverged from reference"
+    emit(f"fig19/seed{seed}/reconcile", 0.0,
+         f"ok=1;accepted={rec['accepted']};flushed={rec['flushed_records']};"
+         f"pending={rec['pending']};stored={rec['stored_tuples']};"
+         f"gave_up={c['gave_up']};wrapped={int(wrapped)};"
+         f"content_equal={int(equal)}")
+
+
+def _crash_replay(mesh) -> None:
+    """Mid-flush crash against a journaled pipeline, then recovery from a
+    cold start: fresh session + fresh pipeline + journal replay."""
+    cfg = _cfg()
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "wal.bin")
+        db = AerialDB.open(cfg, mesh, seed=0)
+        pipe = IngestPipeline(db, journal=path, sleep=lambda s: None)
+        _feed(pipe, 0, 0)
+        plan = FaultPlan(events=(FaultEvent(1, "pipeline_crash"),),
+                         n_steps=2)
+        runner = ChaosRunner(plan, db, pipe)
+        runner.advance(1)                   # arm the one-shot crash
+        crashed = False
+        try:
+            _feed(pipe, 0, 1)
+        except PipelineCrash:
+            crashed = True
+        assert crashed, "injected crash did not fire"
+        acked = pipe.counters["accepted"]
+        pipe.close()
+
+        db2 = AerialDB.open(cfg, mesh, seed=0)
+        pipe2 = IngestPipeline(db2, journal=path)
+        rep = pipe2.replay_journal()
+        pipe2.flush(drain=True)
+        rec = pipe2.reconcile()
+        lost = acked - rec["flushed_records"]
+        db_ref = AerialDB.open(cfg, mesh, seed=0)
+        pipe_ref = IngestPipeline(db_ref)
+        _feed(pipe_ref, 0, 0)
+        _feed(pipe_ref, 0, 1)
+        equal = _content_equal(canonical_content(db2),
+                               canonical_content(db_ref))
+        assert rec["ok"] and lost == 0 and equal, (rep, rec, lost, equal)
+        emit("fig19/crash_replay", 0.0,
+             f"ok=1;journal_records={rep['journal_records']};"
+             f"replayed={rep['accepted']};already_seen={rep['already_seen']};"
+             f"acked={acked};lost={lost};content_equal={int(equal)}")
+
+
+def run():
+    seeds = [int(s) for s in
+             os.environ.get("FIG19_SEEDS", "3,11,42").split(",")]
+    mesh = (make_edge_mesh(4, n_edges=E) if jax.device_count() >= 4
+            else None)
+    for seed in seeds:
+        _soak(seed, mesh)
+    _crash_replay(mesh)

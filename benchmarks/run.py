@@ -19,7 +19,7 @@ FIGS = ["fig5_membership", "fig5_scan_batch", "fig7_insertion_scaling",
         "fig8_insertion_baselines", "fig9_planners", "fig10_concurrency",
         "fig11_mixed_queries", "fig12_query_baselines", "fig13_locality",
         "fig14_resilience", "fig15_sustained_ingest", "fig17_churn_soak",
-        "fig18_streaming_ingest"]
+        "fig18_streaming_ingest", "fig19_chaos_soak"]
 
 
 def _config_fingerprint() -> dict:

@@ -15,6 +15,7 @@ an edge mesh. The two paths are differentially tested bit-identical
     res, info = db.query(Query().bbox(...).time(...).agg("mean", channel=2))
     db.fail_edges(1, 5); ...; db.recover_edges(1, 5)
     db.fail_device(0); ...; db.recover_device(0)      # whole failure domain
+    db.partition([[0, 1], [2, 3]]); ...; db.heal()    # network partition
 
 Failure-domain resilience (paper §4.5.3): ``fail_device`` / ``recover_device``
 flip an entire contiguous device block of the edge axis at once — the unit
@@ -33,6 +34,20 @@ have touched (O(outage), not O(store); ``repair(full=True)`` forces the
 full sweep). ``QueryInfo`` reports the degraded-query accounting
 (``replicas_lost`` / ``completeness_bound``), and ``QueryResult.view``
 carries both keys so applications see degradation without digging.
+
+Fleet partition tolerance (PR 9): :meth:`partition` / :meth:`heal` model a
+network partition — edges that are **unreachable but intact**, a ledger
+state distinct from dead. The session keeps a ``reachable`` mask next to
+``alive``; every placement/query/repair decision sees their conjunction
+(:attr:`effective_alive`), so inserts re-route around the unreachable side
+and queries surface the degradation through the same
+``completeness_bound`` / ``replicas_lost`` accounting as a crash — but the
+unreachable edges' state is never mutated, never backfilled, and never
+reclaimed while the partition is open (their intact data may be the only
+surviving copy). A heal closes an epoch window on the same outage ledger a
+recovery does, so the incremental repair sweeps only shards ingested
+*during* the partition plus those whose replicas straddled it — edges whose
+data never died get no backfill.
 
 See the package docstring (``repro.api``) for the facade-vs-local-bodies
 layering contract.
@@ -92,6 +107,15 @@ class AerialDB:
         self._open_outages: list = []
         self._closed_outages: list = []
         self._pending_sids: set = set()
+        # Fleet partition state (PR 9): ``_reachable`` marks edges the
+        # session can still talk to — unreachable edges are intact (their
+        # state is frozen, like dead ones) but excluded from placement,
+        # query planning, and repair via ``effective_alive``. At most one
+        # partition is open at a time; ``_partition`` records its
+        # unreachable set + the step it opened at, closed onto the outage
+        # ledger by :meth:`heal`.
+        self._reachable = jnp.ones(cfg.n_edges, bool)
+        self._partition: Optional[dict] = None
         # Ingest-time index-capacity drop watch: each insert's
         # (sid arrays, per-edge index_entries_dropped DEVICE array) is
         # recorded WITHOUT reading the array — reading would force a device
@@ -157,6 +181,20 @@ class AerialDB:
         return self._alive
 
     @property
+    def reachable(self) -> jnp.ndarray:
+        """(E,) bool — edges NOT cut off by an open :meth:`partition`.
+        Orthogonal to :attr:`alive`: an edge can be dead, unreachable, or
+        both; only ``alive & reachable`` edges serve."""
+        return self._reachable
+
+    @property
+    def effective_alive(self) -> jnp.ndarray:
+        """(E,) bool — the mask every placement/query/repair decision sees:
+        ``alive & reachable``. Equals :attr:`alive` while no partition is
+        open."""
+        return self._alive & self._reachable
+
+    @property
     def mesh(self):
         return self._mesh
 
@@ -195,13 +233,13 @@ class AerialDB:
         sid_hi = np.asarray(meta.sid_hi)[None]       # host copies of INPUTS —
         sid_lo = np.asarray(meta.sid_lo)[None]       # no device-sync hazard
         meta = ShardMeta(*[jnp.asarray(f) for f in meta])
+        mask = self.effective_alive
         if self._mesh is None:
             self._state, info = _ds._insert(self._cfg, self._state, payload,
-                                            meta, self._alive)
+                                            meta, mask)
         else:
             self._state, info = _fed.federated_insert_step(
-                self._cfg, self._state, payload, meta, self._alive,
-                self._mesh)
+                self._cfg, self._state, payload, meta, mask, self._mesh)
         self._watch_drops(sid_hi, sid_lo,
                           info["index_entries_dropped"][None])
         return info
@@ -212,7 +250,7 @@ class AerialDB:
         sid_hi = np.asarray(metas.sid_hi)            # (N, B) host copies
         sid_lo = np.asarray(metas.sid_lo)
         self._state, info = _fed.ingest_rounds(
-            self._cfg, self._state, payloads, metas, self._alive,
+            self._cfg, self._state, payloads, metas, self.effective_alive,
             mesh=self._mesh)
         self._watch_drops(sid_hi, sid_lo, info["index_entries_dropped"])
         return info
@@ -270,11 +308,12 @@ class AerialDB:
         spec.validate_for(self._cfg)
         if key is None:
             self._key, key = jax.random.split(self._key)
+        mask = self.effective_alive
         if self._mesh is None:
-            return _ds._query(self._cfg, self._state, pred, self._alive, key,
+            return _ds._query(self._cfg, self._state, pred, mask, key,
                               self._use_kernel, self._interpret, spec)
         return _fed.federated_query_step(
-            self._cfg, self._state, pred, self._alive, key, self._mesh,
+            self._cfg, self._state, pred, mask, key, self._mesh,
             use_kernel=self._use_kernel, interpret=self._interpret, agg=spec)
 
     def latest(self) -> LatestResult:
@@ -350,7 +389,15 @@ class AerialDB:
         inserts skip them, queries re-plan around them; ids are validated
         eagerly (out-of-range / duplicate ids raise). Each call opens an
         outage-epoch record ``(newly dead edges, current step)`` on the
-        session ledger so the eventual repair can sweep O(outage)."""
+        session ledger so the eventual repair can sweep O(outage).
+
+        Double-open semantics are **merge**: failing an already-dead edge
+        changes nothing — the edge stays covered by the epoch record its
+        ORIGINAL failure opened (the earlier fail step is the one the
+        outage window must date from), no second record is opened for it,
+        and a call whose every id is already dead is a pure no-op. Failing
+        an unreachable (partitioned) edge is legal and independent: death
+        and reachability compose via :attr:`effective_alive`."""
         ids = self._edge_ids(edges)
         newly_dead = ids[np.asarray(self._alive)[ids]]
         self._alive = self._alive.at[ids].set(False)
@@ -371,9 +418,19 @@ class AerialDB:
         outage window. Pass ``repair=False`` to defer (e.g. when recovering
         several domains and repairing once): the closed windows stay on the
         ledger until a repair consumes them.
+
+        Double-close semantics are **no-op**: recovering an edge that is
+        already alive closes nothing, and a call whose every id is alive
+        leaves the session bitwise untouched — no window closes AND the
+        implicit repair is skipped (it would otherwise consume closed
+        windows deferred by an earlier ``repair=False`` recovery as a side
+        effect of a do-nothing call). Deferred windows stay on the ledger
+        for an explicit :meth:`repair` or the next real recovery.
         """
         ids = self._edge_ids(edges)
         newly_alive = set(int(i) for i in ids[~np.asarray(self._alive)[ids]])
+        if not newly_alive:
+            return self
         self._alive = self._alive.at[ids].set(True)
         recover_step = int(self._state.steps)
         for rec in self._open_outages:
@@ -407,6 +464,112 @@ class AerialDB:
         :meth:`recover_edges`)."""
         return self.recover_edges(self._device_edges(device), repair=repair)
 
+    # -- fleet partitions (unreachable-but-intact) ---------------------------
+
+    def partition(self, edge_groups) -> "AerialDB":
+        """Open a fleet-level network partition (paper's intermittent
+        cellular links): split the edges into disjoint connectivity groups;
+        the session (coordinator) stays with the FIRST group, every edge in
+        the other groups becomes **unreachable but intact** — a ledger state
+        distinct from dead. Unreachable edges are excluded from placement,
+        query planning, and repair (via :attr:`effective_alive`) but their
+        state is never mutated: the data on the far side of a partition is
+        not lost, merely invisible, and must never be backfilled over.
+
+        ``edge_groups`` is a sequence of edge-id groups (a flat list of ids
+        is shorthand for one group). Edges named in no group implicitly join
+        the coordinator side; with a single group given, the complement
+        becomes the unreachable side. Groups must be disjoint, and the split
+        must actually separate something (both sides non-empty) — degenerate
+        partitions raise. At most one partition is open at a time: nested
+        partitions raise (``heal()`` first); :meth:`heal` on a healed
+        session is a no-op, so open/close is deterministic like the
+        fail/recover ledger. Dead edges may appear in any group — death and
+        reachability compose.
+        """
+        if self._partition is not None:
+            raise ValueError(
+                "a fleet partition is already open (unreachable edges "
+                f"{sorted(self._partition['unreachable'])}): heal() it "
+                "first — nested/overlapping partitions are not modeled.")
+        groups = list(edge_groups)
+        if groups and isinstance(groups[0], (int, np.integer)):
+            groups = [groups]                   # flat id list = one group
+        if not groups:
+            raise ValueError("partition() needs at least one edge group.")
+        ids = [self._edge_ids((g,)) if len(g) else np.empty(0, np.int32)
+               for g in groups]           # empty group: names no edges
+        flat = np.concatenate(ids)
+        if np.unique(flat).size != flat.size:
+            dup = sorted({int(i) for i in flat if (flat == i).sum() > 1})
+            raise ValueError(
+                f"edge id(s) {dup} appear in more than one partition group: "
+                "connectivity groups must be disjoint.")
+        if len(ids) == 1:
+            unreachable = np.setdiff1d(
+                np.arange(self._cfg.n_edges, dtype=np.int32), ids[0])
+        else:
+            unreachable = np.concatenate(ids[1:])
+        if unreachable.size == 0:
+            raise ValueError(
+                "partition separates nothing: every edge ends up on the "
+                "coordinator side. Name at least one edge in a non-first "
+                "group (or pass a single group that excludes some edges).")
+        if unreachable.size == self._cfg.n_edges:
+            raise ValueError(
+                "partition leaves the coordinator no reachable edges: the "
+                "first group (the session's side) must keep at least one.")
+        self._reachable = self._reachable.at[unreachable].set(False)
+        self._partition = {
+            "unreachable": set(int(i) for i in unreachable),
+            "step": int(self._state.steps),
+            "groups": tuple(tuple(int(i) for i in g) for g in ids)}
+        return self
+
+    def heal(self, *, repair: bool = True) -> "AerialDB":
+        """Close the open partition: every edge becomes reachable again and
+        the partition's epoch window ``(open step, current step]`` closes
+        onto the SAME outage ledger a recovery uses — so the default
+        incremental :meth:`repair` sweeps exactly the shards ingested while
+        the fleet was split (they were placed around the unreachable side
+        and owe it replicas/entries) plus those whose replicas straddle any
+        still-dead edges. Edges whose data never died get no backfill: a
+        shard placed before the partition, with all its replicas intact on
+        the far side, is a full-sweep no-op. ``repair=False`` defers, like
+        :meth:`recover_edges`. Healing a healed session is a no-op."""
+        if self._partition is None:
+            return self
+        rec = self._partition
+        self._partition = None
+        self._reachable = jnp.ones(self._cfg.n_edges, bool)
+        self._closed_outages.append(
+            (frozenset(rec["unreachable"]), rec["step"],
+             int(self._state.steps)))
+        if repair:
+            self.repair()
+        return self
+
+    def ledger(self) -> dict:
+        """Machine-readable snapshot of the session's failure ledger (the
+        chaos engine's telemetry surface): open outage records, closed
+        (unconsumed) epoch windows, the open partition if any, and the
+        pending/dropped sweep debts. Draining the drop watch here is a
+        device sync point — this is a control-plane probe, not a hot
+        path."""
+        self._drain_drop_watch()
+        return {
+            "open_outages": [(sorted(rec[0]), int(rec[1]))
+                             for rec in self._open_outages],
+            "closed_windows": [(sorted(eds), int(f), int(r))
+                               for eds, f, r in self._closed_outages],
+            "partition": (None if self._partition is None else
+                          {"unreachable":
+                           sorted(self._partition["unreachable"]),
+                           "step": self._partition["step"]}),
+            "pending_sids": len(self._pending_sids),
+            "dropped_sids": len(self._dropped_sids),
+        }
+
     def _outage_log(self) -> "_repair.OutageLog":
         """Snapshot the session ledger as the ``OutageLog`` driving the
         incremental sweep (sorted — deterministic across differential
@@ -418,11 +581,18 @@ class AerialDB:
         while that edge was away are what its closed window selects. The
         pending set folds in ``_dropped_sids`` (batches whose index entries
         were dropped at ingest by a momentarily-full table) so the
-        incremental sweep re-attempts them like ``repair(full=True)``."""
+        incremental sweep re-attempts them like ``repair(full=True)``.
+        An OPEN partition's unreachable edges ride ``affected_edges`` just
+        like still-dead ones — a mid-partition repair re-places shards
+        around them under the effective mask — and its window closes onto
+        the same ledger at heal, so the reachable dimension needs no new
+        OutageLog field."""
         self._drain_drop_watch()
         affected = set()
         for rec in self._open_outages:
             affected |= rec[0]
+        if self._partition is not None:
+            affected |= self._partition["unreachable"]
         return _repair.OutageLog(
             windows=tuple(sorted((int(f), int(r))
                                  for _eds, f, r in self._closed_outages)),
@@ -458,16 +628,21 @@ class AerialDB:
                 "contract' — run repair from a single-process session, or "
                 "defer with recover_edges(..., repair=False).")
         outage = None if full else self._outage_log()
+        # Repair sees the EFFECTIVE mask: unreachable edges are treated
+        # exactly like dead ones — never read as a source, never written,
+        # never reclaimed — because their intact far-side state may be the
+        # only surviving copy of a shard.
         state, info = _repair.repair_state(self._cfg, self._state,
-                                           self._alive, outage=outage)
+                                           self.effective_alive,
+                                           outage=outage)
         self._state = (shard_store(state, self._mesh)
                        if self._mesh is not None else state)
         # Ledger consumption: closed windows are now repaired; shards swept
-        # under a still-degraded mask stay pending until a repair completes
-        # with every edge alive.
+        # under a still-degraded mask (dead OR unreachable edges remain)
+        # stay pending until a repair completes with every edge effective.
         swept_keys = info.pop("_swept_keys")
         self._closed_outages = []
-        if bool(np.asarray(self._alive).all()):
+        if bool(np.asarray(self.effective_alive).all()):
             self._pending_sids = set()
         else:
             self._pending_sids |= set(swept_keys)

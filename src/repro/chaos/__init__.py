@@ -1,0 +1,31 @@
+"""Chaos engine (PR 9): seeded fault-injection for the federated store.
+
+The paper's resilience claims are about *graceful degradation under
+intermittent connectivity* — more failure shapes than a clean
+``fail_edges``. This package is the fault model and its harness:
+
+* :class:`FaultPlan` / :class:`FaultEvent` (``plan.py``) — a deterministic,
+  seeded schedule of timed faults: edge crash/recover, whole-device loss,
+  fleet network partition/heal, transient flush-dispatch failures,
+  mid-flush pipeline crash. ``FaultPlan.random(seed, ...)`` is pure in its
+  seed — every run replays bit-identically.
+* :class:`ChaosRunner` (``runner.py``) — applies a plan against a live
+  ``AerialDB`` session + ``IngestPipeline``, logging every injected event
+  (with repair/ledger effect telemetry) machine-readably.
+* ``audit.py`` — the canonical-content equivalence check: after final
+  heal + repair a faulted store must hold bit-identical content to a
+  never-faulted reference (same tuples on same edges, same replica sets
+  and index coverage), independent of ring write order.
+
+Layering: chaos sits ABOVE ``repro.ingest`` and ``repro.api`` — it only
+drives public surfaces (session membership calls, the pipeline's
+documented ``fault_hook``), so the differential harness covering those
+covers every injected run too.
+"""
+
+from repro.chaos.audit import assert_content_equal, canonical_content
+from repro.chaos.plan import EVENT_KINDS, FaultEvent, FaultPlan
+from repro.chaos.runner import ChaosRunner
+
+__all__ = ["EVENT_KINDS", "FaultEvent", "FaultPlan", "ChaosRunner",
+           "assert_content_equal", "canonical_content"]

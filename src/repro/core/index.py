@@ -12,7 +12,8 @@ Static-shape storage (TPU adaptation):
   valid:  (E, CAP)     bool
   cursor: (E,)         int32    append position
   dropped:(E,)         int32    entries lost to capacity overflow (telemetry)
-  retired:(E,)         int32    entries invalidated by retention (telemetry)
+  retired:(E,)         int32    entries invalidated by retention or repair
+                                entry reclamation (telemetry)
   ent_step:(E, CAP)    int32    ingest step that wrote the entry (epoch clock
                                 for the incremental-repair outage windows —
                                 see ``core/repair.py``)

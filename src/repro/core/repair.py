@@ -31,24 +31,33 @@ given the mask) and converges the store to it, one swept shard at a time:
      the most (appended through the normal ring-buffer cursor in source-
      chronological order, clamped to the newest ``tuple_capacity`` tuples,
      with exact overwrite telemetry);
-  3. **ring reclamation** — alive edges *outside* the new replica set of a
-     re-placed shard hold copies no index entry will ever name again; their
-     slots are retired eagerly (the ring is re-packed in chronological
-     order, freed slots reset to the never-written sentinel) instead of
-     bleeding capacity until wraparound. The re-pack rewinds ``tup_count``
-     below ``tuple_capacity``; the retention watermark stays live anyway —
-     ``tup_overwritten > 0`` marks the edge as having aged out tuples, so
-     the epoch-aware watermark keeps retiring from the re-packed
-     (chronologically ordered) ring instead of pausing until re-wrap.
-     Copies stranded on an edge that was *dead* at
-     re-placement time are reclaimed the next time the shard re-places (or
-     by wraparound) — repair never touches dead edges, whose frozen rings
-     may be the only surviving source;
+  3. **ring reclamation** — alive edges *outside* a swept (repairable)
+     shard's canonical replica set hold copies no index entry will ever
+     name again; their slots are retired eagerly (the ring is re-packed in
+     chronological order, freed slots reset to the never-written sentinel)
+     instead of bleeding capacity until wraparound. The re-pack rewinds
+     ``tup_count`` below ``tuple_capacity``; the retention watermark stays
+     live anyway — ``tup_overwritten > 0`` marks the edge as having aged
+     out tuples, so the epoch-aware watermark keeps retiring from the
+     re-packed (chronologically ordered) ring instead of pausing until
+     re-wrap. Copies stranded on an edge that was *dead* at re-placement
+     time (repair never touches dead edges, whose frozen rings may be the
+     only surviving source) are reclaimed by the sweep that runs once the
+     edge returns — the session's pending-sweep ledger re-selects every
+     shard repaired under a degraded mask, placement re-changed or not;
   4. **index backfill** — every edge that should hold a swept shard's entry
      under the slicing contract (slice owners + replica edges,
      ``_index_edge_mask``) but does not, gets the entry appended — this is
      what plugs the recovered edge's lookup hole, including for shards
-     whose replicas never changed.
+     whose replicas never changed;
+  5. **entry reclamation** — the index-side mirror of step 3: alive edges
+     that hold a swept shard's entry but are *outside* its canonical holder
+     set (replicas moved away, or slice ownership drifted while placement
+     ran under a degraded mask — e.g. shards ingested during a partition)
+     have those entries retired, so the healed index converges bit-for-bit
+     to the never-faulted one instead of accumulating stale lookup rows.
+     Unrepairable shards are exempt, for the same keep-the-loss-visible
+     reason as step 1.
 
 Outage epochs — the O(outage) sweep contract
 --------------------------------------------
@@ -220,6 +229,7 @@ def repair_state(cfg: StoreConfig, state: StoreState, alive,
     set rewritten), ``shards_unrepairable`` (no surviving source),
     ``tuples_copied``, ``slots_reclaimed`` (stale copies retired by ring
     reclamation), ``entries_rewritten``, ``entries_backfilled``,
+    ``entries_reclaimed`` (stale entries retired from non-holder edges),
     ``entries_dropped`` (backfill hit a full table), ``mode``
     (``full``/``incremental``), and ``_swept_keys`` — the swept shards' sid
     keys, consumed by the session facade's pending-sweep bookkeeping (not
@@ -232,7 +242,8 @@ def repair_state(cfg: StoreConfig, state: StoreState, alive,
     info = {"shards_tracked": 0, "shards_swept": 0, "shards_replaced": 0,
             "shards_unrepairable": 0, "tuples_copied": 0,
             "slots_reclaimed": 0, "entries_rewritten": 0,
-            "entries_backfilled": 0, "entries_dropped": 0,
+            "entries_backfilled": 0, "entries_reclaimed": 0,
+            "entries_dropped": 0,
             "mode": "full" if outage is None else "incremental",
             "_swept_keys": ()}
 
@@ -278,6 +289,7 @@ def repair_state(cfg: StoreConfig, state: StoreState, alive,
 
     cursor = np.array(state.index.cursor)
     dropped = np.array(state.index.dropped)
+    retired = np.array(state.index.retired)
     ent_step_tab = np.array(state.index.ent_step)
     tup_f = np.array(state.tup_f)
     tup_sid = np.array(state.tup_sid)
@@ -333,6 +345,7 @@ def repair_state(cfg: StoreConfig, state: StoreState, alive,
         new_set = {int(r) for r in new3[j] if r >= 0}
         hi = int(ent_i[ev[first[i]], ec[first[i]], 0])
         lo = int(ent_i[ev[first[i]], ec[first[i]], 1])
+        unrepairable = False
 
         if new_set != old_set:
             # The copy source is the alive replica holding the MOST of the
@@ -361,6 +374,7 @@ def repair_state(cfg: StoreConfig, state: StoreState, alive,
                 # dead replicas — so the loss stays VISIBLE on recovered
                 # lookup edges too, instead of vanishing from their index).
                 info["shards_unrepairable"] += 1
+                unrepairable = True
                 new3[j] = old3[i]
             else:
                 # 1. rewrite every entry of this shard to the canonical set
@@ -385,13 +399,19 @@ def repair_state(cfg: StoreConfig, state: StoreState, alive,
                         tup_f, tup_sid, tup_count, tup_pos, tup_over,
                         src, dst, chrono, hi, lo, cap)
 
-                # 3. ring reclamation: alive edges outside the canonical set
-                # hold copies no entry names anymore — retire their slots
-                # eagerly (batched per edge after the sweep; keyed by sid so
-                # interleaved backfill wraps can never be mis-dropped).
-                for dst in range(e):
-                    if alive_np[dst] and dst not in new_set:
-                        reclaim.setdefault(dst, set()).add(sid_key(hi, lo))
+        # 3. ring reclamation: alive edges outside the canonical set hold
+        # copies no entry names anymore — retire their slots eagerly
+        # (batched per edge after the sweep; keyed by sid so interleaved
+        # backfill wraps can never be mis-dropped). Runs for unchanged-
+        # placement shards too: a copy stranded on an edge that was DEAD
+        # when an earlier degraded repair moved the shard away is only
+        # discovered once that edge is back — by which point the stored
+        # replica set already equals the canonical one. Unrepairable
+        # shards are exempt (an orphan may be the last copy left).
+        if not unrepairable:
+            for dst in range(e):
+                if alive_np[dst] and dst not in new_set:
+                    reclaim.setdefault(dst, set()).add(sid_key(hi, lo))
 
         # 4. backfill missing index entries (slice owners + replicas) — this
         # runs for unchanged shards too: the recovered edge missed every
@@ -410,6 +430,20 @@ def repair_state(cfg: StoreConfig, state: StoreState, alive,
             ent_step_tab[dst, c] = step_now
             cursor[dst] = c + 1
             info["entries_backfilled"] += 1
+
+        # 5. entry reclamation (step 3's index mirror) — alive edges holding
+        # an entry for this shard but outside its canonical holder set stop
+        # indexing it. Runs for unchanged-replica shards too: slice owners
+        # drift when placement ran under a degraded mask (partition-time
+        # ingest), leaving extra lookup rows the reference never wrote.
+        # Unrepairable shards keep every entry so the loss stays visible.
+        if not unrepairable:
+            idx = order[starts[i]:ends[i]]
+            stale = idx[alive_np[ev[idx]] & ~want[j, ev[idx]]]
+            if stale.size:
+                valid[ev[stale], ec[stale]] = False
+                np.add.at(retired, ev[stale], 1)
+                info["entries_reclaimed"] += int(stale.size)
 
     # Ring reclamation re-pack (step 3, batched per edge): drop every live
     # slot whose sid was retired from this edge, squash survivors to the
@@ -444,7 +478,7 @@ def repair_state(cfg: StoreConfig, state: StoreState, alive,
     index = IndexState(
         ent_f=jnp.asarray(ent_f), ent_i=jnp.asarray(ent_i),
         valid=jnp.asarray(valid), cursor=jnp.asarray(cursor),
-        dropped=jnp.asarray(dropped), retired=state.index.retired,
+        dropped=jnp.asarray(dropped), retired=jnp.asarray(retired),
         ent_step=jnp.asarray(ent_step_tab))
     new_state = StoreState(
         index=index, tup_f=jnp.asarray(tup_f), tup_sid=jnp.asarray(tup_sid),

@@ -19,8 +19,11 @@ every pipeline flush too.
 """
 
 from repro.ingest.coalesce import group_shards, plan_chunks
+from repro.ingest.journal import WriteAheadJournal
 from repro.ingest.latest import latest_oracle, overlay_latest
-from repro.ingest.pipeline import IngestPipeline
+from repro.ingest.pipeline import (IngestPipeline, PipelineCrash,
+                                   TransientDispatchError)
 
-__all__ = ["IngestPipeline", "group_shards", "plan_chunks", "latest_oracle",
-           "overlay_latest"]
+__all__ = ["IngestPipeline", "PipelineCrash", "TransientDispatchError",
+           "WriteAheadJournal", "group_shards", "plan_chunks",
+           "latest_oracle", "overlay_latest"]

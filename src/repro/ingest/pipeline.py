@@ -28,20 +28,49 @@ Counter reconciliation (the CI gate): ``accepted == flushed_records +
 pending`` at all times, and after a drain-flush on an all-alive store,
 ``sum(tup_count) == flushed_records * replication`` — every accepted record
 is on every replica, exactly once.
+
+Fault tolerance (PR 9): each flush dispatch runs under bounded
+**retry-with-backoff** — a ``TransientDispatchError`` (dropped RPC on the
+intermittent UAV-edge link; injected by the chaos engine via
+``fault_hook``) is retried up to ``max_retries`` times with exponential
+backoff, and a chunk that exhausts its budget has its records returned to
+the pending buffer (counters ``retries`` / ``gave_up``), so the
+``accepted == flushed + pending`` invariant survives every outcome. An
+optional **write-ahead journal** (``journal=``) appends accepted records
+before ``submit`` acks; after a crash (``PipelineCrash`` mid-flush), a
+fresh pipeline's :meth:`replay_journal` re-submits the log — idempotent by
+the same ``(drone, seq)`` dedup — so no acknowledged record is ever lost.
+A wall-clock **flush scheduler** (``flush_interval_s`` + :meth:`maybe_flush`)
+and a non-blocking post-flush **fan-out hook** (``on_flush=``, error-
+isolated) complete the production surface.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import numpy as np
 
 from repro.ingest.coalesce import group_shards, plan_chunks
+from repro.ingest.journal import WriteAheadJournal
 from repro.ingest.latest import overlay_latest
 
-__all__ = ["IngestPipeline"]
+__all__ = ["IngestPipeline", "PipelineCrash", "TransientDispatchError"]
+
+
+class TransientDispatchError(RuntimeError):
+    """A flush dispatch failed BEFORE mutating the store (dropped RPC,
+    momentary link loss): safe to retry. Raised by transports or injected
+    by the chaos engine through ``IngestPipeline.fault_hook``."""
+
+
+class PipelineCrash(RuntimeError):
+    """Injected mid-flush process crash (chaos engine): deliberately NOT
+    caught by the retry loop — it propagates out of ``flush`` and leaves
+    the pipeline in the torn state a real crash would. Recovery is a fresh
+    pipeline + :meth:`IngestPipeline.replay_journal`."""
 
 # Per-drone seq gaps leave "holes" a late arrival may still fill. Hole sets
 # are bounded per drone: a gap wider than this is treated as permanent loss
@@ -60,10 +89,34 @@ class IngestPipeline:
         largest power of two with ``B * records_per_shard <=
         tuple_capacity`` (capped at 256) so a batch can never wrap an
         edge ring within one insert step.
+      journal: optional write-ahead journal — a path (opened as a
+        ``WriteAheadJournal`` with the store's tuple width) or an already-
+        open journal. Accepted records are appended before ``submit``
+        returns; ``replay_journal`` on a fresh pipeline recovers them.
+      journal_fsync: fsync the journal on every append (power-loss
+        durability) when ``journal`` is given as a path.
+      flush_interval_s: arm the wall-clock flush scheduler — see
+        :meth:`maybe_flush`. None (default) leaves flushing fully manual.
+      on_flush: post-flush fan-out callback ``cb(summary_dict)``, invoked
+        after local storage whenever a flush shipped records. Error-
+        isolated: a raising callback increments ``on_flush_errors`` and
+        never poisons the flush.
+      max_retries: bounded retry budget per dispatch on
+        ``TransientDispatchError`` (0 disables retry).
+      backoff_s / backoff_factor: exponential backoff schedule between
+        retries (``backoff_s * backoff_factor**attempt``).
+      sleep: injectable sleep (tests/chaos pass a no-op to keep seeded
+        runs deterministic and fast).
     """
 
     def __init__(self, db, max_pending: int = 1 << 20,
-                 batch_shards: Optional[int] = None):
+                 batch_shards: Optional[int] = None, *,
+                 journal=None, journal_fsync: bool = False,
+                 flush_interval_s: Optional[float] = None,
+                 on_flush: Optional[Callable[[dict], None]] = None,
+                 max_retries: int = 4, backoff_s: float = 0.01,
+                 backoff_factor: float = 2.0,
+                 sleep: Callable[[float], None] = time.sleep):
         cfg = db.cfg
         self.db = db
         self.width = cfg.tuple_width
@@ -91,8 +144,30 @@ class IngestPipeline:
         self.counters = {"accepted": 0, "duplicate": 0, "partial": 0,
                          "dropped": 0, "dropped_malformed": 0,
                          "dropped_backpressure": 0, "flushed_records": 0,
-                         "flushed_shards": 0, "flushes": 0}
+                         "flushed_shards": 0, "flushes": 0,
+                         "retries": 0, "gave_up": 0, "replayed": 0,
+                         "on_flush_errors": 0}
         self.last_flush: Optional[dict] = None
+        self.journal = (WriteAheadJournal(journal, self.width,
+                                          fsync=journal_fsync)
+                        if journal is not None
+                        and not isinstance(journal, WriteAheadJournal)
+                        else journal)
+        self.flush_interval_s = flush_interval_s
+        self.on_flush = on_flush
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
+        self.backoff_factor = float(backoff_factor)
+        self._sleep = sleep
+        # Chaos/transport injection point: ``hook(pipeline, attempt)`` runs
+        # before every device dispatch attempt; raising
+        # TransientDispatchError exercises the retry path, PipelineCrash
+        # the crash path. None in production with a reliable local device.
+        self.fault_hook: Optional[Callable] = None
+        self._replaying = False
+        # maybe_flush deadline — armed lazily from the first call's clock,
+        # so callers driving a synthetic ``now`` never mix clocks.
+        self._flush_deadline: Optional[float] = None
 
     # -- submit --------------------------------------------------------------
 
@@ -206,6 +281,10 @@ class IngestPipeline:
         acc_idx = order[accept]
         if acc_idx.size:
             a_rows = rows[acc_idx]
+            if self.journal is not None and not self._replaying:
+                # Durability ordering: on disk BEFORE the ack (the returned
+                # counters). Replayed records are already journaled.
+                self.journal.append(drone[acc_idx], seq[acc_idx], a_rows)
             self.counters["partial"] += int(
                 np.isnan(a_rows[:, 3:]).any(axis=1).sum())
             self._pend.append((drone[acc_idx], seq[acc_idx], a_rows,
@@ -220,6 +299,32 @@ class IngestPipeline:
     def pending(self) -> int:
         return self._n_pending
 
+    def _dispatch(self, fn, *args) -> bool:
+        """One device dispatch under the bounded retry-with-backoff loop.
+
+        ``TransientDispatchError`` (from ``fault_hook`` or a raising
+        transport) is retried up to ``max_retries`` times, sleeping
+        ``backoff_s * backoff_factor**attempt`` between attempts; the retry
+        contract assumes the failed dispatch did NOT mutate the store (the
+        chaos injector raises before the device call; a real transport must
+        fail atomically). Returns False when the budget is exhausted
+        (``gave_up`` counted — the caller returns the chunk's records to
+        pending). ``PipelineCrash`` is deliberately not caught."""
+        attempt = 0
+        while True:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(self, attempt)
+                fn(*args)
+                return True
+            except TransientDispatchError:
+                if attempt >= self.max_retries:
+                    self.counters["gave_up"] += 1
+                    return False
+                self.counters["retries"] += 1
+                self._sleep(self.backoff_s * self.backoff_factor ** attempt)
+                attempt += 1
+
     def flush(self, drain: bool = False, block: bool = True) -> dict:
         """Coalesce pending records into shards and ingest them.
 
@@ -228,14 +333,23 @@ class IngestPipeline:
         are async — host assembly of chunk k+1 overlaps chunk k's scan —
         and ``block=True`` ends with one ``jax.block_until_ready`` at the
         flush boundary, stamping per-record ingest-to-queryable latency.
+        Each dispatch runs under :meth:`_dispatch` retry; a chunk that
+        exhausts its retry budget has its records returned to the pending
+        buffer (``accepted == flushed + pending`` holds through give-ups;
+        a later flush re-coalesces them).
 
         Returns a summary dict (also kept on ``last_flush``): shards/records
-        flushed, dispatch count, and (when blocking) ``latency_s`` — the
-        flushed records' submit->queryable wall times.
+        flushed, dispatch count, this flush's ``retries`` / ``gave_up`` /
+        ``returned_records``, and (when blocking) ``latency_s`` — the
+        flushed records' submit->queryable wall times. ``on_flush`` fires
+        (error-isolated) after local storage whenever records shipped.
         """
+        retries0 = self.counters["retries"]
+        gave0 = self.counters["gave_up"]
         if not self._pend:
             out = {"flushed_shards": 0, "flushed_records": 0,
-                   "dispatches": 0, "latency_s": np.empty(0)}
+                   "dispatches": 0, "retries": 0, "gave_up": 0,
+                   "returned_records": 0, "latency_s": np.empty(0)}
             self.last_flush = out
             return out
         drone = np.concatenate([p[0] for p in self._pend])
@@ -246,6 +360,7 @@ class IngestPipeline:
                                          self._shard_seq, drain)
         n_shards = n_records = dispatches = 0
         flushed_tsub = []
+        failed_idx = []
         for k, (pay, meta, idx) in sorted(batches.items()):
             b_total = pay.shape[0]
             b_max = max(self.batch_shards * self.r_full // max(k, 1), 1)
@@ -263,31 +378,121 @@ class IngestPipeline:
                 metas = type(meta)(*(np.asarray(f)[sl].reshape(nb, b)
                                      for f in meta))
                 if nb == 1:
-                    self.db.insert(pays[0], type(meta)(*(f[0] for f in metas)))
+                    ok = self._dispatch(
+                        self.db.insert, pays[0],
+                        type(meta)(*(f[0] for f in metas)))
                 else:
-                    self.db.ingest_rounds(pays, metas)
+                    ok = self._dispatch(self.db.ingest_rounds, pays, metas)
                 dispatches += 1
+                chunk_idx = np.asarray(idx)[sl].reshape(-1)
+                if ok:
+                    n_shards += nb * b
+                    n_records += chunk_idx.size
+                    flushed_tsub.append(tsub[chunk_idx])
+                else:
+                    failed_idx.append(chunk_idx)
                 off += nb * b
                 i = j
-            n_shards += b_total
-            n_records += b_total * k
-            flushed_tsub.append(tsub[idx.reshape(-1)])
-        # Keep the leftover (sub-shard) tails pending.
-        self._pend = ([(drone[leftover], seq[leftover], rows[leftover],
-                        tsub[leftover])] if leftover.size else [])
-        self._n_pending = int(leftover.size)
+        # Keep the leftover (sub-shard) tails AND any gave-up chunks'
+        # records pending. (Gave-up shards already consumed their sid_lo
+        # numbers — the re-flush assigns fresh ones, which only needs sids
+        # to stay unique, not dense.)
+        keep = (np.concatenate([leftover] + failed_idx)
+                if failed_idx else leftover)
+        self._pend = ([(drone[keep], seq[keep], rows[keep], tsub[keep])]
+                      if keep.size else [])
+        self._n_pending = int(keep.size)
         self.counters["flushed_shards"] += n_shards
         self.counters["flushed_records"] += n_records
         self.counters["flushes"] += 1
         out = {"flushed_shards": n_shards, "flushed_records": n_records,
-               "dispatches": dispatches, "latency_s": np.empty(0)}
+               "dispatches": dispatches,
+               "retries": self.counters["retries"] - retries0,
+               "gave_up": self.counters["gave_up"] - gave0,
+               "returned_records": int(sum(f.size for f in failed_idx)),
+               "latency_s": np.empty(0)}
         if block:
             jax.block_until_ready(self.db.state.tup_count)
             done = time.monotonic()
             if flushed_tsub:
                 out["latency_s"] = done - np.concatenate(flushed_tsub)
         self.last_flush = out
+        if self.on_flush is not None and n_records:
+            # Fan-out AFTER local storage; error-isolated — a raising
+            # subscriber never poisons the flush.
+            try:
+                self.on_flush(out)
+            except Exception:
+                self.counters["on_flush_errors"] += 1
         return out
+
+    def maybe_flush(self, now: Optional[float] = None, *,
+                    drain: bool = False, block: bool = True
+                    ) -> Optional[dict]:
+        """Wall-clock flush scheduler: flush iff ``now`` has passed the
+        armed deadline, then re-arm ``flush_interval_s`` ahead.
+
+        The deadline arms lazily on the first call (from ITS clock), so
+        callers driving a synthetic ``now`` never race the constructor's
+        wall clock; ``now=None`` reads ``time.monotonic()``. Returns the
+        flush summary — with the triggering ``deadline`` and ``late_s``
+        stamped into it (and thus into ``last_flush``) — when a flush ran,
+        else None. Requires ``flush_interval_s``."""
+        if self.flush_interval_s is None:
+            raise ValueError(
+                "maybe_flush() needs a flush interval: open the pipeline "
+                "with IngestPipeline(db, flush_interval_s=...) — or call "
+                "flush() directly for manual control.")
+        if now is None:
+            now = time.monotonic()
+        if self._flush_deadline is None:
+            self._flush_deadline = now + self.flush_interval_s
+        if now < self._flush_deadline:
+            return None
+        deadline = self._flush_deadline
+        out = self.flush(drain=drain, block=block)
+        out["deadline"] = deadline
+        out["late_s"] = now - deadline
+        self._flush_deadline = now + self.flush_interval_s
+        return out
+
+    # -- journal recovery ----------------------------------------------------
+
+    def replay_journal(self, batch: int = 8192) -> dict:
+        """Re-submit every journaled record through the normal ``submit``
+        path (crash recovery: fresh pipeline + fresh/rebuilt session +
+        replay). Idempotent: the ``(drone, seq)`` dedup absorbs records
+        that already made it in (double replay accepts nothing twice).
+        Replay respects backpressure by flushing whenever the pending
+        buffer could not absorb the next batch. Returns a summary dict;
+        the accepted delta is also counted in ``counters['replayed']``."""
+        if self.journal is None:
+            raise ValueError(
+                "no journal to replay: open the pipeline with journal=... "
+                "(a path or WriteAheadJournal).")
+        d, s, r, info = self.journal.replay()
+        acc0 = self.counters["accepted"]
+        self._replaying = True
+        try:
+            for i in range(0, d.shape[0], batch):
+                if self._n_pending + batch > self.max_pending:
+                    self.flush()
+                j = min(i + batch, d.shape[0])
+                self.submit_arrays(d[i:j], s[i:j], r[i:j, 0], r[i:j, 1],
+                                   r[i:j, 2], r[i:j, 3:])
+        finally:
+            self._replaying = False
+        accepted = self.counters["accepted"] - acc0
+        self.counters["replayed"] += accepted
+        return {"journal_records": info["records"],
+                "torn_bytes": info["torn_bytes"], "accepted": accepted,
+                "already_seen": info["records"] - accepted}
+
+    def close(self) -> None:
+        """Close the journal file handle (the pipeline itself is
+        stateless on disk beyond it)."""
+        if self.journal is not None:
+            self.journal.close()
 
     # -- latest overlay ------------------------------------------------------
 
@@ -305,19 +510,34 @@ class IngestPipeline:
     # -- reconciliation ------------------------------------------------------
 
     def reconcile(self) -> dict:
-        """Exact counter reconciliation (the fig18 CI gate): every accepted
-        record is pending or flushed, and — on an all-alive store that never
-        wrapped, reclaimed, or dropped — flushed records appear in the tuple
-        logs exactly ``replication`` times. Returns the evidence dict with
-        ``ok``; raises nothing (callers assert)."""
+        """Exact counter reconciliation (the fig18/fig19 CI gate).
+
+        Two legs, reported separately so chaos runs can gate each where it
+        holds:
+
+        * ``counters_ok`` — ``accepted == flushed_records + pending``.
+          Holds at EVERY step, through retries, give-ups (gave-up chunks
+          return to pending), journal replay, partitions, and outages.
+        * ``stored_ok`` — ``sum(tup_count) == flushed_records *
+          replication``. Holds at convergence points: an all-effective
+          store that never wrapped, reclaimed mid-degradation, or dropped —
+          including after a full heal/recover + repair, where every shard
+          is back to exactly ``replication`` canonical copies. Mid-outage
+          it can legitimately over-count (stale frozen copies on dead
+          edges await reclamation).
+
+        ``ok`` is their conjunction. Returns the evidence dict; raises
+        nothing (callers assert)."""
         c = self.counters
         stored = int(np.asarray(self.db.state.tup_count).sum())
         expect = c["flushed_records"] * self.db.cfg.replication
-        ok = (c["accepted"] == c["flushed_records"] + self._n_pending
-              and stored == expect)
-        return {"ok": ok, "accepted": c["accepted"],
+        counters_ok = c["accepted"] == c["flushed_records"] + self._n_pending
+        stored_ok = stored == expect
+        return {"ok": counters_ok and stored_ok, "counters_ok": counters_ok,
+                "stored_ok": stored_ok, "accepted": c["accepted"],
                 "flushed_records": c["flushed_records"],
                 "pending": self._n_pending, "stored_tuples": stored,
                 "expected_tuples": expect,
                 "duplicate": c["duplicate"], "partial": c["partial"],
-                "dropped": c["dropped"]}
+                "dropped": c["dropped"], "retries": c["retries"],
+                "gave_up": c["gave_up"], "replayed": c["replayed"]}

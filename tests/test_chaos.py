@@ -1,0 +1,353 @@
+"""Chaos engine (PR 9 tentpole): seeded fault plans, the runner, retry /
+give-up / crash-recovery paths, and the replay-determinism + convergence
+properties.
+
+The load-bearing contracts: ``FaultPlan.random`` is pure in its seed (same
+seed, bitwise-same plan); applying a plan to identically-seeded deployments
+is fully deterministic (identical machine-readable logs, bitwise-identical
+stores); a transient dispatch burst within the retry budget leaves the
+store bitwise identical to a never-faulted run; an exhausted budget returns
+the chunk to pending without breaking ``accepted == flushed + pending``; a
+mid-flush crash with a write-ahead journal loses zero acknowledged records;
+and — the property test — after a random plan's final heal/recover +
+repair, the store's canonical content is bit-identical to the never-faulted
+reference fed the same stream.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import AerialDB
+from repro.chaos import (EVENT_KINDS, ChaosRunner, FaultEvent, FaultPlan,
+                         assert_content_equal, canonical_content)
+from repro.core.datastore import StoreConfig, make_pred
+from repro.data.synthetic import CityConfig, make_sites
+from repro.ingest import IngestPipeline, PipelineCrash
+
+E = 8
+CATCH_ALL = make_pred(q=1, t0=0.0, t1=1e9, has_temporal=True, is_and=True)
+
+
+def _cfg(**overrides):
+    sites = make_sites(E, CityConfig(), seed=3)
+    kw = dict(n_edges=E, sites=tuple(map(tuple, sites.tolist())),
+              tuple_capacity=2048, index_capacity=512,
+              max_shards_per_query=64, records_per_shard=8,
+              retention_every=2, n_failure_domains=4)
+    kw.update(overrides)
+    return StoreConfig(**kw)
+
+
+CFG = _cfg()
+_NOSLEEP = lambda s: None     # noqa: E731 — deterministic, instant backoff
+
+
+def _pipe(db, **kw):
+    kw.setdefault("sleep", _NOSLEEP)
+    return IngestPipeline(db, **kw)
+
+
+def _tick_records(step, n_drones=12, per_drone=8, seed=0):
+    """Deterministic telemetry for one tick: every drone contributes one
+    full shard's worth of in-order records (identical across runs)."""
+    rng = np.random.default_rng((seed, step))
+    n = n_drones * per_drone
+    drone = np.repeat(np.arange(n_drones, dtype=np.int64), per_drone)
+    seq = np.tile(np.arange(per_drone, dtype=np.int64), n_drones) \
+        + step * per_drone
+    t = seq.astype(np.float64) + step * 0.25
+    lat = rng.uniform(12.90, 13.00, n)
+    lon = rng.uniform(77.50, 77.62, n)
+    vals = rng.normal(size=(n, 4))
+    return drone, seq, t, lat, lon, vals
+
+
+def _feed(pipe, step, seed=0):
+    pipe.submit_arrays(*_tick_records(step, seed=seed))
+    return pipe.flush()
+
+
+def _total_count(db):
+    res, _ = db.query(CATCH_ALL, key=jax.random.key(0))
+    return int(res.count[0])
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: seeded determinism + well-formedness
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_replays_from_seed():
+    kw = dict(n_edges=E, n_steps=10, n_domains=4, min_alive=4,
+              require=("partition", "flush_fail"))
+    a = FaultPlan.random(7, **kw)
+    assert a == FaultPlan.random(7, **kw)            # pure in the seed
+    assert a.seed == 7
+    assert {"partition", "flush_fail"} <= set(a.kinds())
+    assert a != FaultPlan.random(8, **kw)
+    rows = a.to_rows()
+    assert json.loads(json.dumps(rows)) == rows      # machine-readable
+
+
+@given(st.integers(0, 1 << 30))
+@settings(deadline=None, max_examples=20)
+def test_fault_plan_is_well_formed(seed):
+    """Every generated plan keeps >= min_alive edges alive AND reachable at
+    every point, nests no partitions, and closes every fault by the
+    horizon."""
+    plan = FaultPlan.random(seed, n_edges=E, n_steps=10, n_domains=4,
+                            min_alive=4, allow_crash=True)
+    dead, unreachable = set(), set()
+    block = E // 4
+    for ev in plan.events:
+        assert ev.kind in EVENT_KINDS
+        if ev.kind == "fail_edges":
+            assert not (set(ev.args[0]) & dead)
+            dead |= set(ev.args[0])
+        elif ev.kind == "recover_edges":
+            assert set(ev.args[0]) <= dead
+            dead -= set(ev.args[0])
+        elif ev.kind == "fail_device":
+            dead |= set(range(ev.args[0] * block, (ev.args[0] + 1) * block))
+        elif ev.kind == "recover_device":
+            dead -= set(range(ev.args[0] * block, (ev.args[0] + 1) * block))
+        elif ev.kind == "partition":
+            assert not unreachable                   # one split at a time
+            keep, cut = ev.args[0]
+            assert not (set(keep) & set(cut))
+            assert set(keep) | set(cut) == set(range(E))
+            assert not (set(cut) & dead)             # cut from effective
+            unreachable = set(cut)
+        elif ev.kind == "heal":
+            unreachable = set()
+        elif ev.kind == "flush_fail":
+            assert 1 <= ev.args[0] <= 2              # default max_transient
+        assert len(set(range(E)) - dead - unreachable) >= 4, ev
+    assert not dead and not unreachable              # closed by the horizon
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="step-sorted"):
+        FaultPlan(events=(FaultEvent(3, "heal"), FaultEvent(1, "heal")),
+                  n_steps=4)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan(events=(FaultEvent(0, "meteor_strike"),), n_steps=4)
+    with pytest.raises(ValueError, match="could not generate"):
+        FaultPlan.random(0, n_edges=E, n_steps=2, p_fault=0.0,
+                         require=("partition",))
+
+
+# ---------------------------------------------------------------------------
+# ChaosRunner: deterministic application, machine-readable log
+# ---------------------------------------------------------------------------
+
+
+def _run_once(plan, seed=0):
+    db = AerialDB.open(CFG, seed=0)
+    pipe = _pipe(db)
+    runner = ChaosRunner(plan, db, pipe)
+    runner.run(lambda step: _feed(pipe, step, seed=seed))
+    return db, pipe, runner
+
+
+def test_runner_is_deterministic():
+    """Same plan + same seeds + same workload: the two runs' stores are
+    bitwise identical and their event logs byte-identical."""
+    plan = FaultPlan.random(11, n_edges=E, n_steps=6, n_domains=4,
+                            min_alive=4, require=("partition", "flush_fail"))
+    (db1, p1, r1), (db2, p2, r2) = _run_once(plan), _run_once(plan)
+    assert r1.to_json() == r2.to_json()
+    assert p1.counters == p2.counters
+    for a, b in zip(jax.tree.leaves(db1.state), jax.tree.leaves(db2.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_runner_log_is_machine_readable():
+    plan = FaultPlan.random(11, n_edges=E, n_steps=6, n_domains=4,
+                            min_alive=4, require=("partition", "flush_fail"))
+    _db, _pipe_, runner = _run_once(plan)
+    assert runner.done
+    log = json.loads(runner.to_json())
+    assert [(ev["step"], ev["kind"]) for ev in log] == \
+        [(e.step, e.kind) for e in plan.events]
+    for ev in log:
+        if ev["kind"] in ("recover_edges", "recover_device", "heal"):
+            assert ev["repair"]["mode"] == "incremental"
+            assert "ledger" in ev
+        if ev["kind"] in ("fail_edges", "fail_device", "partition"):
+            assert "ledger" in ev
+
+
+def test_runner_without_pipeline_rejects_ingest_faults():
+    db = AerialDB.open(CFG, seed=0)
+    plan = FaultPlan(events=(FaultEvent(0, "flush_fail", (1,)),), n_steps=2)
+    runner = ChaosRunner(plan, db)                   # no pipeline
+    with pytest.raises(ValueError, match="no pipeline"):
+        runner.advance(0)
+
+
+# ---------------------------------------------------------------------------
+# Transient flush failure: retry absorbs, give-up returns to pending
+# ---------------------------------------------------------------------------
+
+
+def test_transient_burst_within_budget_is_bitwise_invisible():
+    """A burst <= max_retries is fully absorbed by the retry loop: same
+    dispatches, same sids, bitwise-identical store to a never-faulted run —
+    only the retries counter differs."""
+    db_f, db_r = AerialDB.open(CFG, seed=0), AerialDB.open(CFG, seed=0)
+    pipe_f, pipe_r = _pipe(db_f, max_retries=4), _pipe(db_r)
+    runner = ChaosRunner(
+        FaultPlan(events=(FaultEvent(1, "flush_fail", (2,)),), n_steps=3),
+        db_f, pipe_f)
+    for step in range(3):
+        runner.advance(step)
+        _feed(pipe_f, step)
+        _feed(pipe_r, step)
+    assert pipe_f.counters["retries"] == 2
+    assert pipe_f.counters["gave_up"] == 0
+    c_f = {k: v for k, v in pipe_f.counters.items() if k != "retries"}
+    c_r = {k: v for k, v in pipe_r.counters.items() if k != "retries"}
+    assert c_f == c_r
+    for a, b in zip(jax.tree.leaves(db_f.state), jax.tree.leaves(db_r.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_exhausted_retry_budget_returns_chunk_to_pending():
+    """Past the budget the chunk gives up: its records return to pending
+    (``accepted == flushed + pending`` still holds), nothing half-lands,
+    and the next healthy flush delivers them."""
+    db = AerialDB.open(CFG, seed=0)
+    pipe = _pipe(db, max_retries=1)
+
+    def always_fail(pipeline, attempt):
+        from repro.ingest import TransientDispatchError
+        raise TransientDispatchError("link down")
+    pipe.fault_hook = always_fail
+    pipe.submit_arrays(*_tick_records(0))
+    out = pipe.flush()
+    assert out["flushed_records"] == 0
+    # 12 full shards -> plan_chunks gives an [8, 4] split: two dispatches,
+    # each burning its 1-retry budget then giving up.
+    assert out["gave_up"] == 2 and out["retries"] == 2
+    assert out["returned_records"] == 96 == pipe.pending
+    assert int(np.asarray(db.state.tup_count).sum()) == 0   # nothing landed
+    rec = pipe.reconcile()
+    assert rec["counters_ok"], rec                   # invariant survives
+    pipe.fault_hook = None                           # link back up
+    out = pipe.flush()
+    assert out["flushed_records"] == 96
+    rec = pipe.reconcile()
+    assert rec["ok"], rec
+    assert _total_count(db) == 96
+
+
+# ---------------------------------------------------------------------------
+# Mid-flush crash + journal replay: zero acknowledged records lost
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_crash_recovery_via_journal(tmp_path):
+    """The chaos crash tears a flush mid-flight; a fresh session + fresh
+    pipeline + ``replay_journal`` must recover every acknowledged record —
+    the rebuilt store's canonical content equals the never-crashed
+    reference's."""
+    path = tmp_path / "wal.bin"
+    db = AerialDB.open(CFG, seed=0)
+    pipe = _pipe(db, journal=path)
+    runner = ChaosRunner(
+        FaultPlan(events=(FaultEvent(1, "pipeline_crash"),), n_steps=3),
+        db, pipe)
+    runner.advance(0)
+    _feed(pipe, 0)
+    runner.advance(1)                                # arms the crash
+    accepted_pre = None
+    with pytest.raises(PipelineCrash):
+        pipe.submit_arrays(*_tick_records(1))
+        accepted_pre = pipe.counters["accepted"]
+        pipe.flush()
+    assert accepted_pre == 192                       # both ticks acked
+    pipe.close()
+
+    # Process death: session + pipeline state gone. Rebuild and replay.
+    db2 = AerialDB.open(CFG, seed=0)
+    pipe2 = _pipe(db2, journal=path)
+    rep = pipe2.replay_journal()
+    assert rep["journal_records"] == rep["accepted"] == 192
+    pipe2.flush(drain=True)
+    rec = pipe2.reconcile()
+    assert rec["ok"], rec
+    assert rec["flushed_records"] == 192             # zero lost
+
+    db_ref = AerialDB.open(CFG, seed=0)
+    pipe_ref = _pipe(db_ref)
+    for step in range(2):
+        _feed(pipe_ref, step)
+    assert_content_equal(canonical_content(db2), canonical_content(db_ref),
+                         msg="crash-recovered vs reference: ")
+
+
+# ---------------------------------------------------------------------------
+# The property: random plans converge to the never-faulted reference
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 1 << 30))
+@settings(deadline=None, max_examples=5)
+def test_chaos_plan_converges_to_reference_property(seed):
+    """For random seeded plans mixing edge/device loss, partitions, and
+    transient flush failures: ``accepted == flushed + pending`` holds at
+    every step; after the plan's closing heal/recover (+ inline repairs)
+    the store's canonical content is bit-identical to the never-faulted
+    reference fed the same stream, and the full reconcile passes."""
+    plan = FaultPlan.random(seed, n_edges=E, n_steps=6, n_domains=4,
+                            min_alive=4, max_transient=2)
+    db = AerialDB.open(CFG, seed=0)
+    pipe = _pipe(db, max_retries=4)
+    runner = ChaosRunner(plan, db, pipe)
+    db_ref = AerialDB.open(CFG, seed=0)
+    pipe_ref = _pipe(db_ref)
+
+    def tick(step):
+        _feed(pipe, step, seed=seed)
+        _feed(pipe_ref, step, seed=seed)
+        assert pipe.reconcile()["counters_ok"], (seed, step)
+
+    runner.run(tick)
+    assert pipe.counters["gave_up"] == 0             # bursts <= budget
+    # wrap-free precondition for content equality (audit module docstring)
+    assert int(np.asarray(db.state.tup_count).max()) <= CFG.tuple_capacity
+    rec = pipe.reconcile()
+    assert rec["ok"], (seed, rec)
+    assert_content_equal(canonical_content(db), canonical_content(db_ref),
+                         msg=f"seed={seed}: ")
+    assert _total_count(db) == _total_count(db_ref)
+
+
+def test_chaos_smoke():
+    """Tier-1 fast path (also the CI smoke): one fixed mixed plan, end to
+    end — deterministic log, full recovery, reference-equal content."""
+    plan = FaultPlan(events=(
+        FaultEvent(0, "fail_edges", ((6,),)),
+        FaultEvent(1, "partition", (((0, 1, 2, 3, 6), (4, 5, 7)),)),
+        FaultEvent(1, "flush_fail", (2,)),
+        FaultEvent(2, "heal"),
+        FaultEvent(3, "recover_edges", ((6,),)),
+    ), n_steps=4)
+    db = AerialDB.open(CFG, seed=0)
+    pipe = _pipe(db, max_retries=4)
+    runner = ChaosRunner(plan, db, pipe)
+    runner.run(lambda step: _feed(pipe, step))
+    assert runner.done and len(runner.log) == len(plan.events)
+    assert pipe.counters["retries"] == 2 and pipe.counters["gave_up"] == 0
+    assert pipe.reconcile()["ok"]
+    db_ref = AerialDB.open(CFG, seed=0)
+    pipe_ref = _pipe(db_ref)
+    for step in range(4):
+        _feed(pipe_ref, step)
+    assert_content_equal(canonical_content(db), canonical_content(db_ref))

@@ -366,3 +366,63 @@ def test_retention_watermark_survives_ring_reclamation():
     t1_e = np.asarray(db.state.index.ent_f)[e, :, 5]
     assert not np.any(valid_e & (t1_e == -1e9))
     assert int(np.asarray(info["index_entries_retired"])[e]) >= 1
+
+
+# ---------------------------------------------------------------------------
+# PR 9 satellites: wall-clock flush scheduler + post-flush fan-out
+# ---------------------------------------------------------------------------
+
+
+def _submit_full_shards(pipe, n_drones=4, step=0):
+    n = n_drones * R
+    drone = np.repeat(np.arange(n_drones, dtype=np.int64), R)
+    seq = np.tile(np.arange(R, dtype=np.int64), n_drones) + step * R
+    t = seq.astype(np.float64)
+    pipe.submit_arrays(drone, seq, t, np.full(n, 12.95), np.full(n, 77.55))
+    return n
+
+
+def test_maybe_flush_deadline_scheduler():
+    """maybe_flush fires iff the synthetic clock passes the armed deadline,
+    re-arms interval-ahead, and stamps deadline/late_s telemetry."""
+    db = AerialDB.open(_cfg(), seed=0)
+    pipe = IngestPipeline(db, flush_interval_s=5.0)
+    _submit_full_shards(pipe)
+    assert pipe.maybe_flush(now=100.0) is None       # arms at 105, no flush
+    assert pipe.maybe_flush(now=104.9) is None
+    out = pipe.maybe_flush(now=106.0)
+    assert out is not None and out["flushed_records"] == 4 * R
+    assert out["deadline"] == 105.0
+    assert out["late_s"] == pytest.approx(1.0)
+    assert pipe.last_flush is out
+    assert pipe.maybe_flush(now=110.9) is None       # re-armed at 111
+    _submit_full_shards(pipe, step=1)
+    out = pipe.maybe_flush(now=111.0)
+    assert out is not None and out["flushed_records"] == 4 * R
+    assert out["late_s"] == pytest.approx(0.0)
+    # Manual-mode pipelines reject the scheduler loudly.
+    manual = IngestPipeline(db)
+    with pytest.raises(ValueError, match="flush interval"):
+        manual.maybe_flush(now=0.0)
+
+
+def test_on_flush_fanout_is_error_isolated():
+    """on_flush fires once per record-shipping flush with the summary dict;
+    a raising subscriber is counted, never propagated, and never poisons
+    the flush's own bookkeeping."""
+    db = AerialDB.open(_cfg(), seed=0)
+    seen = []
+
+    def cb(summary):
+        seen.append(summary["flushed_records"])
+        raise RuntimeError("subscriber exploded")
+
+    pipe = IngestPipeline(db, on_flush=cb)
+    _submit_full_shards(pipe)
+    out = pipe.flush()                               # ships -> cb fires
+    assert out["flushed_records"] == 4 * R
+    assert seen == [4 * R]
+    assert pipe.counters["on_flush_errors"] == 1
+    pipe.flush()                                     # empty -> cb silent
+    assert seen == [4 * R]
+    assert pipe.reconcile()["ok"]

@@ -1,0 +1,193 @@
+"""Write-ahead journal (PR 9 crash durability): the ingest pipeline's
+append-before-ack record log.
+
+Contracts under test: fixed-width binary roundtrips are bit-exact
+(including NaN payload channels), a torn tail (partial trailing record
+after a crash mid-append) is self-describing and truncated on reopen
+without touching whole records, width/magic mismatches refuse loudly, the
+pipeline journals exactly the ACCEPTED record set (duplicates, malformed
+and backpressure-dropped records never hit disk), and replay is idempotent
+through the (drone, seq) dedup — a double replay accepts nothing twice.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import AerialDB
+from repro.core.datastore import StoreConfig
+from repro.data.synthetic import CityConfig, make_sites
+from repro.ingest import IngestPipeline, WriteAheadJournal
+
+E = 8
+WIDTH = 7      # t, lat, lon + 4 value channels
+
+
+def _cfg(**overrides):
+    sites = make_sites(E, CityConfig(), seed=3)
+    kw = dict(n_edges=E, sites=tuple(map(tuple, sites.tolist())),
+              tuple_capacity=2048, index_capacity=512,
+              max_shards_per_query=64, records_per_shard=8,
+              retention_every=1 << 20, n_failure_domains=4)
+    kw.update(overrides)
+    return StoreConfig(**kw)
+
+
+def _rows(n, seed=0):
+    rng = np.random.default_rng(seed)
+    rows = rng.standard_normal((n, WIDTH)).astype(np.float32)
+    rows[:, 0] = np.arange(n, dtype=np.float32)          # finite t
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Raw journal file format
+# ---------------------------------------------------------------------------
+
+
+def test_journal_roundtrip_bit_exact(tmp_path):
+    """Append/replay roundtrips ids and float32 rows bit-for-bit — NaN
+    payload channels included (partial records are first-class)."""
+    path = tmp_path / "wal.bin"
+    rows = _rows(50, seed=1)
+    rows[7, 4] = np.nan
+    rows[12, 3:] = np.nan
+    drone = np.arange(50, dtype=np.int64) % 5
+    seq = np.arange(50, dtype=np.int64)
+    with WriteAheadJournal(path, WIDTH) as j:
+        assert j.append(drone[:30], seq[:30], rows[:30]) == 30
+        assert j.append(drone[30:], seq[30:], rows[30:]) == 20
+        assert j.n_records == 50
+    with WriteAheadJournal(path, WIDTH) as j:
+        d, s, r, info = j.replay()
+    assert info["records"] == 50 and info["torn_bytes"] == 0
+    np.testing.assert_array_equal(d, drone)
+    np.testing.assert_array_equal(s, seq)
+    # bit-level comparison: NaN != NaN under ==, so compare the patterns
+    np.testing.assert_array_equal(r.view(np.int32), rows.view(np.int32))
+
+
+def test_journal_truncates_torn_tail(tmp_path):
+    """A crash mid-append leaves a partial trailing record; reopen reports
+    and truncates it, keeping every whole record byte-identical."""
+    path = tmp_path / "wal.bin"
+    rows = _rows(10)
+    with WriteAheadJournal(path, WIDTH) as j:
+        j.append(np.arange(10, dtype=np.int64),
+                 np.arange(10, dtype=np.int64), rows)
+        rec_size = j.itemsize
+    full = path.read_bytes()
+    torn = rec_size // 2
+    path.write_bytes(full[:len(full) - rec_size + torn])   # tear record 9
+    with WriteAheadJournal(path, WIDTH) as j:
+        assert j.n_records == 9
+        d, s, r, info = j.replay()
+    assert d.shape[0] == 9
+    assert info["torn_bytes"] == 0          # reopen already truncated it
+    np.testing.assert_array_equal(r.view(np.int32),
+                                  rows[:9].view(np.int32))
+    # the file itself is frame-aligned again: appends keep working
+    with WriteAheadJournal(path, WIDTH) as j:
+        j.append(np.array([99]), np.array([0]), _rows(1))
+        assert j.n_records == 10
+
+
+def test_journal_width_mismatch_raises(tmp_path):
+    path = tmp_path / "wal.bin"
+    with WriteAheadJournal(path, WIDTH) as j:
+        j.append(np.array([1]), np.array([0]), _rows(1))
+    with pytest.raises(ValueError, match="width"):
+        WriteAheadJournal(path, WIDTH + 2)
+
+
+def test_journal_rejects_foreign_file(tmp_path):
+    path = tmp_path / "not_a_wal.bin"
+    path.write_bytes(b"definitely not a journal header" * 4)
+    with pytest.raises(ValueError, match="magic"):
+        WriteAheadJournal(path, WIDTH)
+
+
+def test_journal_fresh_and_empty_files(tmp_path):
+    """A fresh path and a zero-record journal both replay to empty."""
+    for name in ("fresh.bin", "empty.bin"):
+        with WriteAheadJournal(tmp_path / name, WIDTH) as j:
+            d, s, r, info = j.replay()
+        assert d.size == s.size == 0 and r.shape == (0, WIDTH)
+        assert info["records"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Pipeline integration: journal == the accepted set, replay is idempotent
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_journals_exactly_the_accepted_set(tmp_path):
+    """Duplicates, malformed records and backpressure drops are acked as
+    rejected — none of them may reach the journal (the journal is the ack's
+    durability receipt, not a raw intake tape)."""
+    db = AerialDB.open(_cfg(), seed=0)
+    pipe = IngestPipeline(db, max_pending=40,
+                          journal=tmp_path / "wal.bin")
+    n = 30
+    drone = np.zeros(n, np.int64)
+    seq = np.arange(n, dtype=np.int64)
+    rows = _rows(n)
+    pipe.submit_arrays(drone, seq, rows[:, 0], rows[:, 1], rows[:, 2],
+                       rows[:, 3:])
+    # duplicates (re-sent seqs), one malformed (NaN t), and a batch big
+    # enough to overflow the max_pending=40 budget
+    dup = pipe.submit_arrays(drone[:5], seq[:5], rows[:5, 0], rows[:5, 1],
+                             rows[:5, 2], rows[:5, 3:])
+    assert dup["duplicate"] == 5
+    bad_t = np.array([np.nan])
+    pipe.submit_arrays(np.array([3]), np.array([0]), bad_t,
+                       np.array([1.0]), np.array([2.0]))
+    big = 30
+    pipe.submit_arrays(np.full(big, 1, np.int64),
+                       np.arange(big, dtype=np.int64),
+                       np.arange(big, dtype=np.float64),
+                       np.zeros(big), np.zeros(big))
+    c = pipe.counters
+    assert c["dropped_malformed"] == 1 and c["dropped_backpressure"] > 0
+    assert pipe.journal.n_records == c["accepted"]
+    d, s, r, _ = pipe.journal.replay()
+    # journaled (drone, seq) pairs are exactly the accepted, deduped set
+    pairs = set(zip(d.tolist(), s.tolist()))
+    assert len(pairs) == c["accepted"]
+    pipe.close()
+
+
+def test_journal_replay_is_idempotent(tmp_path):
+    """Replay into a fresh pipeline recovers every accepted record once;
+    a second replay (and a replay after partial delivery) accepts zero —
+    the (drone, seq) dedup is the idempotence mechanism, so `replayed`
+    over-delivery can never double-store."""
+    cfg = _cfg()
+    path = tmp_path / "wal.bin"
+    db = AerialDB.open(cfg, seed=0)
+    pipe = IngestPipeline(db, journal=path)
+    n = 64
+    rows = _rows(n, seed=4)
+    pipe.submit_arrays(np.arange(n, dtype=np.int64) % 4,
+                       np.arange(n, dtype=np.int64) // 4,
+                       rows[:, 0], rows[:, 1], rows[:, 2], rows[:, 3:])
+    pipe.flush(drain=True)
+    accepted = pipe.counters["accepted"]
+    assert accepted == n
+    pipe.close()
+
+    # crash: session and pipeline are gone; rebuild both and replay
+    db2 = AerialDB.open(cfg, seed=0)
+    pipe2 = IngestPipeline(db2, journal=path)
+    rep = pipe2.replay_journal()
+    assert rep == {"journal_records": n, "torn_bytes": 0,
+                   "accepted": n, "already_seen": 0}
+    assert pipe2.counters["replayed"] == n
+    # replaying does NOT re-journal (no doubling on disk)
+    assert pipe2.journal.n_records == n
+    again = pipe2.replay_journal()
+    assert again["accepted"] == 0 and again["already_seen"] == n
+    pipe2.flush(drain=True)
+    rec = pipe2.reconcile()
+    assert rec["ok"], rec
+    assert rec["flushed_records"] == n      # zero lost accepted records
+    pipe2.close()

@@ -1,0 +1,336 @@
+"""Fleet partition tolerance (PR 9): unreachable-but-intact edges.
+
+The contract under test: ``AerialDB.partition(edge_groups)`` models a
+network split — the far side is excluded from placement, query planning and
+repair via ``effective_alive`` but its state is never mutated (distinct
+from dead) — and ``heal()`` closes an epoch window on the SAME outage
+ledger a recovery uses, so the incremental repair sweeps only shards
+ingested during the partition and stays bitwise identical to the full
+sweep. Plus the satellite ledger edge cases: ``fail_edges`` on an
+already-dead edge merges into its original epoch record, and
+``recover_edges`` on an alive edge is a bitwise no-op — regression-tested
+on both mesh layouts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import AerialDB
+from repro.chaos import assert_content_equal, canonical_content
+from repro.core.datastore import StoreConfig, make_pred
+from repro.core.repair import repair_state
+from repro.data.synthetic import CityConfig, DroneFleet, make_sites
+from repro.launch.mesh import make_edge_mesh, make_fleet_mesh
+
+E = 8
+N_DEV = 4
+CAP = 256
+CATCH_ALL = make_pred(q=1, t0=0.0, t1=1e9, has_temporal=True, is_and=True)
+
+
+def _cfg(**overrides):
+    sites = make_sites(E, CityConfig(), seed=3)
+    kw = dict(n_edges=E, sites=tuple(map(tuple, sites.tolist())),
+              tuple_capacity=CAP, index_capacity=512,
+              max_shards_per_query=64, records_per_shard=8,
+              retention_every=2, n_failure_domains=4)
+    kw.update(overrides)
+    return StoreConfig(**kw)
+
+
+CFG = _cfg()
+
+
+def _assert_states_identical(ref, fed, msg=""):
+    names = [jax.tree_util.keystr(p) for p, _
+             in jax.tree_util.tree_flatten_with_path(ref)[0]]
+    for name, a, b in zip(names, jax.tree.leaves(ref), jax.tree.leaves(fed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{msg}{name}")
+
+
+def _ingest(db, fleet, rounds=1):
+    for _ in range(rounds):
+        p, m = fleet.next_shards()
+        db.insert(p, m)
+    return p, m
+
+
+def _total_count(db):
+    res, _ = db.query(CATCH_ALL, key=jax.random.key(0))
+    return int(res.count[0])
+
+
+# ---------------------------------------------------------------------------
+# Partition semantics: re-route, degrade, frozen far side
+# ---------------------------------------------------------------------------
+
+
+def test_partition_reroutes_inserts_and_freezes_far_side():
+    """Inserts during a partition land only on reachable edges; the far
+    side's state is bitwise frozen (unreachable != dead: nothing is
+    reclaimed or backfilled over it while the split is open)."""
+    db = AerialDB.open(CFG, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=5)
+    _ingest(db, fleet, 2)
+    far = [4, 5, 6, 7]
+    far_tup = np.asarray(db.state.tup_f)[far].copy()
+    far_idx = np.asarray(db.state.index.valid)[far].copy()
+    db.partition([[0, 1, 2, 3], far])
+    np.testing.assert_array_equal(np.asarray(db.effective_alive),
+                                  [1, 1, 1, 1, 0, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(db.alive), True)  # not dead
+    info = _ingest(db, fleet, 2) and db.last_repair    # noqa: F841
+    np.testing.assert_array_equal(np.asarray(db.state.tup_f)[far], far_tup)
+    np.testing.assert_array_equal(np.asarray(db.state.index.valid)[far],
+                                  far_idx)
+    # replicas of partition-time shards name only reachable edges
+    ent_i = np.asarray(db.state.index.ent_i)
+    valid = np.asarray(db.state.index.valid)
+    steps0 = 2
+    ent_step = np.asarray(db.state.index.ent_step)
+    for v, c in zip(*np.nonzero(valid)):
+        if ent_step[v, c] > steps0:                    # written mid-split
+            reps = {int(r) for r in ent_i[v, c, 2:5] if r >= 0}
+            assert reps <= {0, 1, 2, 3}, (v, c, reps)
+
+
+def test_partition_degrades_queries_and_heal_restores():
+    """Strand a shard's whole replica set on the far side (index entry
+    surviving on a reachable slice owner): its sid query reports the loss
+    through the EXISTING degraded accounting — count 0, bound 0, all
+    replicas lost — exactly like a crash would; heal restores it without
+    any repair work (the far-side data never died)."""
+    db = AerialDB.open(_cfg(records_per_shard=12), seed=0)
+    rng = np.random.default_rng(24)
+    r = 12
+    t = np.linspace(0.0, 1100.0, r, dtype=np.float32)
+    lat = np.linspace(12.90, 13.00, r, dtype=np.float32)   # wide: entries
+    lon = np.linspace(77.50, 77.62, r, dtype=np.float32)   # beyond replicas
+    payload = np.concatenate(
+        [t[:, None], lat[:, None], lon[:, None],
+         rng.normal(size=(r, 4)).astype(np.float32)], axis=1)[None]
+    from repro.core.placement import ShardMeta
+    meta = ShardMeta(
+        sid_hi=np.asarray([77], np.int32), sid_lo=np.asarray([9], np.int32),
+        lat0=lat.min(keepdims=True), lat1=lat.max(keepdims=True),
+        lon0=lon.min(keepdims=True), lon1=lon.max(keepdims=True),
+        t0=t.min(keepdims=True), t1=t.max(keepdims=True))
+    info = db.insert(payload, meta)
+    reps = sorted({int(x) for x in np.asarray(info["replicas"])[0]})
+    holders = set(np.nonzero(
+        np.asarray(info["index_writes_per_edge"]) > 0)[0].tolist())
+    assert holders - set(reps), (holders, reps)    # a reachable lookup edge
+    keep = [e for e in range(E) if e not in reps]
+    db.partition([keep, reps])                     # replicas unreachable
+    pred = make_pred(q=1, sid_hi=77, sid_lo=9, has_sid=True)
+    res, qi = db.query(pred, key=jax.random.key(1))
+    assert int(res.count[0]) == 0
+    assert float(np.asarray(qi.completeness_bound)[0]) == 0.0
+    assert int(np.asarray(qi.replicas_lost)[0]) == 3
+    db.heal()
+    assert db.last_repair["shards_replaced"] == 0  # data never died
+    res, qi = db.query(pred, key=jax.random.key(2))
+    assert int(res.count[0]) == r
+    assert float(np.asarray(qi.completeness_bound)[0]) == 1.0
+    assert int(np.asarray(qi.replicas_lost)[0]) == 0
+
+
+def test_partition_validation_and_ledger():
+    db = AerialDB.open(CFG, seed=0)
+    with pytest.raises(ValueError, match="separates nothing"):
+        db.partition([list(range(E))])
+    with pytest.raises(ValueError, match="no reachable"):
+        db.partition([[], [0, 1, 2, 3, 4, 5, 6, 7]])
+    with pytest.raises(ValueError, match="disjoint"):
+        db.partition([[0, 1], [1, 2]])
+    with pytest.raises(ValueError, match="out of range"):
+        db.partition([[0], [E]])
+    db.partition([0, 1, 2])              # flat list = coordinator group
+    np.testing.assert_array_equal(np.asarray(db.reachable),
+                                  [1, 1, 1, 0, 0, 0, 0, 0])
+    assert db.ledger()["partition"] == {"unreachable": [3, 4, 5, 6, 7],
+                                        "step": 0}
+    with pytest.raises(ValueError, match="already open"):
+        db.partition([[0], [1]])
+    db.heal(repair=False)
+    assert db.ledger()["partition"] is None
+    assert db.ledger()["closed_windows"] == [([3, 4, 5, 6, 7], 0, 0)]
+    assert bool(np.asarray(db.reachable).all())
+    before = db.ledger()
+    db.heal()                            # double heal: no-op, repair skipped
+    assert db.last_repair is None
+    assert db.ledger() == before
+
+
+def test_heal_without_ingest_is_bitwise_noop():
+    """Nothing ingested while split: the incremental repair after heal has
+    nothing to sweep and the state is bitwise unchanged."""
+    db = AerialDB.open(CFG, seed=0)
+    _ingest(db, DroneFleet(12, records_per_shard=8, seed=11), 2)
+    before = db.state
+    db.partition([[0, 1], [2, 3], [4, 5, 6, 7]])
+    db.heal()
+    assert db.last_repair["shards_swept"] == 0
+    _assert_states_identical(before, db.state)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: heal's incremental repair == full sweep, O(partition), and
+# cross-history convergence to the never-faulted reference
+# ---------------------------------------------------------------------------
+
+
+def test_heal_incremental_repair_matches_full_sweep():
+    """Both repair points — mid-partition (degraded mask) and post-heal —
+    must land bitwise on the full sweep's state from the same pre-state
+    under the same effective mask."""
+    db = AerialDB.open(CFG, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=13)
+    _ingest(db, fleet, 2)
+    db.partition([[0, 1, 2, 3, 4], [5, 6, 7]])
+    _ingest(db, fleet, 2)
+    # mid-partition repair: runs under the effective (degraded) mask
+    full_state, full_info = repair_state(CFG, db.state, db.effective_alive,
+                                         outage=None)
+    inc = db.repair()
+    assert inc["mode"] == "incremental"
+    assert inc["shards_swept"] <= full_info["shards_swept"]
+    _assert_states_identical(full_state, db.state, msg="mid-partition: ")
+    _ingest(db, fleet, 1)
+    db.heal(repair=False)
+    full_state, full_info = repair_state(CFG, db.state, db.effective_alive,
+                                         outage=None)
+    inc = db.repair()
+    assert inc["shards_swept"] <= full_info["shards_swept"]
+    _assert_states_identical(full_state, db.state, msg="post-heal: ")
+
+
+def test_heal_sweeps_partition_not_store():
+    """A brief split in a long-lived store: heal's sweep is O(shards
+    ingested during the partition), not O(everything tracked)."""
+    db = AerialDB.open(CFG, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=17)
+    _ingest(db, fleet, 8)                # long all-connected history
+    db.partition([[0, 1, 2, 3], [4, 5, 6, 7]])
+    _ingest(db, fleet, 1)                # one round mid-split
+    db.heal()
+    rep = db.last_repair
+    assert rep["shards_swept"] > 0
+    assert rep["shards_tracked"] >= 3 * rep["shards_swept"], rep
+    assert rep["entries_reclaimed"] > 0  # partition-time lookup rows retired
+
+
+def test_partition_heal_converges_to_never_faulted_content():
+    """After heal + repair the store holds bit-identical canonical content
+    to a never-partitioned twin fed the same stream — including with a
+    real edge death composed on the reachable side mid-split. (Large rings:
+    content equivalence presumes no retention eviction — a split
+    concentrates load on the reachable side, so small rings wrap earlier
+    there than in the reference, legitimately aging out different tuples.)"""
+    cfg = _cfg(tuple_capacity=2048)
+    db = AerialDB.open(cfg, seed=0)
+    ref = AerialDB.open(cfg, seed=0)
+    fleets = [DroneFleet(12, records_per_shard=8, seed=19) for _ in range(2)]
+    for d, f in ((db, fleets[0]), (ref, fleets[1])):
+        _ingest(d, f, 2)
+    db.partition([[0, 1, 2, 3], [4, 5, 6, 7]])
+    _ingest(db, fleets[0], 1)
+    _ingest(ref, fleets[1], 1)
+    db.fail_edges(1)                     # death composes with the split
+    _ingest(db, fleets[0], 1)
+    _ingest(ref, fleets[1], 1)
+    db.heal()                            # edge 1 still dead: repair degraded
+    assert db.ledger()["pending_sids"] > 0     # re-sweep debt recorded
+    db.recover_edges(1)                  # final repair: all effective
+    assert db.ledger()["pending_sids"] == 0
+    assert_content_equal(canonical_content(db), canonical_content(ref))
+    assert _total_count(db) == _total_count(ref)
+
+
+# ---------------------------------------------------------------------------
+# Differential: both mesh layouts run the same partition script bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(params=["edge4", "fleet2x2"])
+def mesh(request):
+    if jax.device_count() < N_DEV:
+        pytest.skip(f"needs {N_DEV} host devices")
+    if request.param == "edge4":
+        return make_edge_mesh(N_DEV)
+    return make_fleet_mesh(2, N_DEV // 2)
+
+
+def test_partition_differential_mesh(mesh):
+    """The scripted partition/heal sequence through the single-device and
+    sharded facades stays bitwise identical, repair telemetry included."""
+    db_ref = AerialDB.open(CFG, seed=0)
+    db_fed = AerialDB.open(CFG, mesh=mesh, seed=0)
+    fleets = [DroneFleet(12, records_per_shard=8, seed=23) for _ in range(2)]
+
+    def both(fn):
+        for db, fleet in zip((db_ref, db_fed), fleets):
+            fn(db, fleet)
+
+    both(lambda db, f: _ingest(db, f, 2))
+    both(lambda db, f: db.partition([[0, 1, 2, 5], [3, 4, 6, 7]]))
+    both(lambda db, f: _ingest(db, f, 2))
+    q = [db.query(CATCH_ALL, key=jax.random.key(3)) for db in
+         (db_ref, db_fed)]
+    assert int(q[0][0].count[0]) == int(q[1][0].count[0])
+    both(lambda db, f: db.heal())
+    assert db_ref.last_repair == db_fed.last_repair
+    _assert_states_identical(db_ref.state, db_fed.state, msg="post-heal: ")
+    assert _total_count(db_ref) == _total_count(db_fed)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: ledger edge cases — double-fail merges, double-recover no-ops
+# ---------------------------------------------------------------------------
+
+
+def test_double_fail_merges_into_original_epoch(mesh):
+    """Failing an already-dead edge keeps it under the epoch record its
+    ORIGINAL failure opened (the window must date from the first death) —
+    no duplicate record, and an all-dead call is a pure no-op."""
+    db = AerialDB.open(CFG, mesh=mesh, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=29)
+    db.fail_edges(2)
+    step0 = db.ledger()["open_outages"][0][1]
+    _ingest(db, fleet, 1)
+    db.fail_edges(2, 5)                  # 2 already dead: merge, 5 fresh
+    led = db.ledger()
+    assert led["open_outages"] == [([2], step0), ([5], 1)]
+    before = db.state
+    db.fail_edges(2, 5)                  # every id already dead: pure no-op
+    assert db.ledger() == led
+    _assert_states_identical(before, db.state)
+    db.recover_edges(2, 5)
+    assert db.ledger()["open_outages"] == []
+    assert_content_equal(
+        canonical_content(db),
+        canonical_content(db))           # self-consistent post-repair
+
+
+def test_recover_alive_edge_is_bitwise_noop(mesh):
+    """Recovering an alive edge closes nothing, repairs nothing, and must
+    not consume windows deferred by an earlier repair=False recovery."""
+    db = AerialDB.open(CFG, mesh=mesh, seed=0)
+    fleet = DroneFleet(12, records_per_shard=8, seed=31)
+    _ingest(db, fleet, 1)
+    db.fail_edges(3)
+    _ingest(db, fleet, 1)
+    db.recover_edges(3, repair=False)    # window deferred on the ledger
+    led = db.ledger()
+    assert led["closed_windows"] == [([3], 1, 2)]
+    before = db.state
+    db.recover_edges(0)                  # 0 is alive: bitwise no-op
+    assert db.last_repair is None        # implicit repair skipped
+    assert db.ledger() == led            # deferred window untouched
+    _assert_states_identical(before, db.state)
+    info = db.repair()                   # explicit repair still sees it
+    assert info["shards_swept"] > 0
+    assert db.ledger()["closed_windows"] == []
