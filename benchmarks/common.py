@@ -17,7 +17,6 @@ import numpy as np
 
 from repro.api import AerialDB
 from repro.core.datastore import StoreConfig, init_store, make_pred
-from repro.core.placement import ShardMeta
 from repro.data.synthetic import CityConfig, DroneFleet, make_sites, make_query_workload
 from repro.distributed.federation import ingest_rounds, shard_store
 

@@ -1,7 +1,6 @@
 """Fig 10/11: query scaling with concurrent clients (batched query sets:
 concurrency on TPU is batch width, not threads)."""
 import jax
-import numpy as np
 
 from benchmarks.common import (build_store, emit, open_session,
                                paper_workloads, timeit)

@@ -10,7 +10,6 @@ import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.kernels.st_scan import ref as st_ref
-from repro.kernels.st_scan import ops as st_ops
 from repro.core.datastore import make_pred
 
 

@@ -10,7 +10,7 @@ small single-device deployment.
 
 import numpy as np
 
-from repro.api import AGG_OPS, AerialDB, AggSpec, Query
+from repro.api import AGG_OPS, AerialDB, Query
 from repro.data.synthetic import DroneFleet
 
 

@@ -8,7 +8,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import AerialPipeline, PipelineConfig

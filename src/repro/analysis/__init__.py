@@ -1,0 +1,40 @@
+"""``repro.analysis`` — repo-invariant static analysis (aeriallint).
+
+Nine PRs of architecture contracts live in ROADMAP prose and scattered
+tests; this package turns the machine-checkable subset into three enforced
+layers, each with a ``--json`` CLI and a CI gate:
+
+  1. **AST lint** (``rules`` + ``lint``): repo-specific rules over ``src/``,
+     ``benchmarks/``, ``examples/`` — layering (R1), deprecated-shim call
+     sites (R2), determinism / seeded-randomness (R3, the PR-9 bitwise-replay
+     contract), host-sync hygiene inside jitted bodies (R4, the PR-8 lazy
+     drop-watch rule generalized), traced-value Python branching (R5), and
+     dead imports (R6). Run ``python -m repro.analysis.lint --json``.
+  2. **jit-retrace budget** (``retrace``): the canonical facade workload
+     (insert / ingest_rounds / query per AggSpec / fail / recover / repair,
+     on the ``(4,)`` and ``(2, 2)`` meshes) under a compilation-counting
+     harness; every jitted entry point must compile exactly its budgeted
+     count and re-running the workload must compile nothing — catching
+     weak-hash config dataclasses and shape-unstable call sites that
+     silently 10x latency. Run ``python -m repro.analysis.retrace --json``.
+  3. **HLO collective contract** (``hlo_contract``): lowers the federated
+     insert / ingest / query paths on both mesh shapes and statically
+     asserts the compiled HLO contains only the contracted collectives,
+     that cross-device collective byte counts are independent of
+     ``tuple_capacity``, and that ``ingest_rounds``' donated state produces
+     real input/output aliases (no defensive copies). Run
+     ``python -m repro.analysis.hlo_contract --json``.
+
+Rules, allowlists, and budgets are data, not code: they live in
+``pyproject.toml`` under ``[tool.aeriallint]`` (see ``config``). Every
+allowlist entry and every ``# aeriallint: disable=Rn`` escape hatch must
+carry a reason string — reasonless suppressions are themselves findings.
+
+Layering: this package sits OUTSIDE the runtime stack (it imports the
+runtime only to lower/trace it); nothing under ``repro`` may import it.
+"""
+
+from repro.analysis.config import AeriallintConfig, load_config
+from repro.analysis.rules import Finding, lint_source
+
+__all__ = ["AeriallintConfig", "Finding", "lint_source", "load_config"]

@@ -1,0 +1,126 @@
+"""aeriallint configuration: the ``[tool.aeriallint]`` table of pyproject.toml.
+
+Rules are data, not code — scan roots, allowlists, retrace budgets, and the
+HLO collective contract all live in the repo's pyproject so a contract
+change is a reviewable one-line diff, not a linter patch. Schema:
+
+    [tool.aeriallint]
+    roots = ["src", "benchmarks", "examples"]
+    hot_functions = ["src/repro/core/datastore.py::insert_local", ...]
+
+    [[tool.aeriallint.allow]]
+    rule = "R3"                       # rule id the entry silences
+    path = "src/repro/launch/dryrun.py"   # fnmatch glob, repo-relative
+    match = "time.time"               # optional substring of the finding
+    reason = "why this is intentional"    # REQUIRED — reasonless = finding
+
+    [tool.aeriallint.retrace]
+    mesh_shapes = [[4], [2, 2]]
+    [tool.aeriallint.retrace.budgets.federated]
+    step = 1        # jaxpr name -> exact cold-compile count per mesh
+    [tool.aeriallint.retrace.budgets.single_device]
+    _insert_step_jit = 1
+
+    [tool.aeriallint.hlo]
+    query_collectives = ["all-gather", "all-reduce"]
+    insert_collectives = ["all-gather"]
+    min_donated_aliases = 16
+
+Parsing uses stdlib ``tomllib`` (3.11+) with a ``tomli`` fallback for 3.10
+(already a transitive dependency of the packaging stack — no new install).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+try:
+    import tomllib as _toml  # Python 3.11+
+except ImportError:  # pragma: no cover - py3.10 path
+    import tomli as _toml
+
+
+@dataclasses.dataclass(frozen=True)
+class AllowEntry:
+    """One allowlist row: silences ``rule`` findings in files matching the
+    ``path`` glob (optionally narrowed by a ``match`` substring over the
+    finding message / source line). ``reason`` is mandatory policy."""
+    rule: str
+    path: str
+    reason: str = ""
+    match: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class AeriallintConfig:
+    roots: Tuple[str, ...] = ("src", "benchmarks", "examples")
+    hot_functions: Tuple[str, ...] = ()
+    allow: Tuple[AllowEntry, ...] = ()
+    # Layer 2: canonical-workload compile budgets, keyed by jaxpr name.
+    retrace_mesh_shapes: Tuple[Tuple[int, ...], ...] = ((4,), (2, 2))
+    retrace_budget_federated: Tuple[Tuple[str, int], ...] = ()
+    retrace_budget_single: Tuple[Tuple[str, int], ...] = ()
+    # Layer 3: the ROADMAP collective contract.
+    query_collectives: Tuple[str, ...] = ("all-gather", "all-reduce")
+    insert_collectives: Tuple[str, ...] = ("all-gather",)
+    min_donated_aliases: int = 1
+
+    def budgets(self, federated: bool) -> dict:
+        return dict(self.retrace_budget_federated if federated
+                    else self.retrace_budget_single)
+
+
+def find_repo_root(start: Optional[str] = None) -> str:
+    """Walk up from ``start`` (default: this file) to the directory holding
+    pyproject.toml. The linter is repo-relative everywhere."""
+    d = os.path.abspath(start or os.path.dirname(__file__))
+    while True:
+        if os.path.exists(os.path.join(d, "pyproject.toml")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            raise FileNotFoundError(
+                "no pyproject.toml above "
+                f"{start or os.path.dirname(__file__)}: aeriallint needs the "
+                "repo root for its [tool.aeriallint] config.")
+        d = parent
+
+
+def load_config(repo_root: Optional[str] = None) -> AeriallintConfig:
+    """Read ``[tool.aeriallint]`` from the repo's pyproject.toml. Missing
+    table (or keys) falls back to defaults, so the linter degrades to its
+    built-in policy outside this repo."""
+    root = repo_root or find_repo_root()
+    with open(os.path.join(root, "pyproject.toml"), "rb") as fh:
+        data = _toml.load(fh)
+    tbl = data.get("tool", {}).get("aeriallint", {})
+    allow = tuple(
+        AllowEntry(rule=str(e.get("rule", "")), path=str(e.get("path", "")),
+                   reason=str(e.get("reason", "")),
+                   match=str(e.get("match", "")))
+        for e in tbl.get("allow", ()))
+    retr = tbl.get("retrace", {})
+    budgets = retr.get("budgets", {})
+    hlo = tbl.get("hlo", {})
+    dflt = AeriallintConfig()
+    return AeriallintConfig(
+        roots=tuple(tbl.get("roots", dflt.roots)),
+        hot_functions=tuple(tbl.get("hot_functions", ())),
+        allow=allow,
+        retrace_mesh_shapes=tuple(
+            tuple(int(x) for x in shape)
+            for shape in retr.get("mesh_shapes", [[4], [2, 2]])),
+        retrace_budget_federated=tuple(
+            (str(k), int(v)) for k, v in budgets.get("federated", {}).items()),
+        retrace_budget_single=tuple(
+            (str(k), int(v))
+            for k, v in budgets.get("single_device", {}).items()),
+        query_collectives=tuple(
+            hlo.get("query_collectives", dflt.query_collectives)),
+        insert_collectives=tuple(
+            hlo.get("insert_collectives", dflt.insert_collectives)),
+        min_donated_aliases=int(
+            hlo.get("min_donated_aliases", dflt.min_donated_aliases)),
+    )

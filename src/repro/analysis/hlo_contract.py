@@ -1,0 +1,246 @@
+"""aeriallint layer 3: the HLO collective-contract verifier.
+
+The ROADMAP communication contract (PR 2, generalized cross-host in PR 6)
+says cross-device traffic on the datastore mesh is exactly three things: the
+O(E) watermark all-gather on insert, the metadata-scale hierarchical
+candidate-merge all-gathers, and the final (Q[, K], E) combine all-reduces
+on query — and none of it scales with ``tuple_capacity`` (the per-edge log
+stays device-local; only watermarks, candidate sets, and aggregates move).
+The differential tests prove the *values* right; nothing so far proved the
+*traffic* right — an accidental resharding that all-gathers the tuple ring
+would be bitwise invisible and catastrophically slow at paper scale.
+
+This verifier lowers the federated insert / fused-ingest / query entry
+points (the same ``distributed.federation`` factories the facade
+dispatches through) on every configured mesh shape and statically checks
+the compiled, post-SPMD HLO:
+
+  * **kinds** — each module executes only its contracted collective kinds
+    (``[tool.aeriallint.hlo] insert_collectives / query_collectives``);
+    ingest of N rounds runs exactly N watermark all-gathers.
+  * **capacity independence** — the execution-weighted multiset of
+    (collective kind, result type) is IDENTICAL when lowered at two
+    different ``tuple_capacity`` values: growing the log must not change a
+    single cross-device tensor.
+  * **donation** — ``ingest_rounds`` donates the 16-leaf StoreState; the
+    compiled module must declare at least ``min_donated_aliases``
+    input/output aliases, the static witness that sustained ingest updates
+    rings in place instead of double-allocating.
+
+CLI (also a tier-1 test — ``tests/test_analysis.py``):
+
+    python -m repro.analysis.hlo_contract            # exit 1 on violation
+    python -m repro.analysis.hlo_contract --json -o ANALYSIS_hlo.json
+"""
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4"
+                               ).strip()
+
+import argparse
+import json
+import sys
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.config import AeriallintConfig, load_config
+from repro.analysis.retrace import canonical_config, mesh_for
+from repro.api import ShardMeta
+from repro.core.datastore import init_store, make_pred
+from repro.data.synthetic import DroneFleet
+from repro.distributed import federation as fed
+from repro.distributed.sharding import shard_store
+from repro.launch.hlo_analysis import collective_shapes, io_alias_pairs
+
+_N_ROUNDS = 2          # fused-ingest rounds to lower
+_CAPACITIES = (384, 1024)   # tuple_capacity pair for the independence check
+
+
+def _inputs(cfg, mesh):
+    """Concrete lowering inputs for one (cfg, mesh): sharded init state, one
+    insert round, N stacked ingest rounds, a 4-window predicate, a key."""
+    fleet = DroneFleet(6, records_per_shard=cfg.records_per_shard,
+                       n_values=cfg.n_values, seed=7)
+    payload, meta = fleet.next_shards()
+    payloads, metas = fleet.next_rounds(_N_ROUNDS)
+    state = shard_store(init_store(cfg), mesh)
+    alive = jnp.ones(cfg.n_edges, bool)
+    pred = make_pred(q=4, lat0=12.0, lat1=14.0, lon0=77.0, lon1=79.0,
+                     t0=0.0, t1=1e5, has_spatial=True, has_temporal=True)
+    return dict(
+        state=state, alive=alive, pred=pred,
+        payload=jnp.asarray(payload),
+        meta=ShardMeta(*[jnp.asarray(f) for f in meta]),
+        payloads=jnp.asarray(payloads),
+        metas=ShardMeta(*[jnp.asarray(f) for f in metas]),
+        key_data=jax.random.key_data(jax.random.key(0)))
+
+
+def lower_entry_points(cfg, mesh) -> dict:
+    """Compiled per-device HLO text for the three federated entry points,
+    via the exact ``federation`` factories the facade dispatches through."""
+    a = _inputs(cfg, mesh)
+    insert = fed._insert_fn(cfg, mesh).lower(
+        a["state"], a["payload"], a["meta"], a["alive"])
+    ingest = fed._ingest_fn(cfg, mesh).lower(
+        a["state"], a["payloads"], a["metas"], a["alive"])
+    query = fed._query_fn(cfg, mesh, False, None, (0,)).lower(
+        a["state"], a["pred"], a["alive"], a["key_data"])
+    return {name: lowered.compile().as_text()
+            for name, lowered in
+            [("insert", insert), ("ingest", ingest), ("query", query)]}
+
+
+def check_collective_contract(hlo: str, allowed, label: str,
+                              exact_counts: Optional[dict] = None) -> list:
+    """Violations if ``hlo`` executes a collective kind outside ``allowed``
+    (or, with ``exact_counts``, the wrong number of a kind). Takes raw HLO
+    text so tests can inject a contraband collective."""
+    shapes = collective_shapes(hlo)
+    out = []
+    by_kind = {}
+    for (kind, shape), n in shapes.items():
+        by_kind[kind] = by_kind.get(kind, 0) + n
+        if kind not in allowed:
+            out.append({
+                "check": "kinds", "label": label, "kind": kind,
+                "message": (f"[{label}] contraband collective: {n}x "
+                            f"'{kind}' of {shape} — contract allows only "
+                            f"{sorted(allowed)} (ROADMAP communication "
+                            "contract)."),
+            })
+    for kind, want in (exact_counts or {}).items():
+        got = by_kind.get(kind, 0)
+        if got != want:
+            out.append({
+                "check": "counts", "label": label, "kind": kind,
+                "message": (f"[{label}] expected exactly {want}x '{kind}', "
+                            f"compiled module executes {got}x."),
+            })
+    return out
+
+
+def check_capacity_independence(shapes_a: dict, shapes_b: dict,
+                                label: str, capacities) -> list:
+    """Violation if the two capacity lowerings move different cross-device
+    tensor multisets."""
+    if shapes_a == shapes_b:
+        return []
+    def fmt(d):
+        return {f"{k}:{s}": n for (k, s), n in sorted(d.items())}
+    return [{
+        "check": "capacity", "label": label,
+        "message": (f"[{label}] collective traffic depends on "
+                    f"tuple_capacity: {capacities[0]} -> {fmt(shapes_a)} vs "
+                    f"{capacities[1]} -> {fmt(shapes_b)} — the log must stay "
+                    "device-local (tuple-volume-independent queries)."),
+    }]
+
+
+def check_donation(hlo: str, min_aliases: int, label: str) -> list:
+    got = io_alias_pairs(hlo)
+    if got >= min_aliases:
+        return []
+    return [{
+        "check": "donation", "label": label, "aliases": got,
+        "message": (f"[{label}] donated StoreState produced only {got} "
+                    f"input/output aliases (contract: >= {min_aliases}) — "
+                    "XLA is making defensive copies; sustained ingest "
+                    "double-allocates the ring."),
+    }]
+
+
+def run_hlo_contract(repo_root: Optional[str] = None,
+                     cfg: Optional[AeriallintConfig] = None) -> dict:
+    """Verify the contract on every configured mesh shape; returns the
+    machine-readable report."""
+    cfg = cfg or load_config(repo_root)
+    runs = []
+    violations = []
+    if jax.device_count() < 4:  # pragma: no cover - CI forces 4 devices
+        return {"tool": "aeriallint.hlo_contract", "runs": [],
+                "violations": [{"check": "devices", "message":
+                                f"device_count={jax.device_count()} < 4"}],
+                "ok": False}
+    for shape in cfg.retrace_mesh_shapes:
+        label = "mesh" + str(tuple(int(x) for x in shape))
+        per_cap = {}
+        for capacity in _CAPACITIES:
+            store_cfg = canonical_config(tuple_capacity=capacity)
+            mesh = mesh_for(shape, store_cfg.n_edges)
+            per_cap[capacity] = lower_entry_points(store_cfg, mesh)
+        base = per_cap[_CAPACITIES[0]]
+
+        v = []
+        v += check_collective_contract(
+            base["insert"], set(cfg.insert_collectives), f"{label}/insert",
+            exact_counts={"all-gather": 1})
+        v += check_collective_contract(
+            base["ingest"], set(cfg.insert_collectives), f"{label}/ingest",
+            exact_counts={"all-gather": _N_ROUNDS})
+        v += check_collective_contract(
+            base["query"], set(cfg.query_collectives), f"{label}/query")
+        for name in ("insert", "ingest", "query"):
+            v += check_capacity_independence(
+                collective_shapes(per_cap[_CAPACITIES[0]][name]),
+                collective_shapes(per_cap[_CAPACITIES[1]][name]),
+                f"{label}/{name}", _CAPACITIES)
+        v += check_donation(base["ingest"], cfg.min_donated_aliases,
+                            f"{label}/ingest")
+
+        violations += v
+        runs.append({
+            "mesh": label, "capacities": list(_CAPACITIES),
+            "collectives": {
+                name: {f"{k}:{s}": n
+                       for (k, s), n in
+                       sorted(collective_shapes(base[name]).items())}
+                for name in ("insert", "ingest", "query")},
+            "ingest_io_aliases": io_alias_pairs(base["ingest"]),
+            "violations": len(v),
+        })
+    return {
+        "tool": "aeriallint.hlo_contract",
+        "contract": {"insert": sorted(cfg.insert_collectives),
+                     "query": sorted(cfg.query_collectives),
+                     "min_donated_aliases": cfg.min_donated_aliases},
+        "runs": runs,
+        "violations": violations,
+        "ok": not violations,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.hlo_contract",
+        description="aeriallint layer 3: HLO collective-contract verifier.")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable report")
+    ap.add_argument("-o", "--output", default=None,
+                    help="also write the JSON report to this file")
+    ap.add_argument("--root", default=None, help="repo root override")
+    args = ap.parse_args(argv)
+
+    report = run_hlo_contract(args.root)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+    if args.json:
+        json.dump(report, sys.stdout, indent=2)
+        print()
+    else:
+        for v in report["violations"]:
+            print(v["message"])
+        print(f"aeriallint.hlo_contract: {len(report['runs'])} mesh(es), "
+              f"{len(report['violations'])} violation(s).")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,138 @@
+"""aeriallint driver: walk the configured roots, apply the rule engine,
+emit findings.
+
+    python -m repro.analysis.lint            # human-readable, exit 1 on open
+    python -m repro.analysis.lint --json     # machine-readable findings
+    python -m repro.analysis.lint --json -o AERIALLINT.json
+
+Exit status is 0 iff every finding is suppressed by a *reasoned* pragma or
+allowlist entry — CI gates on it. The JSON payload carries every finding
+(open, disabled, allowlisted) plus config-policy errors (reasonless
+allowlist entries), so the suppression surface itself stays reviewable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis.config import (AeriallintConfig, find_repo_root,
+                                   load_config)
+from repro.analysis.rules import Finding, lint_source
+
+_SKIP_DIRS = {"__pycache__", ".git", ".jax_cache", ".ruff_cache", "node_modules"}
+
+
+def iter_py_files(repo_root: str, roots) -> List[str]:
+    out = []
+    for r in roots:
+        base = os.path.join(repo_root, r)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(d for d in dirnames if d not in _SKIP_DIRS)
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def _relpath(path: str, repo_root: str) -> str:
+    return os.path.relpath(os.path.abspath(path), repo_root).replace(
+        os.sep, "/")
+
+
+def lint_files(paths, repo_root: str,
+               cfg: Optional[AeriallintConfig] = None) -> List[Finding]:
+    """Lint explicit files (absolute or repo-relative); returns every
+    finding, suppressed ones included."""
+    cfg = cfg or load_config(repo_root)
+    findings: List[Finding] = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(repo_root, p)
+        rel = _relpath(full, repo_root)
+        with open(full, encoding="utf-8") as fh:
+            findings.extend(lint_source(fh.read(), rel, cfg))
+    return findings
+
+
+def config_policy_findings(cfg: AeriallintConfig) -> List[Finding]:
+    """R0 findings for allowlist entries that are missing their reason (the
+    rule engine skips reasonless entries; here they become hard errors)."""
+    out = []
+    for i, e in enumerate(cfg.allow):
+        if not e.reason.strip():
+            out.append(Finding(
+                "R0", "pyproject.toml", 0,
+                f"[tool.aeriallint] allow entry #{i + 1} (rule={e.rule!r}, "
+                f"path={e.path!r}) has no reason — every suppression must "
+                "say why it is intentional."))
+        if not e.rule or not e.path:
+            out.append(Finding(
+                "R0", "pyproject.toml", 0,
+                f"[tool.aeriallint] allow entry #{i + 1} needs both rule= "
+                "and path=."))
+    return out
+
+
+def run_lint(repo_root: Optional[str] = None,
+             paths=None) -> dict:
+    """Full repo lint -> machine-readable report dict."""
+    repo_root = repo_root or find_repo_root()
+    cfg = load_config(repo_root)
+    files = ([os.path.join(repo_root, p) if not os.path.isabs(p) else p
+              for p in paths] if paths
+             else iter_py_files(repo_root, cfg.roots))
+    findings = config_policy_findings(cfg)
+    findings += lint_files(files, repo_root, cfg)
+    open_f = [f for f in findings if f.status == "open"]
+    return {
+        "tool": "aeriallint",
+        "roots": list(cfg.roots),
+        "files_scanned": len(files),
+        "findings": [f.to_json() for f in findings],
+        "open": len(open_f),
+        "disabled": sum(f.status == "disabled" for f in findings),
+        "allowlisted": sum(f.status == "allowlisted" for f in findings),
+        "ok": not open_f,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="aeriallint: AerialDB repo-invariant static analysis.")
+    ap.add_argument("paths", nargs="*",
+                    help="specific files to lint (default: configured roots)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable findings report")
+    ap.add_argument("-o", "--output", default=None,
+                    help="also write the JSON report to this file")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detected via "
+                         "pyproject.toml)")
+    args = ap.parse_args(argv)
+
+    report = run_lint(args.root, args.paths or None)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+    if args.json:
+        json.dump(report, sys.stdout, indent=2)
+        print()
+    else:
+        for f in report["findings"]:
+            if f["status"] == "open":
+                print(f"{f['path']}:{f['line']}: {f['rule']}: {f['message']}")
+        print(f"aeriallint: {report['files_scanned']} files, "
+              f"{report['open']} open finding(s), "
+              f"{report['disabled']} pragma-disabled, "
+              f"{report['allowlisted']} allowlisted.")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

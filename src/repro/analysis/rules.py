@@ -1,0 +1,453 @@
+"""aeriallint rule engine: repo-specific AST rules over one source file.
+
+Rule catalog (ids are stable — they key allowlists and disable pragmas):
+
+  R0  meta: a ``# aeriallint: disable=`` pragma or a ``[tool.aeriallint]``
+      allowlist entry without a reason string (suppressions are themselves
+      policy and must be justified).
+  R1  layering: ``repro.core`` / ``repro.distributed`` / ``repro.kernels``
+      never import ``repro.api`` / ``repro.ingest`` / ``repro.chaos`` (the
+      facade sits strictly ABOVE the runtime — PR 3 contract), and
+      ``repro.ingest`` touches only the facade (``repro.api``) plus itself —
+      never the runtime internals (PR 8 contract).
+  R2  deprecation: no ``insert_step`` / ``query_step`` call sites or imports
+      outside their defining module (PR 3: new code goes through
+      ``repro.api``; the shims exist only for pinned-return-value tests).
+  R3  determinism: no wall-clock reads (``time.time``/``monotonic``/
+      ``perf_counter``/``sleep``, ``datetime.now``...) in ``src/repro`` and
+      no unseeded randomness (global-state ``np.random.*``, bare stdlib
+      ``random.*``) anywhere scanned — the PR-9 bitwise-replay contract:
+      same seeds + same workload must reproduce stores bit-for-bit.
+      Seeded constructs (``np.random.default_rng`` / ``Generator`` /
+      ``SeedSequence`` / ``PCG64`` / ``Philox``) are always fine.
+  R4  host-sync hygiene: no ``.item()``, ``float(<traced>)``,
+      ``np.asarray`` / ``np.array``, or ``jax.device_get`` inside jitted /
+      shard_map / pallas bodies or the configured hot-path functions — each
+      is a device sync that serializes the async dispatch pipeline (the
+      PR-8 lazy drop-watch rule, generalized).
+  R5  traced branching: no Python ``if`` / ``while`` whose test calls into
+      ``jnp`` / ``jax.numpy`` / ``jax.lax`` inside a traced body — a traced
+      value in a Python branch either raises under jit or silently bakes in
+      one trace-time path.
+  R6  dead imports: a module-level import never referenced in the module
+      (skipped for ``__init__.py`` re-export surfaces and names in
+      ``__all__``).
+
+Escape hatch: ``# aeriallint: disable=R3 -- <reason>`` on the finding line
+or the line directly above. The reason is mandatory (R0 otherwise).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from fnmatch import fnmatch
+from typing import List, Optional, Tuple
+
+from repro.analysis.config import AeriallintConfig
+
+RULE_IDS = ("R0", "R1", "R2", "R3", "R4", "R5", "R6")
+
+# R1: the runtime layers that must never see the layers above them.
+_RUNTIME_LAYERS = ("src/repro/core/", "src/repro/distributed/",
+                   "src/repro/kernels/")
+_UPPER_LAYERS = ("repro.api", "repro.ingest", "repro.chaos")
+_INGEST_OK = ("repro.api", "repro.ingest")
+
+# R2: the deprecated PR-3 shims and their one legitimate home.
+_DEPRECATED = ("insert_step", "query_step")
+_DEPRECATED_HOME = "src/repro/core/datastore.py"
+
+# R3: wall-clock reads (src/repro only — benchmarks legitimately time).
+_CLOCK_CALLS = {("time", "time"), ("time", "time_ns"), ("time", "monotonic"),
+                ("time", "perf_counter"), ("time", "sleep"),
+                ("datetime", "now"), ("datetime", "utcnow"),
+                ("datetime", "today")}
+# R3: np.random attributes that are seeded constructs, not global-state RNG.
+_SEEDED_OK = {"default_rng", "Generator", "SeedSequence", "PCG64", "PCG64DXSM",
+              "Philox", "MT19937", "SFC64", "BitGenerator", "RandomState"}
+
+# R4/R5: callables whose function-reference arguments become traced bodies.
+_TRACING_CALLS = {"jit", "shard_map", "pallas_call", "scan", "while_loop",
+                  "fori_loop", "cond", "switch", "checkpoint", "remat",
+                  "custom_vjp", "custom_jvp", "vmap", "grad", "value_and_grad"}
+
+_PRAGMA_RE = re.compile(
+    r"#\s*aeriallint:\s*disable=([A-Za-z0-9,\s]+?)\s*(?:--\s*(.*))?$")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str          # repo-relative, forward slashes
+    line: int
+    message: str
+    snippet: str = ""
+    status: str = "open"   # open | disabled (pragma) | allowlisted (config)
+    reason: str = ""       # the pragma / allowlist justification
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        tag = "" if self.status == "open" else f" [{self.status}]"
+        return f"{self.path}:{self.line}: {self.rule}{tag}: {self.message}"
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'np.random.rand' for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _ModuleScan(ast.NodeVisitor):
+    """One pass collecting everything the rules need: imports (+aliases),
+    every name use, and the set of function defs that are traced (jit /
+    shard_map / pallas bodies, their nested defs, and configured hot
+    functions)."""
+
+    def __init__(self):
+        self.imports: List[Tuple[ast.AST, str, str]] = []  # (node, module, asname)
+        self.import_binds: dict = {}       # local name -> canonical dotted
+        self.used_names: set = set()
+        self.func_defs: dict = {}          # name -> [def nodes]
+        self.traced_args: set = set()      # func names passed to tracing calls
+        self.decorated_traced: set = set() # func names with jit-ish decorators
+        self.all_exports: set = set()
+        self._func_stack: List[ast.AST] = []
+
+    # -- imports ------------------------------------------------------------
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            local = a.asname or a.name.split(".")[0]
+            self.imports.append((node, a.name, a.asname or a.name))
+            self.import_binds[local] = a.name if a.asname else \
+                a.name.split(".")[0]
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = node.module or ""
+        for a in node.names:
+            local = a.asname or a.name
+            self.imports.append((node, f"{mod}.{a.name}" if mod else a.name,
+                                 local))
+            self.import_binds[local] = f"{mod}.{a.name}" if mod else a.name
+        self.generic_visit(node)
+
+    # -- usage --------------------------------------------------------------
+
+    def visit_Name(self, node: ast.Name):
+        if isinstance(node.ctx, ast.Load):
+            self.used_names.add(node.id)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign):
+        # __all__ = [...] marks re-export surfaces for R6.
+        for t in node.targets:
+            if isinstance(t, ast.Name) and t.id == "__all__":
+                for el in ast.walk(node.value):
+                    if isinstance(el, ast.Constant) and isinstance(
+                            el.value, str):
+                        self.all_exports.add(el.value)
+        self.generic_visit(node)
+
+    # -- traced-body discovery ----------------------------------------------
+
+    def _is_tracing_callable(self, func: ast.AST) -> bool:
+        d = _dotted(func)
+        if d is None:
+            return False
+        leaf = d.split(".")[-1]
+        return leaf in _TRACING_CALLS
+
+    def visit_Call(self, node: ast.Call):
+        if self._is_tracing_callable(node.func):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    self.traced_args.add(arg.id)
+                elif isinstance(arg, (ast.Lambda,)):
+                    arg._aeriallint_traced = True  # noqa: SLF001 (own marker)
+        # functools.partial(jax.jit, ...) decorators route through here too.
+        self.generic_visit(node)
+
+    def _handle_func(self, node):
+        self.func_defs.setdefault(node.name, []).append(node)
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if self._is_tracing_callable(target):
+                self.decorated_traced.add(node.name)
+            elif isinstance(dec, ast.Call) and _dotted(dec.func) in (
+                    "partial", "functools.partial") and dec.args:
+                if self._is_tracing_callable(dec.args[0]):
+                    self.decorated_traced.add(node.name)
+        self._func_stack.append(node)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    def visit_FunctionDef(self, node):
+        self._handle_func(node)
+
+    def visit_AsyncFunctionDef(self, node):
+        self._handle_func(node)
+
+
+def _collect_pragmas(source: str):
+    """line number -> (set of rule ids, reason, pragma line no)."""
+    out = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out[i] = (rules, (m.group(2) or "").strip())
+    return out
+
+
+def _traced_functions(scan: _ModuleScan, path: str,
+                      cfg: AeriallintConfig) -> List[ast.AST]:
+    """Every function whose body jit traces: decorated, passed to a tracing
+    callable, named in ``hot_functions`` config, or nested inside one of
+    those."""
+    hot = set()
+    for spec in cfg.hot_functions:
+        if "::" in spec:
+            glob, fname = spec.rsplit("::", 1)
+            if fnmatch(path, glob):
+                hot.add(fname)
+    roots = []
+    for name, defs in scan.func_defs.items():
+        if name in scan.traced_args or name in scan.decorated_traced \
+                or name in hot:
+            roots.extend(defs)
+    # Nested defs inside a traced function trace with it.
+    seen = set()
+    out = []
+    stack = list(roots)
+    while stack:
+        fn = stack.pop()
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        out.append(fn)
+        for sub in ast.walk(fn):
+            if sub is not fn and isinstance(
+                    sub, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                if id(sub) not in seen:
+                    stack.append(sub)
+    return out
+
+
+def _r1_layering(tree, scan, path, add):
+    in_runtime = any(path.startswith(p) for p in _RUNTIME_LAYERS)
+    in_ingest = path.startswith("src/repro/ingest/")
+    if not (in_runtime or in_ingest):
+        return
+    for node, module, _local in scan.imports:
+        if not module.startswith("repro"):
+            continue
+        if in_runtime and any(module == up or module.startswith(up + ".")
+                              for up in _UPPER_LAYERS):
+            add("R1", node.lineno,
+                f"layering violation: {path} (runtime layer) imports "
+                f"'{module}' — core/distributed/kernels must never see the "
+                "facade, ingest, or chaos layers above them (PR 3/8/9 "
+                "contracts).")
+        if in_ingest and not any(
+                module == ok or module.startswith(ok + ".")
+                for ok in _INGEST_OK):
+            add("R1", node.lineno,
+                f"layering violation: repro.ingest imports '{module}' — the "
+                "ingest pipeline is strictly host-side OVER the facade "
+                "(repro.api) and must not reach runtime internals, or the "
+                "federation differential harness no longer covers its "
+                "flush paths (PR 8 contract).")
+
+
+def _r2_deprecation(tree, scan, path, add):
+    if path == _DEPRECATED_HOME:
+        return
+    for node, module, local in scan.imports:
+        leaf = module.split(".")[-1]
+        if leaf in _DEPRECATED:
+            add("R2", node.lineno,
+                f"deprecated shim import: '{leaf}' — the PR-2-pinned "
+                "1-device shims exist only for shim-equivalence tests; go "
+                "through repro.api.AerialDB (insert/ingest_rounds/query).")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = None
+            if isinstance(node.func, ast.Name):
+                name = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                name = node.func.attr
+            if name in _DEPRECATED:
+                add("R2", node.lineno,
+                    f"deprecated shim call: '{name}(...)' — use the "
+                    "AerialDB facade (PR 3: insert_step/query_step are "
+                    "warned 1-device shims, not API).")
+
+
+def _r3_determinism(tree, scan, path, add):
+    check_clock = path.startswith("src/repro/")
+    # Bare stdlib `random` only counts when this module imported it (jax and
+    # numpy both expose a `random` attribute that is fine).
+    stdlib_random = scan.import_binds.get("random") == "random"
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = _dotted(node.func)
+        if d is None:
+            continue
+        parts = tuple(d.split("."))
+        if check_clock and len(parts) >= 2 and parts[-2:] in _CLOCK_CALLS \
+                and parts[0] in ("time", "datetime"):
+            add("R3", node.lineno,
+                f"wall-clock read '{d}()' in src/repro — the PR-9 "
+                "bitwise-replay contract forbids nondeterministic inputs "
+                "outside injected points (pass clocks/sleeps in, or "
+                "allowlist telemetry-only uses with a reason).")
+        if len(parts) >= 3 and parts[0] in ("np", "numpy") \
+                and parts[1] == "random" and parts[2] not in _SEEDED_OK:
+            add("R3", node.lineno,
+                f"unseeded global-state RNG '{d}()' — use "
+                "np.random.default_rng(seed) (or a passed-in Generator) so "
+                "replay is pure in its seeds.")
+        if stdlib_random and len(parts) == 2 and parts[0] == "random":
+            add("R3", node.lineno,
+                f"bare stdlib RNG '{d}()' draws from hidden global state — "
+                "use np.random.default_rng(seed) / jax.random keys.")
+
+
+def _r4_r5_traced(tree, scan, path, cfg, add):
+    np_aliases = {local for local, mod in scan.import_binds.items()
+                  if mod in ("numpy", "np")}
+    np_aliases.add("np")
+    traced_roots = ("jnp", "jax.numpy", "jax.lax")
+    for fn in _traced_functions(scan, path, cfg):
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        fname = getattr(fn, "name", "<lambda>")
+        for node in [n for b in body for n in ast.walk(b)]:
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" and not node.args:
+                    add("R4", node.lineno,
+                        f"'.item()' inside traced body '{fname}' — a "
+                        "device->host sync on the hot path (PR 8 rule: "
+                        "read telemetry lazily, outside the dispatch "
+                        "pipeline).")
+                elif d is not None and d.split(".")[0] in np_aliases \
+                        and d.split(".")[-1] in ("asarray", "array"):
+                    add("R4", node.lineno,
+                        f"'{d}(...)' inside traced body '{fname}' — numpy "
+                        "materialization forces a host sync under jit; use "
+                        "jnp, or hoist to the host-side wrapper.")
+                elif d in ("jax.device_get",):
+                    add("R4", node.lineno,
+                        f"'jax.device_get' inside traced body '{fname}' — "
+                        "device->host transfer cannot be traced.")
+                elif isinstance(node.func, ast.Name) \
+                        and node.func.id == "float" and node.args \
+                        and not isinstance(node.args[0], ast.Constant):
+                    add("R4", node.lineno,
+                        f"'float(...)' on a (potentially traced) value "
+                        f"inside '{fname}' — concretizes the tracer; use "
+                        "jnp.float32(...) / .astype instead.")
+            if isinstance(node, (ast.If, ast.While)):
+                for sub in ast.walk(node.test):
+                    if isinstance(sub, ast.Call):
+                        d = _dotted(sub.func)
+                        if d and any(d.startswith(r + ".")
+                                     for r in traced_roots):
+                            add("R5", node.lineno,
+                                f"Python branch on a traced expression "
+                                f"('{d}' in the test) inside '{fname}' — "
+                                "under jit this either raises a tracer "
+                                "error or silently freezes one trace-time "
+                                "path; use jnp.where / lax.cond.")
+                            break
+
+
+def _r6_dead_imports(tree, scan, path, add):
+    if path.endswith("__init__.py"):
+        return  # re-export surface
+    for node, module, local in scan.imports:
+        base = local.split(".")[0]
+        if base.startswith("_") or module.startswith("__future__"):
+            continue
+        if base in scan.used_names or base in scan.all_exports:
+            continue
+        add("R6", node.lineno,
+            f"dead import: '{local}' (from '{module}') is never used in "
+            "this module.")
+
+
+def lint_source(source: str, path: str,
+                cfg: Optional[AeriallintConfig] = None) -> List[Finding]:
+    """Lint one file's source text. ``path`` is repo-relative with forward
+    slashes — rules key scope off it. Returns ALL findings, with pragma- and
+    allowlist-suppressed ones carrying status 'disabled'/'allowlisted'
+    (callers gate on status == 'open')."""
+    cfg = cfg or AeriallintConfig()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("R0", path, e.lineno or 1,
+                        f"file does not parse: {e.msg}")]
+    scan = _ModuleScan()
+    scan.visit(tree)
+    lines = source.splitlines()
+    findings: List[Finding] = []
+
+    def add(rule: str, line: int, message: str):
+        snippet = lines[line - 1].strip() if 0 < line <= len(lines) else ""
+        findings.append(Finding(rule, path, line, message, snippet=snippet))
+
+    _r1_layering(tree, scan, path, add)
+    _r2_deprecation(tree, scan, path, add)
+    _r3_determinism(tree, scan, path, add)
+    _r4_r5_traced(tree, scan, path, cfg, add)
+    _r6_dead_imports(tree, scan, path, add)
+
+    # Pragmas: suppress findings on the pragma line or the line below an
+    # own-line pragma; a pragma without a reason is itself a finding.
+    pragmas = _collect_pragmas(source)
+    for pline, (rules, reason) in pragmas.items():
+        if not reason:
+            findings.append(Finding(
+                "R0", path, pline,
+                "aeriallint disable pragma without a reason: write "
+                "'# aeriallint: disable=Rn -- <why this is intentional>'.",
+                snippet=lines[pline - 1].strip()))
+    for f in findings:
+        for pline in (f.line, f.line - 1):
+            pr = pragmas.get(pline)
+            if pr and f.rule in pr[0] and pr[1]:
+                f.status = "disabled"
+                f.reason = pr[1]
+                break
+
+    # Config allowlist (reasonless entries are reported by the lint driver,
+    # which sees the whole config once — not per file).
+    for f in findings:
+        if f.status != "open":
+            continue
+        for e in cfg.allow:
+            if e.rule != f.rule or not e.reason:
+                continue
+            if not fnmatch(f.path, e.path):
+                continue
+            if e.match and e.match not in f.message and \
+                    e.match not in f.snippet:
+                continue
+            f.status = "allowlisted"
+            f.reason = e.reason
+            break
+    return findings

@@ -32,7 +32,8 @@ from repro.api.session import AerialDB
 from repro.core.datastore import (AGG_OPS, AggSpec, LatestResult, QueryInfo,
                                   QueryResult, StoreConfig, make_pred)
 from repro.core.index import QueryPred
+from repro.core.placement import ShardMeta
 
 __all__ = ["AerialDB", "Query", "AggSpec", "AGG_OPS", "QueryPred",
-           "QueryResult", "QueryInfo", "LatestResult", "StoreConfig",
-           "make_pred"]
+           "QueryResult", "QueryInfo", "LatestResult", "ShardMeta",
+           "StoreConfig", "make_pred"]

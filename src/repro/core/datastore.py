@@ -80,9 +80,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing, planner as planner_lib
-from repro.core.index import (IndexState, MatchedShards, QueryPred,
-                              compact_index, init_index, insert_entries,
-                              lookup, retire_entries)
+from repro.core.index import (IndexState, QueryPred, compact_index,
+                              init_index, insert_entries, lookup,
+                              retire_entries)
 from repro.core.placement import ShardMeta, place_replicas
 from repro.core.slicing import SliceConfig, spatial_slice_edges, temporal_slice_edges
 

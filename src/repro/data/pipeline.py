@@ -22,9 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.datastore import (StoreConfig, init_store, insert_step,
-                                  make_pred, query_step)
-from repro.core.placement import ShardMeta
+from repro.api import AerialDB, StoreConfig, make_pred
 from repro.data.synthetic import CityConfig, DroneFleet, make_sites
 
 
@@ -50,16 +48,13 @@ class AerialPipeline:
             n_edges=cfg.n_edges, sites=tuple(map(tuple, sites.tolist())),
             tuple_capacity=1 << 14, index_capacity=2048,
             max_shards_per_query=64, records_per_shard=cfg.records_per_shard)
-        self.state = init_store(self.store_cfg)
-        self.alive = jnp.ones(cfg.n_edges, bool)
+        self.db = AerialDB.open(self.store_cfg, seed=cfg.seed)
         fleet = DroneFleet(cfg.n_drones, records_per_shard=cfg.records_per_shard,
                            seed=cfg.seed + 1)
         self.t_max = 0.0
         for _ in range(cfg.rounds):
             payload, meta = fleet.next_shards()
-            meta = ShardMeta(*[jnp.asarray(x) for x in meta])
-            self.state, _ = insert_step(self.store_cfg, self.state,
-                                        jnp.asarray(payload), meta, self.alive)
+            self.db.insert(payload, meta)
             self.t_max = float(payload[..., 0].max())
 
     def _window_stats(self, step: int, q: int):
@@ -74,8 +69,7 @@ class AerialPipeline:
         pred = make_pred(q=q, lat0=lat0, lat1=lat0 + span, lon0=lon0,
                          lon1=lon0 + span, t0=t0, t1=t0 + 600.0,
                          has_spatial=True, has_temporal=True, is_and=True)
-        result, _ = query_step(self.store_cfg, self.state, pred, self.alive,
-                               jax.random.key(step))
+        result, _ = self.db.query(pred, key=jax.random.key(step))
         return result
 
     def get_batch(self, step: int):

@@ -25,7 +25,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.placement import ShardMeta
+from repro.api import ShardMeta
 
 __all__ = ["plan_chunks", "group_shards"]
 

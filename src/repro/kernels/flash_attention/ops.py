@@ -3,8 +3,6 @@ flash kernel (interpret on CPU, native on TPU)."""
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
 
 

@@ -1,3 +1,5 @@
 """Oracle for the flash attention kernel: naive O(S^2) attention
 (repro.models.attention.naive_attention re-exported for the kernel tests)."""
-from repro.models.attention import naive_attention  # noqa: F401
+from repro.models.attention import naive_attention
+
+__all__ = ["naive_attention"]

@@ -12,9 +12,8 @@ import traceback       # noqa: E402
 from pathlib import Path  # noqa: E402
 
 import jax             # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
-from repro.configs.base import ARCH_MODULES, SHAPES, get_config, list_configs  # noqa: E402
+from repro.configs.base import SHAPES, get_config, list_configs  # noqa: E402
 from repro.launch import hlo_analysis  # noqa: E402
 from repro.launch import inputs as inp  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402

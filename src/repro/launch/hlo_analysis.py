@@ -297,3 +297,57 @@ def analyze(hlo: str):
             "collectives": {**{k: v for k, v in coll.items()},
                             "counts": coll_counts,
                             "total": total, "wire_bytes": wire}}
+
+
+_LAYOUT_RE = re.compile(r"\{[^{}]*\}")
+
+
+def collective_shapes(hlo: str):
+    """Multiset of executed collectives as {(kind, result_type): count},
+    execution-weighted through the call graph (a collective inside an
+    N-trip scan body counts N times). Result types are layout-stripped
+    (``f32[4,384]{1,0}`` -> ``f32[4,384]``), so two modules agree here iff
+    they move identical cross-device tensor sets — the comparison key for
+    the aeriallint tuple-capacity-independence check (ROADMAP: query
+    traffic must not scale with log capacity)."""
+    comps, entry = parse_module(hlo)
+    counts = exec_counts(comps, entry)
+    out = defaultdict(int)
+    for cname, c in comps.items():
+        n = counts.get(cname, 0)
+        if n == 0:
+            continue
+        for ins in c.instrs:
+            base = ins.op.removesuffix("-start")
+            if base in COLLECTIVES and not ins.op.endswith("-done"):
+                out[(base, _LAYOUT_RE.sub("", ins.type_str))] += n
+    return dict(out)
+
+
+def collective_kinds(hlo: str):
+    """The set of collective op kinds the module executes at least once."""
+    return {kind for (kind, _shape), n in collective_shapes(hlo).items()
+            if n > 0}
+
+
+def io_alias_pairs(hlo: str) -> int:
+    """Number of input/output buffer aliases the module declares
+    (``input_output_alias={ {0}: (1, {}, may-alias), ... }`` on the
+    HloModule header). Donated arguments that XLA actually reuses appear
+    here; a donation that fell back to a defensive copy does not — so this
+    is the static witness that ``donate_argnums`` took effect. The block
+    nests braces (``{0}: (0, {}, ...)``), so it is delimited by brace
+    depth, not regex."""
+    start = hlo.find("input_output_alias={")
+    if start < 0:
+        return 0
+    i = start + len("input_output_alias=")
+    depth = 0
+    for j in range(i, len(hlo)):
+        if hlo[j] == "{":
+            depth += 1
+        elif hlo[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return len(re.findall(r"\([^)]*\)", hlo[i:j + 1]))
+    return 0

@@ -15,12 +15,8 @@ Decode caches are O(S) KV (attention archs), O(1) latent (MLA) or O(1) state
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -32,7 +28,7 @@ from repro.models.transformer import (apply_decoder_stack, apply_encdec_stack,
                                       init_encdec_stack, init_hybrid_stack,
                                       init_ssm_stack, spec_decoder_stack,
                                       spec_encdec_stack, spec_hybrid_stack,
-                                      spec_ssm_stack, stack_spec)
+                                      spec_ssm_stack)
 
 STACKS = {
     "dense": (init_decoder_stack, spec_decoder_stack),

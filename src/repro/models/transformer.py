@@ -9,14 +9,11 @@ along a leading L axis; PartitionSpecs gain a leading None.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models import attention, layers, mamba, moe
-from repro.models.layers import FSDP, TP
 
 
 def stack_spec(tree):

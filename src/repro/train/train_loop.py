@@ -12,13 +12,9 @@ scoring) and decode (one token against a populated cache).
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.distributed import sharding as shlib
 from repro.models import attention, moe, transformer

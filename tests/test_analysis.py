@@ -1,0 +1,382 @@
+"""aeriallint (PR 10): the three-layer static-analysis subsystem.
+
+Layer 1 (AST rules): per-rule positive/negative fixtures over synthetic
+sources, the pragma/allowlist reason policy, and the repo self-audit gate
+(zero non-allowlisted findings — the bootstrap contract).
+Layer 2 (jit-retrace budgets): the compile counter catches a weak-hash
+static config, and the canonical facade workload meets its exact budgets
+on the single-device, (4,) and (2, 2) legs with a compile-free warm rerun.
+Layer 3 (HLO collective contract): the verifier proves the compiled
+federated entry points move only contracted, tuple-capacity-independent
+collectives with real donation aliases — and flags an injected contraband
+collective.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import lint as lint_mod
+from repro.analysis.config import AeriallintConfig, AllowEntry, load_config
+from repro.analysis.lint import config_policy_findings, run_lint
+from repro.analysis.retrace import CompileCounter, run_retrace
+from repro.analysis.rules import lint_source
+from repro.analysis import hlo_contract as hc
+from repro.api import StoreConfig
+from repro.launch.hlo_analysis import (collective_shapes, io_alias_pairs)
+
+
+def _rules(src, path, cfg=None, status="open"):
+    return [f.rule for f in lint_source(src, path, cfg)
+            if f.status == status]
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: rule fixtures
+# ---------------------------------------------------------------------------
+
+class TestR1Layering:
+    def test_runtime_importing_facade_flagged(self):
+        src = "from repro.api import AerialDB\n"
+        assert "R1" in _rules(src, "src/repro/core/datastore.py")
+        assert "R1" in _rules(src.replace("repro.api", "repro.chaos"),
+                              "src/repro/distributed/federation.py")
+        assert "R1" in _rules("import repro.ingest.pipeline\n",
+                              "src/repro/kernels/st_scan/ops.py")
+
+    def test_facade_importing_runtime_ok(self):
+        src = "from repro.core.datastore import StoreConfig\nStoreConfig\n"
+        assert _rules(src, "src/repro/api/session.py") == []
+
+    def test_ingest_reaching_runtime_flagged(self):
+        src = "from repro.core.index import QueryPred\nQueryPred\n"
+        assert "R1" in _rules(src, "src/repro/ingest/coalesce.py")
+
+    def test_ingest_over_facade_ok(self):
+        src = "from repro.api import ShardMeta\nShardMeta\n"
+        assert _rules(src, "src/repro/ingest/coalesce.py") == []
+
+    def test_rule_scoped_to_layered_paths(self):
+        # benchmarks may import anything — R1 keys off the file's layer.
+        src = "from repro.api import AerialDB\nAerialDB\n"
+        assert _rules(src, "benchmarks/common.py") == []
+
+
+class TestR2Deprecation:
+    SRC = ("from repro.core.datastore import insert_step\n"
+           "s, i = insert_step(cfg, state, p, m, alive)\n")
+
+    def test_shim_import_and_call_flagged(self):
+        rules = _rules(self.SRC, "src/repro/data/pipeline.py")
+        assert rules.count("R2") == 2   # the import AND the call site
+
+    def test_defining_module_exempt(self):
+        assert _rules("def insert_step(*a):\n    pass\n"
+                      "insert_step()\n", "src/repro/core/datastore.py") == []
+
+    def test_method_call_spelling_flagged(self):
+        assert "R2" in _rules("import repro.core.datastore as ds\n"
+                              "ds.query_step(cfg)\n",
+                              "examples/query_api_tour.py")
+
+
+class TestR3Determinism:
+    def test_wall_clock_in_src_flagged(self):
+        assert "R3" in _rules("import time\nt = time.time()\n",
+                              "src/repro/ingest/pipeline.py")
+        assert "R3" in _rules("import time\ntime.sleep(1)\n",
+                              "src/repro/api/session.py")
+
+    def test_wall_clock_in_benchmarks_ok(self):
+        # benchmarks legitimately time; the clock rule is src/repro-scoped.
+        assert _rules("import time\nt = time.time()\n",
+                      "benchmarks/common.py") == []
+
+    def test_unseeded_np_random_flagged_everywhere(self):
+        src = "import numpy as np\nx = np.random.rand(3)\n"
+        assert "R3" in _rules(src, "benchmarks/fig5_membership.py")
+        assert "R3" in _rules(src, "src/repro/data/synthetic.py")
+
+    def test_seeded_constructs_ok(self):
+        src = ("import numpy as np\n"
+               "rng = np.random.default_rng(0)\n"
+               "ss = np.random.SeedSequence(7)\n")
+        assert _rules(src, "src/repro/chaos/plan.py") == []
+
+    def test_bare_stdlib_random_flagged(self):
+        assert "R3" in _rules("import random\nx = random.random()\n",
+                              "examples/fleet_tour.py")
+
+    def test_jax_random_attribute_not_confused(self):
+        src = ("import jax\nkey = jax.random.key(0)\n"
+               "a, b = jax.random.split(key)\n")
+        assert _rules(src, "src/repro/api/session.py") == []
+
+
+class TestR4HostSync:
+    def test_item_inside_jit_flagged(self):
+        src = ("import jax\n"
+               "@jax.jit\n"
+               "def f(x):\n"
+               "    return x.sum().item()\n")
+        assert "R4" in _rules(src, "src/repro/core/datastore.py")
+
+    def test_np_asarray_inside_traced_arg_flagged(self):
+        src = ("import jax\nimport numpy as np\n"
+               "def body(c, x):\n"
+               "    return c, np.asarray(x)\n"
+               "jax.lax.scan(body, 0, xs)\n")
+        assert "R4" in _rules(src, "src/repro/distributed/federation.py")
+
+    def test_host_side_item_ok(self):
+        src = ("def telemetry(info):\n"
+               "    return info['drops'].item()\n")
+        assert _rules(src, "src/repro/api/session.py") == []
+
+    def test_hot_function_config_traces_plain_def(self):
+        cfg = AeriallintConfig(
+            hot_functions=("src/repro/core/datastore.py::insert_local",))
+        src = ("import numpy as np\n"
+               "def insert_local(cfg, state):\n"
+               "    return np.asarray(state)\n")
+        assert "R4" in _rules(src, "src/repro/core/datastore.py", cfg)
+        # same source, path not matching the hot-function glob -> clean
+        assert _rules(src, "src/repro/core/index.py", cfg) == []
+
+
+class TestR5TracedBranch:
+    def test_branch_on_jnp_flagged(self):
+        src = ("import jax\nimport jax.numpy as jnp\n"
+               "@jax.jit\n"
+               "def f(x):\n"
+               "    if jnp.any(x > 0):\n"
+               "        return x\n"
+               "    return -x\n")
+        assert "R5" in _rules(src, "src/repro/core/planner.py")
+
+    def test_static_config_branch_ok(self):
+        src = ("import jax\n"
+               "@jax.jit\n"
+               "def f(x, use_index=True):\n"
+               "    if use_index:\n"
+               "        return x\n"
+               "    return -x\n")
+        assert _rules(src, "src/repro/core/planner.py") == []
+
+
+class TestR6DeadImports:
+    def test_dead_import_flagged(self):
+        assert "R6" in _rules("import numpy as np\nx = 1\n",
+                              "src/repro/models/model.py")
+
+    def test_future_and_all_exempt(self):
+        src = ("from __future__ import annotations\n"
+               "from repro.models.attention import naive_attention\n"
+               "__all__ = ['naive_attention']\n")
+        assert _rules(src, "src/repro/kernels/flash_attention/ref.py") == []
+
+    def test_init_py_exempt(self):
+        assert _rules("from repro.api.session import AerialDB\n",
+                      "src/repro/api/__init__.py") == []
+
+
+class TestSuppressionPolicy:
+    SRC = "import time\nt = time.time()  # aeriallint: disable=R3{suffix}\n"
+
+    def test_reasoned_pragma_disables(self):
+        out = lint_source(self.SRC.format(suffix=" -- timing telemetry only"),
+                          "src/repro/launch/dryrun.py")
+        assert [f.status for f in out if f.rule == "R3"] == ["disabled"]
+        assert all(f.status != "open" for f in out)
+
+    def test_reasonless_pragma_is_a_finding(self):
+        out = lint_source(self.SRC.format(suffix=""),
+                          "src/repro/launch/dryrun.py")
+        assert {f.rule for f in out if f.status == "open"} == {"R0", "R3"}
+
+    def test_pragma_on_line_above(self):
+        src = ("import time\n"
+               "# aeriallint: disable=R3 -- measured, not stored\n"
+               "t = time.time()\n")
+        out = lint_source(src, "src/repro/launch/dryrun.py")
+        assert [f.status for f in out if f.rule == "R3"] == ["disabled"]
+
+    def test_reasoned_allowlist_entry_applies(self):
+        cfg = AeriallintConfig(allow=(AllowEntry(
+            rule="R3", path="src/repro/launch/*.py", match="time.time",
+            reason="the dry-run reports wall durations"),))
+        out = lint_source("import time\nt = time.time()\n",
+                          "src/repro/launch/dryrun.py", cfg)
+        assert [f.status for f in out if f.rule == "R3"] == ["allowlisted"]
+
+    def test_reasonless_allowlist_entry_ignored_and_reported(self):
+        cfg = AeriallintConfig(allow=(AllowEntry(
+            rule="R3", path="src/repro/launch/*.py", reason=""),))
+        out = lint_source("import time\nt = time.time()\n",
+                          "src/repro/launch/dryrun.py", cfg)
+        assert [f.status for f in out if f.rule == "R3"] == ["open"]
+        assert [f.rule for f in config_policy_findings(cfg)] == ["R0"]
+
+
+class TestRepoSelfAudit:
+    def test_repo_is_clean(self):
+        """The bootstrap gate: zero non-allowlisted findings repo-wide."""
+        report = run_lint()
+        open_f = [f for f in report["findings"] if f["status"] == "open"]
+        assert report["ok"], "\n".join(
+            f"{f['path']}:{f['line']}: {f['rule']}: {f['message']}"
+            for f in open_f)
+
+    def test_every_suppression_has_a_reason(self):
+        report = run_lint()
+        for f in report["findings"]:
+            if f["status"] in ("allowlisted", "disabled"):
+                assert f["reason"].strip(), f
+        for e in load_config().allow:
+            assert e.reason.strip(), e
+
+    def test_cli_json_output(self, tmp_path, capsys):
+        out = tmp_path / "lint.json"
+        rc = lint_mod.main(["--json", "-o", str(out)])
+        assert rc == 0
+        report = json.loads(out.read_text())
+        assert report["tool"] == "aeriallint" and report["ok"]
+        assert json.loads(capsys.readouterr().out)["ok"]
+
+    def test_lint_files_on_tmp_fixture(self, tmp_path):
+        bad = tmp_path / "src" / "repro" / "core" / "bad.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("from repro.api import AerialDB\nAerialDB.open()\n")
+        (tmp_path / "pyproject.toml").write_text("")   # repo-root marker
+        out = lint_mod.lint_files([str(bad)], str(tmp_path),
+                                  AeriallintConfig())
+        assert [f.rule for f in out] == ["R1"]
+        assert out[0].path == "src/repro/core/bad.py"
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: jit-retrace budgets
+# ---------------------------------------------------------------------------
+
+class TestRetraceBudget:
+    def test_counter_catches_weak_config_hash(self):
+        """The regression the harness exists for: a static config whose
+        equal values do NOT hash equal retraces on every call."""
+        @dataclasses.dataclass(frozen=True, eq=False)   # identity hash
+        class WeakCfg:
+            n: int = 3
+
+        @dataclasses.dataclass(frozen=True)             # value hash
+        class StrongCfg:
+            n: int = 3
+
+        def weak_body(cfg, x):
+            return x * cfg.n
+
+        def strong_body(cfg, x):
+            return x * (cfg.n + 1)
+
+        weak = jax.jit(weak_body, static_argnums=0)
+        strong = jax.jit(strong_body, static_argnums=0)
+        x = jnp.arange(5.0)
+        with CompileCounter() as cc:
+            weak(WeakCfg(), x)
+            weak(WeakCfg(), x)        # equal value, different hash: retrace
+            strong(StrongCfg(), x)
+            strong(StrongCfg(), x)    # value-hashed: cache hit
+        assert cc.counts["weak_body"] == 2
+        assert cc.counts["strong_body"] == 1
+
+    def test_store_config_is_value_hashed(self):
+        a = StoreConfig(n_edges=8, tuple_capacity=512)
+        b = StoreConfig(n_edges=8, tuple_capacity=512)
+        assert a is not b and a == b and hash(a) == hash(b)
+
+    def test_canonical_workload_meets_budgets(self):
+        """Exact cold budgets + compile-free warm rerun on the single-device,
+        (4,) and (2, 2) legs (tier-1 gate)."""
+        if jax.device_count() < 4:
+            pytest.skip("needs 4 devices (conftest forces them)")
+        report = run_retrace()
+        assert report["ok"], "\n".join(
+            v["message"] for v in report["violations"])
+        legs = [r["mesh"] for r in report["runs"] if "budgets" in r]
+        assert legs == ["single_device", "mesh(4,)", "mesh(2, 2)"]
+        for r in report["runs"]:
+            if "budgets" in r:
+                # warm rerun compiled NO budgeted entry point
+                assert not set(r["warm"]) & set(r["budgets"]), r
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: HLO collective contract
+# ---------------------------------------------------------------------------
+
+_FAKE_HLO = """\
+HloModule fake, is_scheduled=true
+
+ENTRY %main.1 (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8]{0} parameter(0)
+  %ag = f32[8]{0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %a2a = f32[8]{0} all-to-all(%ag), replica_groups={{0,1,2,3}}
+}
+"""
+
+
+class TestHloVerifier:
+    def test_injected_contraband_collective_flagged(self):
+        v = hc.check_collective_contract(
+            _FAKE_HLO, {"all-gather", "all-reduce"}, "fake")
+        assert [x["kind"] for x in v] == ["all-to-all"]
+        # and the contracted kind passes untouched
+        assert hc.check_collective_contract(
+            _FAKE_HLO, {"all-gather", "all-to-all"}, "fake") == []
+
+    def test_exact_count_enforced(self):
+        v = hc.check_collective_contract(
+            _FAKE_HLO, {"all-gather", "all-to-all"}, "fake",
+            exact_counts={"all-gather": 2})
+        assert [x["check"] for x in v] == ["counts"]
+
+    def test_capacity_dependence_flagged(self):
+        a = {("all-gather", "f32[8]"): 1}
+        b = {("all-gather", "f32[16]"): 1}
+        assert hc.check_capacity_independence(a, dict(a), "x", (384, 1024)) \
+            == []
+        v = hc.check_capacity_independence(a, b, "x", (384, 1024))
+        assert [x["check"] for x in v] == ["capacity"]
+
+    def test_io_alias_parser(self):
+        hdr = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+               "{1}: (2, {}, must-alias) }, entry_computation_layout=...")
+        assert io_alias_pairs(hdr) == 2
+        assert io_alias_pairs(_FAKE_HLO) == 0
+        assert hc.check_donation(hdr, 2, "x") == []
+        assert [v["check"] for v in hc.check_donation(hdr, 16, "x")] \
+            == ["donation"]
+
+    def test_collective_shapes_strips_layout(self):
+        shapes = collective_shapes(_FAKE_HLO)
+        assert shapes == {("all-gather", "f32[8]"): 1,
+                          ("all-to-all", "f32[8]"): 1}
+
+    def test_federated_entry_points_meet_contract(self):
+        """Lower insert/ingest/query on (4,) and (2, 2); only contracted,
+        capacity-independent collectives; >= 16 donated aliases (tier-1
+        gate)."""
+        if jax.device_count() < 4:
+            pytest.skip("needs 4 devices (conftest forces them)")
+        report = hc.run_hlo_contract()
+        assert report["ok"], "\n".join(
+            v["message"] for v in report["violations"])
+        assert [r["mesh"] for r in report["runs"]] \
+            == ["mesh(4,)", "mesh(2, 2)"]
+        for r in report["runs"]:
+            assert r["ingest_io_aliases"] >= 16
+            # query moves metadata only: no f32 log-sized tensors beyond the
+            # (Q,1)/(Q) aggregate all-reduces and planner candidate sets.
+            assert all(k.startswith(("all-gather", "all-reduce"))
+                       for k in r["collectives"]["query"])
